@@ -1,0 +1,24 @@
+"""Fig. 11 — alphabet-size sensitivity (DNA 4 / protein 20 / english 26)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.api import BuildReport, EraConfig, EraIndexer
+from repro.core.prepare import PrepareStats
+from repro.core.vertical import VerticalStats
+from repro.data.strings import dataset
+
+
+def run(n=12_000, quick=False):
+    for name, r in (("dna", 256), ("protein", 2048), ("english", 2048)):
+        s, alpha = dataset(name, n, seed=12)
+        cfg = EraConfig(memory_bytes=8_192, r_bytes=r, build_impl="none")
+        rep = BuildReport(VerticalStats(), PrepareStats())
+        t = timeit(lambda: EraIndexer(alpha, cfg).build(s, rep))
+        emit(f"fig11/{name}", t,
+             f"sigma={len(alpha.symbols)};groups={rep.n_groups};"
+             f"iters={rep.prepare.iterations}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Fig. 10 — ERA vs WaveFront-style vs suffix-array-based (B²ST-style).
+
+All three implemented in this repo on identical substrate:
+* ERA            — elastic range + virtual trees (the paper);
+* WaveFront-like — static range 1, no grouping, 50/50 memory split
+                   (its documented best setting halves the tree budget);
+* SA-based       — prefix-doubling suffix array + Kasai LCP + batch build
+                   (B²ST's sort-then-build flavor, in-memory variant).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import ref
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.branch_edge import StrStats, wavefront_build
+from repro.core.build import build_numpy
+from repro.core.vertical import vertical_partition
+from repro.data.strings import dataset
+
+
+def _era(s, alpha, mem):
+    EraIndexer(alpha, EraConfig(memory_bytes=mem, r_bytes=max(256, mem // 64))).build(s)
+
+
+def _wavefront(s, alpha, mem):
+    # 50% of memory to buffers -> half the sub-tree budget (paper §3)
+    f_max = max(2, int(0.5 * mem) // 32)
+    parts = vertical_partition(s, alpha.base, f_max)
+    st = StrStats()
+    for p in parts:
+        wavefront_build(s, p.positions, p.length, st)
+
+
+def _sa_based(s, alpha, mem):
+    sa = ref.suffix_array(s)
+    lcp = ref.lcp_array(s, sa)
+    b = lcp.astype(np.int32)
+    b[0] = 0
+    build_numpy(sa.astype(np.int32), b, len(s))
+
+
+def run(sizes=(4_000, 16_000), mems=(2_048, 8_192), quick=False):
+    if quick:
+        sizes, mems = sizes[:1], mems[:1]
+    for n in sizes:
+        s, alpha = dataset("dna", n, seed=11)
+        times = {}
+        for name, fn in (("era", _era), ("wavefront", _wavefront), ("sa-b2st", _sa_based)):
+            t = timeit(lambda fn=fn: fn(s, alpha, mems[-1]),
+                       warmup=1 if name == "era" else 0)  # exclude jit compile
+            times[name] = t
+            emit(f"fig10b/{name}/n={n}", t, "")
+        emit(f"fig10b/era-speedup/n={n}", times["era"],
+             f"vs_wavefront={times['wavefront'] / max(times['era'], 1e-9):.2f}x;"
+             f"vs_sa={times['sa-b2st'] / max(times['era'], 1e-9):.2f}x")
+    s, alpha = dataset("dna", sizes[-1], seed=11)
+    for mem in mems:
+        for name, fn in (("era", _era), ("wavefront", _wavefront)):
+            t = timeit(lambda fn=fn: fn(s, alpha, mem),
+                       warmup=1 if name == "era" else 0)
+            emit(f"fig10a/{name}/mem={mem}", t, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 9(b) — elastic range vs static ranges 16 and 32.
+
+Metrics: wall time, total iterations (= string scans per unit) and
+fetched symbols (the gather-traffic analogue of the paper's I/O)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.api import BuildReport, EraConfig, EraIndexer
+from repro.core.prepare import PrepareStats
+from repro.core.vertical import VerticalStats
+from repro.data.strings import dataset, synthetic_string
+from repro.core.alphabet import DNA
+
+
+def run(n=16_000, quick=False):
+    # repeat-heavy string: deep paths stress the range policy (paper: gain
+    # grows with string length / repeat structure)
+    s = synthetic_string(DNA, n, seed=10, repeat_fraction=0.5, repeat_len=96)
+    variants = [("elastic", True, 0), ("static-16", False, 16), ("static-32", False, 32)]
+    results = {}
+    for name, elastic, w in variants:
+        cfg = EraConfig(memory_bytes=8_192, r_bytes=512, elastic=elastic,
+                        static_w=w, build_impl="none")
+        rep = BuildReport(VerticalStats(), PrepareStats())
+        t = timeit(lambda: EraIndexer(DNA, cfg).build(s, rep), warmup=1)
+        results[name] = t
+        emit(f"fig9b/{name}", t,
+             f"iters={rep.prepare.iterations};fetched={rep.prepare.symbols_fetched}")
+    if "elastic" in results:
+        for other in ("static-16", "static-32"):
+            emit(f"fig9b/elastic-vs-{other}", results[other],
+                 f"elastic_speedup={results[other] / max(results['elastic'], 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Fig. 7 — horizontal partitioning: ERA-str vs ERA-str+mem.
+
+(a) construction time vs string size at fixed memory;
+(b) construction time vs memory at fixed string size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.alphabet import DNA
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.branch_edge import StrStats, compute_suffix_subtree
+from repro.core.vertical import vertical_partition
+from repro.data.strings import dataset
+
+
+def _era_str(s, f_max: int):
+    parts = vertical_partition(s, DNA.base, f_max)
+    for p in parts:
+        compute_suffix_subtree(s, p.positions, p.length, StrStats())
+
+
+def _era_str_mem(s, f_max: int):
+    cfg = EraConfig(memory_bytes=f_max * 32, r_bytes=4096, build_impl="numpy")
+    EraIndexer(DNA, cfg).build(s)
+
+
+def run(sizes=(2_000, 8_000, 32_000), mems=(64, 256, 1024), quick=False):
+    if quick:
+        sizes, mems = sizes[:2], mems[:2]
+    for n in sizes:
+        s, _ = dataset("dna", n, seed=7)
+        t1 = timeit(lambda: _era_str(s, 256))
+        t2 = timeit(lambda: _era_str_mem(s, 256), warmup=1)  # exclude jit compile
+        emit(f"fig7a/era-str/n={n}", t1, f"n={n}")
+        emit(f"fig7a/era-str+mem/n={n}", t2, f"speedup={t1 / max(t2, 1e-9):.2f}x")
+    s, _ = dataset("dna", sizes[-1], seed=7)
+    for fm in mems:
+        t1 = timeit(lambda: _era_str(s, fm))
+        t2 = timeit(lambda: _era_str_mem(s, fm), warmup=1)
+        emit(f"fig7b/era-str/fmax={fm}", t1, "")
+        emit(f"fig7b/era-str+mem/fmax={fm}", t2,
+             f"speedup={t1 / max(t2, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""§Roofline — emit the dry-run roofline table as CSV rows.
+
+Reads experiments/dryrun.json (produced by repro.launch.dryrun); prints
+one row per (arch × shape × mesh) with the three terms and bottleneck.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_JSON = os.environ.get("REPRO_DRYRUN_JSON", "experiments/dryrun.json")
+
+
+def run(quick=False):
+    if not os.path.exists(DRYRUN_JSON):
+        emit("roofline/missing", 0.0, f"run repro.launch.dryrun first ({DRYRUN_JSON})")
+        return
+    with open(DRYRUN_JSON) as f:
+        recs = json.load(f)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] != "ok":
+            emit(name, 0.0, r["status"])
+            continue
+        t = r["roofline"]
+        emit(name, t["step_time_s"] * 1e0 if "step_time_s" in t else
+             max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"]),
+             f"bottleneck={t['bottleneck']};tc={t['t_compute_s']:.4g};"
+             f"tm={t['t_memory_s']:.4g};tx={t['t_collective_s']:.4g};"
+             f"useful={t['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Fig. 8 — tuning |R|: small alphabets want small R, large want large."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.api import EraConfig, EraIndexer
+from repro.data.strings import dataset
+
+
+def run(n=16_000, r_sizes=(64, 256, 1024, 4096), quick=False):
+    if quick:
+        r_sizes = r_sizes[:3]
+    for name in ("dna", "protein"):
+        s, alpha = dataset(name, n, seed=8)
+        for r in r_sizes:
+            cfg = EraConfig(memory_bytes=16_384, r_bytes=r, build_impl="none")
+            t = timeit(lambda: EraIndexer(alpha, cfg).build(s))
+            emit(f"fig8/{name}/R={r}", t, f"r_bytes={r}")
+
+
+if __name__ == "__main__":
+    run()

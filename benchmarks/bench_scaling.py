@@ -1,0 +1,53 @@
+"""Table 3 + Figs. 12/13 — strong/weak scaling of the parallel build.
+
+This container has one core, so speedup is measured the way the paper's
+Table 3 measures load balance: per-worker busy time from the scheduler.
+strong speedup(k) = serial_time / max_worker_busy_time(k) — exact for the
+shared-nothing model (workers independent, no merge phase), optimistic
+only about network interference which the paper also excludes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.api import EraConfig, EraIndexer
+from repro.data.strings import dataset
+from repro.launch.era_run import build_distributed
+
+
+def run(n=24_000, workers=(1, 2, 4, 8), quick=False):
+    if quick:
+        workers = workers[:3]
+    s, alpha = dataset("dna", n, seed=13)
+    cfg = EraConfig(memory_bytes=4_096, r_bytes=512, build_impl="none")
+
+    # warm the jit caches so worker busy-times measure steady-state work
+    build_distributed(s, alpha, cfg, n_workers=1)
+
+    serial = None
+    for k in workers:
+        _, qstats, per_worker = build_distributed(s, alpha, cfg, n_workers=k)
+        busy = [w.seconds for w in per_worker]
+        t_parallel = max(busy) if busy else 0.0
+        total = sum(busy)
+        if k == 1:
+            serial = total
+        speedup = serial / max(t_parallel, 1e-9)
+        emit(f"table3/strong/k={k}", t_parallel,
+             f"speedup={speedup:.2f};efficiency={speedup / k:.2f};"
+             f"groups={qstats['total']}")
+
+    # weak scaling: n grows with k (paper Fig. 13)
+    base = 4_000
+    for k in workers:
+        s_k, _ = dataset("dna", base * k, seed=14)
+        _, qstats, per_worker = build_distributed(s_k, alpha, cfg, n_workers=k)
+        t_parallel = max((w.seconds for w in per_worker), default=0.0)
+        emit(f"fig13/weak/k={k}", t_parallel,
+             f"n={base * k};groups={qstats['total']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig. 9(a) — effect of virtual trees (grouping) on time and modeled I/O."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.api import BuildReport, EraConfig, EraIndexer
+from repro.core.iomodel import amortization_factor
+from repro.core.prepare import PrepareStats
+from repro.core.vertical import VerticalStats
+from repro.data.strings import dataset
+
+
+def run(n=16_000, quick=False):
+    s, alpha = dataset("dna", n, seed=9)
+    for group in (True, False):
+        cfg = EraConfig(memory_bytes=8_192, r_bytes=1024, group=group,
+                        build_impl="none")
+        rep = BuildReport(VerticalStats(), PrepareStats())
+        t = timeit(lambda: EraIndexer(alpha, cfg).build(s, rep))
+        scans = rep.prepare.iterations  # each iteration = one string pass/unit
+        amort = amortization_factor(rep.n_prefixes, rep.n_groups)
+        emit(f"fig9a/{'virtual-trees' if group else 'no-grouping'}", t,
+             f"units={rep.n_groups};prefixes={rep.n_prefixes};"
+             f"amortization={amort:.1f}x;prepare_iters={scans}")
+
+
+if __name__ == "__main__":
+    run()

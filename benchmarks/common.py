@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived carries
+the figure-specific metric: modeled I/O bytes, iterations, speedup, …).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, repeats: int = 1, warmup: int = 0):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,65 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  fig7   bench_horizontal   ERA-str vs ERA-str+mem
+  fig8   bench_rtuning      |R| read-buffer tuning (DNA vs protein)
+  fig9a  bench_vertical     virtual trees on/off
+  fig9b  bench_elastic      elastic vs static range
+  fig10  bench_baselines    ERA vs WaveFront-style vs SA-based (B²ST-style)
+  fig11  bench_alphabet     alphabet sensitivity
+  tbl3   bench_scaling      strong/weak scaling (scheduler busy-time model)
+  roofl  bench_roofline     dry-run roofline table (reads experiments/dryrun.json)
+
+``python -m benchmarks.run``            — quick pass over everything
+``python -m benchmarks.run --full``     — paper-scale (slower) settings
+``python -m benchmarks.run --only fig9b``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        bench_alphabet,
+        bench_baselines,
+        bench_elastic,
+        bench_horizontal,
+        bench_roofline,
+        bench_rtuning,
+        bench_scaling,
+        bench_vertical,
+    )
+
+    suites = {
+        "fig7": bench_horizontal.run,
+        "fig8": bench_rtuning.run,
+        "fig9a": bench_vertical.run,
+        "fig9b": bench_elastic.run,
+        "fig10": bench_baselines.run,
+        "fig11": bench_alphabet.run,
+        "tbl3": bench_scaling.run,
+        "roofline": bench_roofline.run,
+    }
+    print("name,us_per_call,derived")
+    for key, fn in suites.items():
+        if args.only and key != args.only:
+            continue
+        try:
+            fn(quick=quick)
+        except TypeError:
+            fn()
+        except Exception as e:  # report, keep the suite going
+            print(f"{key}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""ERA inside the LM data path: exact-substring dedup of a token stream.
+
+The generalized suffix tree over a token batch finds long exact repeats in
+one pass — the indexing engine applied to training-data hygiene.
+
+    PYTHONPATH=src python examples/corpus_index.py
+"""
+
+import numpy as np
+
+from repro.data.tokens import TokenPipelineConfig, batch_at_step, dedup_mask
+
+
+def main():
+    cfg = TokenPipelineConfig(vocab=32_000, batch=16, seq_len=256, seed=0)
+    batch = batch_at_step(cfg, 0)
+    seqs = batch["tokens"].copy()
+
+    # plant contamination: three sequences share a 128-token block
+    seqs[5, 50:178] = seqs[2, 50:178]
+    seqs[11, 0:128] = seqs[2, 50:178]
+
+    keep = dedup_mask(seqs, min_repeat=64)
+    flagged = np.nonzero(~keep)[0].tolist()
+    print(f"batch of {len(seqs)}: flagged duplicates at rows {flagged}")
+    assert len(flagged) >= 1
+    print(f"kept {int(keep.sum())}/{len(seqs)} sequences")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Distributed ERA construction with fault tolerance — the paper's
+shared-nothing architecture (§5) plus the production machinery:
+work-queue scheduling, node-failure recovery, per-group checkpointing.
+
+    PYTHONPATH=src python examples/distributed_build.py
+"""
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.api import EraConfig, EraIndexer
+from repro.data.strings import dataset
+from repro.launch.era_run import build_distributed
+
+
+def main():
+    s, alphabet = dataset("dna", 300_000, seed=4)
+    cfg = EraConfig(memory_bytes=128 << 10, r_bytes=16 << 10, build_impl="none")
+
+    # serial reference
+    t0 = time.perf_counter()
+    serial = EraIndexer(alphabet, cfg).build(s)
+    t_serial = time.perf_counter() - t0
+    print(f"serial build: {t_serial:.1f}s, {len(serial.subtrees)} sub-trees")
+
+    # distributed, 4 workers, with per-group checkpointing
+    ck = os.path.join(tempfile.mkdtemp(), "groups.jsonl")
+    t0 = time.perf_counter()
+    idx, qstats, workers = build_distributed(
+        s, alphabet, cfg, n_workers=4, checkpoint_path=ck)
+    t_dist = time.perf_counter() - t0
+    busy = max(w.seconds for w in workers)
+    print(f"\n4 workers: wall {t_dist:.1f}s, max-busy {busy:.1f}s "
+          f"(modeled speedup {sum(w.seconds for w in workers) / busy:.2f}x)")
+    for w in workers:
+        print(f"  {w.worker}: {w.groups} groups, {w.seconds:.2f}s busy")
+
+    # node failure mid-build: w1 dies after its first group
+    t0 = time.perf_counter()
+    idx2, qstats2, _ = build_distributed(
+        s, alphabet, cfg, n_workers=4, fail_worker="w1", fail_after=1)
+    print(f"\nwith node failure: all {qstats2['done']} groups still completed "
+          f"({qstats2['reattempts']} re-dispatches) in "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    # results identical in all three runs
+    for p in serial.subtrees:
+        assert np.array_equal(serial.subtrees[p].ell, idx.subtrees[p].ell)
+        assert np.array_equal(serial.subtrees[p].ell, idx2.subtrees[p].ell)
+    print("\nall three builds produced identical indexes ✓")
+
+
+if __name__ == "__main__":
+    main()

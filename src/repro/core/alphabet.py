@@ -1,0 +1,84 @@
+"""Alphabet handling for ERA suffix-tree construction.
+
+Symbols are encoded as small integer codes ``0..|Σ|-1``; the end-of-string
+terminal ``$`` is always the LARGEST code ``|Σ|`` so that it sorts after
+every real symbol — this matches the paper's traces (Example 2 sorts
+``CGGT`` before ``C$`` and emits ``B = (G, $, 3)``).  Out-of-range gathers
+read padding equal to the terminal code, which behaves like a run of
+terminals: any two distinct suffixes diverge at or before the earlier
+``$`` (the terminal is unique), so padding never affects a comparison that
+matters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+TERMINAL = "$"
+
+
+@dataclasses.dataclass(frozen=True)
+class Alphabet:
+    """A finite symbol set plus the implicit terminal ``$`` (largest code)."""
+
+    name: str
+    symbols: str  # real symbols, codes 0..len(symbols)-1
+
+    @property
+    def terminal_code(self) -> int:
+        return len(self.symbols)
+
+    @property
+    def base(self) -> int:
+        """Radix for integer k-mer codes (``|Σ| + 1`` including ``$``)."""
+        return len(self.symbols) + 1
+
+    @property
+    def bits_per_symbol(self) -> int:
+        return max(1, int(np.ceil(np.log2(self.base))))
+
+    def char_of(self, code: int) -> str:
+        if code == self.terminal_code:
+            return TERMINAL
+        return self.symbols[code]
+
+    def encode(self, text: str, *, terminate: bool = True) -> np.ndarray:
+        """Encode ``text`` to uint8 codes, appending the terminal."""
+        lut = np.full(256, 255, dtype=np.uint8)
+        for i, ch in enumerate(self.symbols):
+            lut[ord(ch)] = i
+        arr = lut[np.frombuffer(text.encode("latin-1"), dtype=np.uint8)]
+        if (arr == 255).any():
+            bad = sorted({text[i] for i in np.nonzero(arr == 255)[0][:8]})
+            raise ValueError(f"symbols {bad!r} not in alphabet {self.name!r}")
+        if terminate:
+            arr = np.concatenate([arr, np.array([self.terminal_code], np.uint8)])
+        return arr
+
+    def decode(self, codes: np.ndarray) -> str:
+        return "".join(self.char_of(int(c)) for c in codes)
+
+    def random_string(self, n: int, seed: int = 0) -> np.ndarray:
+        """Random terminated string of ``n`` real symbols (n+1 codes)."""
+        rng = np.random.default_rng(seed)
+        arr = rng.integers(0, len(self.symbols), size=n, dtype=np.uint8)
+        return np.concatenate([arr, np.array([self.terminal_code], np.uint8)])
+
+    def pad_string(self, codes: np.ndarray, extra: int, pad_to_multiple: int = 1) -> np.ndarray:
+        """Terminal-pad so gathers up to ``extra`` past the end are safe."""
+        n = len(codes)
+        target = n + extra
+        if pad_to_multiple > 1:
+            target = -(-target // pad_to_multiple) * pad_to_multiple
+        out = np.full(target, self.terminal_code, dtype=np.uint8)
+        out[:n] = codes
+        return out
+
+
+DNA = Alphabet("dna", "ACGT")
+PROTEIN = Alphabet("protein", "ACDEFGHIKLMNPQRSTVWY")
+ENGLISH = Alphabet("english", "abcdefghijklmnopqrstuvwxyz")
+
+ALPHABETS = {a.name: a for a in (DNA, PROTEIN, ENGLISH)}

@@ -1,0 +1,164 @@
+"""EraIndexer — the end-to-end serial ERA pipeline (paper §4).
+
+vertical partitioning → grouping → per-group elastic-range SubTreePrepare →
+BuildSubTree → assembled :class:`SuffixTreeIndex`.
+
+The parallel drivers (shared-memory / shared-nothing analogues) live in
+:mod:`repro.launch.era_run`; they reuse exactly these stages, distributing
+groups over devices/workers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build as build_mod
+from repro.core.alphabet import Alphabet
+from repro.core.prepare import (
+    ElasticConfig,
+    PrepareStats,
+    segments_of,
+    subtree_prepare,
+)
+from repro.core.suffix_tree import SubTree, SuffixTreeIndex
+from repro.core.vertical import VerticalStats, vertical_partition_grouped
+
+NODE_BYTES = 16  # sizeof(tree_node): parent + depth + witness + pad (SoA)
+
+
+@dataclasses.dataclass(frozen=True)
+class EraConfig:
+    """Memory-budget and strategy knobs (paper §4.4 memory allocation)."""
+
+    memory_bytes: int = 64 << 20   # total budget; 60% to the sub-tree (MTS)
+    r_bytes: int = 1 << 20         # |R| read buffer (32MB DNA / 256MB protein in paper)
+    w_min: int = 4
+    w_max: int = 256
+    elastic: bool = True
+    static_w: int = 16             # used when elastic=False (Fig. 9b ablation)
+    group: bool = True             # virtual trees on/off (Fig. 9a ablation)
+    vertical_strategy: str = "histogram"  # or "positions" (beyond-paper)
+    build_impl: str = "numpy"      # numpy | scan | parallel | none
+
+    @property
+    def mts_bytes(self) -> int:
+        return int(0.6 * self.memory_bytes)
+
+    @property
+    def f_max(self) -> int:
+        """Eq. 1: F_M = MTS / (2 * sizeof(tree_node))."""
+        return max(2, self.mts_bytes // (2 * NODE_BYTES))
+
+    @property
+    def r_symbols(self) -> int:
+        return self.r_bytes  # 1 byte per symbol code in this implementation
+
+
+@dataclasses.dataclass
+class BuildReport:
+    vertical: VerticalStats
+    prepare: PrepareStats
+    n_prefixes: int = 0
+    n_groups: int = 0
+    f_max: int = 0
+    t_vertical: float = 0.0
+    t_prepare: float = 0.0
+    t_build: float = 0.0
+
+    @property
+    def t_total(self) -> float:
+        return self.t_vertical + self.t_prepare + self.t_build
+
+
+_BUILDERS = {
+    "numpy": lambda ell, b, n: build_mod.build_numpy(np.asarray(ell), np.asarray(b), n),
+    "scan": lambda ell, b, n: build_mod.build_scan(jnp.asarray(ell), jnp.asarray(b), n),
+    "parallel": lambda ell, b, n: build_mod.build_parallel(jnp.asarray(ell), jnp.asarray(b), n),
+}
+
+
+class EraIndexer:
+    def __init__(self, alphabet: Alphabet, config: EraConfig = EraConfig()):
+        self.alphabet = alphabet
+        self.config = config
+
+    def partition(self, s: np.ndarray, report: BuildReport | None = None):
+        """Vertical partitioning + grouping (the master-node phase)."""
+        cfg = self.config
+        vstats = report.vertical if report else VerticalStats()
+        t0 = time.perf_counter()
+        groups = vertical_partition_grouped(
+            s,
+            base=self.alphabet.base,
+            f_max=cfg.f_max,
+            strategy=cfg.vertical_strategy,
+            group=cfg.group,
+            stats=vstats,
+        )
+        if report:
+            report.t_vertical = time.perf_counter() - t0
+            report.n_groups = len(groups)
+            report.n_prefixes = sum(len(g.prefixes) for g in groups)
+            report.f_max = cfg.f_max
+        return groups
+
+    def process_group(self, s_padded, group, capacity: int,
+                      pstats: PrepareStats | None = None) -> list[SubTree]:
+        """SubTreePrepare + BuildSubTree for one virtual tree (worker unit)."""
+        cfg = self.config
+        ecfg = ElasticConfig(
+            r_budget_symbols=cfg.r_symbols,
+            w_min=cfg.w_min,
+            w_max=cfg.w_max,
+            elastic=cfg.elastic,
+            static_w=cfg.static_w,
+        )
+        state = subtree_prepare(s_padded, group, capacity, ecfg, pstats)
+        ell = np.asarray(state.L)
+        b_off = np.asarray(state.b_off)
+        b_c1 = np.asarray(state.b_c1)
+        b_c2 = np.asarray(state.b_c2)
+        out = []
+        n_total = None
+        for (off, f), p in zip(segments_of(group), group.prefixes):
+            seg_b = b_off[off : off + f].copy()
+            seg_b[0] = 0
+            st = SubTree(
+                prefix=p.symbols,
+                ell=ell[off : off + f].copy(),
+                b_off=seg_b,
+                b_c1=b_c1[off : off + f].copy(),
+                b_c2=b_c2[off : off + f].copy(),
+            )
+            out.append(st)
+        return out
+
+    def build(self, s: np.ndarray, report: BuildReport | None = None) -> SuffixTreeIndex:
+        cfg = self.config
+        report = report if report is not None else BuildReport(VerticalStats(), PrepareStats())
+        groups = self.partition(s, report)
+
+        capacity = min(cfg.f_max, max((g.total_freq for g in groups), default=2))
+        # pad so gathers past the end stay in-bounds (terminal padding)
+        s_padded = jnp.asarray(self.alphabet.pad_string(s, extra=2 * cfg.w_max + 8))
+
+        t0 = time.perf_counter()
+        subtrees: dict[tuple, SubTree] = {}
+        for g in groups:
+            for st in self.process_group(s_padded, g, capacity, report.prepare):
+                subtrees[st.prefix] = st
+        report.t_prepare = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        if cfg.build_impl != "none":
+            builder = _BUILDERS[cfg.build_impl]
+            n_total = len(s)
+            for st in subtrees.values():
+                st.nodes = builder(st.ell.astype(np.int32), st.b_off.astype(np.int32), n_total)
+        report.t_build = time.perf_counter() - t0
+
+        return SuffixTreeIndex(s=np.asarray(s), alphabet=self.alphabet, subtrees=subtrees)

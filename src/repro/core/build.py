@@ -1,0 +1,354 @@
+"""BuildSubTree (paper §4.2.2) — from (L, B) to the suffix sub-tree.
+
+Node layout is structure-of-arrays (TPU/cache friendly, replacing the
+paper's pointer nodes):
+
+* ``parent[v]``     — parent node id (-1 for the sub-tree root)
+* ``depth[v]``      — string depth (symbols from the global root to ``v``)
+* ``witness[v]``    — a leaf position under ``v``; the edge label of
+                      ``(parent[v], v)`` is ``S[witness+depth[parent]] ..
+                      S[witness+depth[v]-1]``, so edges cost two ints as in
+                      the paper (§2, O(n) representation).
+
+Node ids: leaves are ``0..F-1`` in lexicographic order (= positions in
+``L``); internal nodes are allocated from ``F`` upward; there are at most
+``F`` internal nodes (paper §4.1: #internal == #leaves for the binary-ish
+worst case, never more).
+
+Three implementations, all checked against ``ref.tree_intervals``:
+
+* ``build_numpy``    — paper Alg. BuildSubTree verbatim (sequential stack);
+* ``build_scan``     — same algorithm as a ``jax.lax.scan`` with an explicit
+                       fixed-depth stack (proves jax-expressibility; the
+                       inner pop loop is a ``lax.while_loop``);
+* ``build_parallel`` — beyond-paper: the internal nodes of the sub-tree are
+                       exactly the Cartesian-tree nodes of ``B_off``; parent
+                       links follow from all-nearest-smaller-values, which we
+                       compute with a sparse-table + vectorized binary
+                       search in O(F log F) fully parallel work.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SubTreeNodes(NamedTuple):
+    parent: np.ndarray | jax.Array  # int32[2F] (slot F+F-1 may be unused)
+    depth: np.ndarray | jax.Array   # int32[2F]
+    witness: np.ndarray | jax.Array  # int32[2F]
+    n_nodes: int | jax.Array        # total valid nodes (leaves + internal)
+    n_leaves: int | jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Faithful sequential builder (numpy, host) — Alg. BuildSubTree
+# ---------------------------------------------------------------------------
+
+def build_numpy(ell: np.ndarray, b_off: np.ndarray, n_total: int) -> SubTreeNodes:
+    """``ell``: int leaf positions (lex order); ``b_off[i]``: divergence depth
+    of leaves i-1, i (b_off[0] unused); ``n_total``: len(S) incl. terminal."""
+    f = len(ell)
+    cap = 2 * max(f, 1)
+    parent = np.full(cap, -1, dtype=np.int32)
+    depth = np.zeros(cap, dtype=np.int32)
+    witness = np.full(cap, -1, dtype=np.int32)
+
+    root = f  # internal ids from f; root is the first internal node
+    n_internal = 1
+    depth[root] = 0
+    witness[root] = int(ell[0]) if f else -1
+
+    if f == 0:
+        return SubTreeNodes(parent, depth, witness, 1, 0)
+
+    # push leaf 0
+    parent[0] = root
+    depth[0] = n_total - int(ell[0])
+    witness[0] = int(ell[0])
+    stack = [root, 0]  # path of node ids, root at bottom
+
+    for i in range(1, f):
+        off = int(b_off[i])
+        # pop while the stack-top *edge* is deeper than off
+        last = -1
+        while depth[stack[-1]] > off:
+            last = stack.pop()
+        top = stack[-1]
+        if depth[top] == off:
+            u = top
+        else:
+            # break edge (top -> last) at depth off
+            t = f + n_internal
+            n_internal += 1
+            parent[t] = top
+            depth[t] = off
+            witness[t] = witness[last]
+            parent[last] = t
+            stack.append(t)
+            u = t
+        # new leaf i
+        parent[i] = u
+        depth[i] = n_total - int(ell[i])
+        witness[i] = int(ell[i])
+        stack.append(i)
+
+    return SubTreeNodes(parent, depth, witness, f + n_internal, f)
+
+
+# ---------------------------------------------------------------------------
+# Faithful builder as a lax.scan (explicit fixed-depth stack)
+# ---------------------------------------------------------------------------
+
+def build_scan(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNodes:
+    f = ell.shape[0]
+    cap = 2 * f
+    root = f
+
+    parent0 = jnp.full(cap, -1, jnp.int32).at[0].set(root)
+    depth0 = jnp.zeros(cap, jnp.int32).at[0].set(n_total - ell[0])
+    witness0 = jnp.full(cap, -1, jnp.int32).at[root].set(ell[0]).at[0].set(ell[0])
+
+    stack0 = jnp.full(f + 2, -1, jnp.int32).at[0].set(root).at[1].set(0)
+
+    def step(carry, i):
+        parent, depth, witness, stack, sp, n_int = carry
+        off = b_off[i]
+
+        def pop_cond(c):
+            _last, sp_ = c
+            return depth[stack[sp_]] > off
+
+        def pop_body(c):
+            _last, sp_ = c
+            return stack[sp_], sp_ - 1
+
+        last, sp = jax.lax.while_loop(pop_cond, pop_body, (jnp.int32(-1), sp))
+        top = stack[sp]
+        need_break = depth[top] != off
+        t = f + n_int  # candidate new internal id
+
+        u = jnp.where(need_break, t, top)
+        parent = parent.at[t].set(jnp.where(need_break, top, parent[t]))
+        depth = depth.at[t].set(jnp.where(need_break, off, depth[t]))
+        witness = witness.at[t].set(jnp.where(need_break, witness[last], witness[t]))
+        parent = parent.at[last].set(jnp.where(need_break, t, parent[last]))
+        sp = jnp.where(need_break, sp + 1, sp)
+        stack = stack.at[sp].set(jnp.where(need_break, t, stack[sp]))
+        n_int = n_int + need_break.astype(jnp.int32)
+
+        # new leaf i
+        parent = parent.at[i].set(u)
+        depth = depth.at[i].set(n_total - ell[i])
+        witness = witness.at[i].set(ell[i])
+        sp = sp + 1
+        stack = stack.at[sp].set(i)
+        return (parent, depth, witness, stack, sp, n_int), None
+
+    carry0 = (parent0, depth0, witness0, stack0, jnp.int32(1), jnp.int32(1))
+    (parent, depth, witness, _, _, n_int), _ = jax.lax.scan(
+        step, carry0, jnp.arange(1, f, dtype=jnp.int32)
+    )
+    return SubTreeNodes(parent, depth, witness, f + n_int, f)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: fully parallel Cartesian-tree builder (ANSV by doubling)
+# ---------------------------------------------------------------------------
+
+def _log2_ceil(x: int) -> int:
+    return max(1, int(np.ceil(np.log2(max(2, x)))))
+
+
+def _sparse_table(h: jax.Array, n_levels: int):
+    """Leftmost-argmin sparse table over ``h``. Returns (vals, args) lists."""
+    n = h.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    big = jnp.iinfo(jnp.int32).max
+    vals = [h]
+    args = [idx]
+    span = 1
+    for _ in range(n_levels):
+        src = jnp.minimum(idx + span, n - 1)
+        valid = (idx + span) < n
+        shifted_v = jnp.where(valid, vals[-1][src], big)
+        shifted_a = jnp.where(valid, args[-1][src], n)
+        take_left = vals[-1] <= shifted_v  # ties -> leftmost
+        vals.append(jnp.where(take_left, vals[-1], shifted_v))
+        args.append(jnp.where(take_left, args[-1], shifted_a))
+        span *= 2
+    return vals, args
+
+
+def _range_min(vals, lo: jax.Array, hi: jax.Array):
+    """min over h[lo..hi] inclusive, vectorized; requires lo <= hi."""
+    length = hi - lo + 1
+    k = jnp.maximum(0, 31 - _clz32_arr(length))  # floor(log2(length))
+    n_levels = len(vals) - 1
+    k = jnp.minimum(k, n_levels)
+    stacked = jnp.stack(vals)  # (levels+1, n)
+    left = stacked[k, lo]
+    right = stacked[k, jnp.maximum(hi - (1 << k) + 1, lo)]
+    return jnp.minimum(left, right)
+
+
+def _clz32_arr(x: jax.Array) -> jax.Array:
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return 32 - jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def build_parallel(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNodes:
+    """Parallel construction: suffix sub-tree == Cartesian tree of B_off.
+
+    Event ``i`` (1 <= i < F) carries depth ``h[i] = b_off[i]``.  The internal
+    node containing event i is canonically represented by the *leftmost*
+    event j in i's LCP-interval with ``h[j] == min == h[i]``; parent links
+    follow from previous/next strictly-smaller values.  All queries are
+    O(log F) vectorized binary searches over a range-min sparse table.
+    """
+    f = ell.shape[0]
+    if f == 1:
+        parent = jnp.full(2, -1, jnp.int32).at[0].set(1)
+        depth = jnp.zeros(2, jnp.int32).at[0].set(n_total - ell[0])
+        witness = jnp.stack([ell[0], ell[0]]).astype(jnp.int32)
+        return SubTreeNodes(parent, depth, witness, 2, 1)
+
+    h = b_off.astype(jnp.int32).at[0].set(-1)  # sentinel left wall at 0
+    n_levels = _log2_ceil(f) + 2
+    vals, _args = _sparse_table(h, n_levels)
+    idx = jnp.arange(f, dtype=jnp.int32)
+
+    def _descend(tbl_vals, init_pos, target):
+        """largest j < init_pos with arr[j] < target, via block skipping.
+
+        Requires arr[0] < target for all queried targets (the wall)."""
+
+        def body(k, pos):
+            step = 1 << (n_levels - 1 - k)
+            cand = pos - step
+            lo = jnp.maximum(cand, 0)
+            blockmin = _range_min(tbl_vals, lo, jnp.maximum(pos - 1, lo))
+            jump = (cand >= 1) & (blockmin >= target) & (pos - 1 >= lo)
+            return jnp.where(jump, cand, pos)
+
+        pos = jax.lax.fori_loop(0, n_levels, body, init_pos)
+        return pos - 1
+
+    # psv[i]: largest j < i with h[j] < h[i]  (exists: h[0] = -1 wall)
+    psv = _descend(vals, idx, h)
+
+    # nsv[i]: smallest j > i with h[j] < h[i]; == f if none.  Computed as a
+    # PSV over [wall] + reversed(h): extended index r <-> original f - r.
+    h_rev_ext = jnp.concatenate([jnp.array([-1], jnp.int32), h[::-1]])
+    vals_rev, _ = _sparse_table(h_rev_ext, n_levels)
+    psv_rev = _descend(vals_rev, f - idx, h)  # init f - i, target h[i]
+    nsv = f - psv_rev
+
+    # canonical representative: leftmost argmin of h in (psv[i], i]
+    _, args = _sparse_table(h, n_levels)
+
+    def _range_argmin(lo, hi):
+        length = hi - lo + 1
+        k = jnp.minimum(jnp.maximum(0, 31 - _clz32_arr(length)), n_levels)
+        sv = jnp.stack(vals)
+        sa = jnp.stack(args)
+        l_v, l_a = sv[k, lo], sa[k, lo]
+        hi2 = jnp.maximum(hi - (1 << k) + 1, lo)
+        r_v, r_a = sv[k, hi2], sa[k, hi2]
+        take_left = l_v <= r_v
+        return jnp.where(take_left, l_a, r_a)
+
+    rep = _range_argmin(psv + 1, idx)  # for event i (i>=1)
+    rep = rep.at[0].set(0)
+
+    # parent event: the deeper of h[psv], h[nsv]; rep() of that event.
+    h_ext = jnp.concatenate([h, jnp.array([-1], jnp.int32)])  # h[F] = -1 wall
+    pl = h[jnp.maximum(psv, 0)]
+    pr = h_ext[jnp.minimum(nsv, f)]
+    parent_event = jnp.where(pl >= pr, jnp.maximum(psv, 0), jnp.minimum(nsv, f - 1))
+    parent_is_root = (pl <= 0) & (pr <= 0)  # both walls / depth<=0
+    parent_rep = rep[parent_event]
+
+    # node ids: internal node for canonical event j lives at id f + j
+    # (j >= 1); the sub-tree root is the canonical event of the global min.
+    is_rep = rep == idx
+    root_event = _range_argmin(jnp.ones((), jnp.int32), jnp.full((), f - 1, jnp.int32))
+    root_id = f + root_event
+
+    cap = 2 * f
+    parent = jnp.full(cap, -1, jnp.int32)
+    depth = jnp.zeros(cap, jnp.int32)
+    witness = jnp.full(cap, -1, jnp.int32)
+
+    # internal nodes
+    ev = idx
+    int_ids = f + ev
+    int_parent = jnp.where(
+        ev == root_event, -1, f + parent_rep
+    )
+    valid_int = is_rep & (ev >= 1)
+    parent = parent.at[jnp.where(valid_int, int_ids, cap - 1)].set(
+        jnp.where(valid_int, int_parent, parent[cap - 1])
+    )
+    depth = depth.at[jnp.where(valid_int, int_ids, cap - 1)].set(
+        jnp.where(valid_int, h[ev], depth[cap - 1])
+    )
+    witness = witness.at[jnp.where(valid_int, int_ids, cap - 1)].set(
+        jnp.where(valid_int, ell[ev - 1].astype(jnp.int32), witness[cap - 1])
+    )
+
+    # leaves: leaf k's parent is the deeper of events k, k+1
+    hk = h_ext[idx]       # event on the left of leaf k
+    hk1 = h_ext[idx + 1]  # event on the right
+    lev = jnp.where(hk >= hk1, idx, jnp.minimum(idx + 1, f - 1))
+    leaf_parent = f + rep[lev]
+    parent = parent.at[idx].set(leaf_parent)
+    depth = depth.at[idx].set((n_total - ell).astype(jnp.int32))
+    witness = witness.at[idx].set(ell.astype(jnp.int32))
+
+    n_internal = jnp.sum(valid_int)
+    return SubTreeNodes(parent, depth, witness, f + n_internal, f)
+
+
+# ---------------------------------------------------------------------------
+# Canonicalization for testing: node set -> (l, r, depth) intervals
+# ---------------------------------------------------------------------------
+
+def nodes_to_intervals(nodes: SubTreeNodes):
+    """Internal-node intervals (leftmost leaf, rightmost leaf + 1, depth)."""
+    parent = np.asarray(nodes.parent)
+    depth = np.asarray(nodes.depth)
+    f = int(nodes.n_leaves)
+    cap = len(parent)
+    lo = np.full(cap, np.iinfo(np.int64).max)
+    hi = np.full(cap, -1)
+    used = np.zeros(cap, dtype=bool)
+    for leaf in range(f):
+        v = leaf
+        steps = 0
+        while v != -1:
+            if steps > cap:
+                raise RuntimeError(f"parent cycle detected at leaf {leaf}")
+            lo[v] = min(lo[v], leaf)
+            hi[v] = max(hi[v], leaf)
+            used[v] = True
+            v = int(parent[v])
+            steps += 1
+    out = []
+    for v in range(f, cap):
+        if used[v] and hi[v] >= lo[v] and (hi[v] > lo[v] or f == 1):
+            out.append((int(lo[v]), int(hi[v]) + 1, int(depth[v])))
+    # A depth-0 (0, f) node is an artificial unary super-root iff another
+    # node also spans all leaves (at the true minimum divergence depth).
+    has_real_root = any(l == 0 and r == f and d > 0 for (l, r, d) in out)
+    if has_real_root:
+        out = [iv for iv in out if iv != (0, f, 0)]
+    return sorted(out)

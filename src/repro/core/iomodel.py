@@ -1,0 +1,73 @@
+"""I/O cost model (paper §4.4 and Figs. 9-10).
+
+The container has no disk-backed strings, and on TPU the string lives in
+HBM; this module reproduces the *paper's* I/O accounting analytically so
+the benchmarks can report the quantities the paper optimizes:
+
+* ``wavefront_scan_bytes`` — the WaveFront baseline reads all of S once per
+  iteration per (virtual) tree.
+* ``era_scan_bytes``       — ERA reads the same sequential stream but skips
+  blocks with no active offset (the disk-seek heuristic, §4.4); with the
+  elastic range the iteration count shrinks as leaves resolve.
+* grouping amortization    — one stream shared by all sub-trees of a group.
+
+All byte counts are per construction unit; multiply by groups / divide by
+workers for the parallel projections (Table 3 / Fig. 13 benchmarks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class IoReport:
+    iterations: int
+    seq_bytes_full: int        # full sequential scans (WaveFront discipline)
+    seq_bytes_skip: int        # with the block-skip heuristic
+    gathered_symbols: int      # what the TPU gather path actually fetches
+    blocks_touched: int
+
+
+def model_prepare_io(
+    active_offsets: list[np.ndarray],
+    ranges: list[int],
+    n: int,
+    block_bytes: int = 1 << 20,
+) -> IoReport:
+    """Model one group's SubTreePrepare I/O from its per-iteration state.
+
+    ``active_offsets[t]`` = string offsets read at iteration t;
+    ``ranges[t]`` = elastic range (symbols per offset) at iteration t.
+    """
+    seq_full = 0
+    seq_skip = 0
+    gathered = 0
+    blocks_total = 0
+    for offs, w in zip(active_offsets, ranges):
+        seq_full += n
+        if len(offs) == 0:
+            continue
+        gathered += len(offs) * w
+        lo = offs // block_bytes
+        hi = (offs + w - 1) // block_bytes
+        # blocks covered by each read, then dedup across reads
+        touched = set()
+        for a, b in zip(lo.tolist(), hi.tolist()):
+            touched.update(range(a, b + 1))
+        blocks_total += len(touched)
+        seq_skip += len(touched) * block_bytes
+    return IoReport(
+        iterations=len(ranges),
+        seq_bytes_full=seq_full,
+        seq_bytes_skip=min(seq_skip, seq_full),
+        gathered_symbols=gathered,
+        blocks_touched=blocks_total,
+    )
+
+
+def amortization_factor(n_prefixes: int, n_groups: int) -> float:
+    """How many sub-trees share each scan of S thanks to virtual trees."""
+    return n_prefixes / max(1, n_groups)

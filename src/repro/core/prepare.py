@@ -1,0 +1,320 @@
+"""SubTreePrepare (paper §4.2.2) — elastic-range batched construction in JAX.
+
+The paper's algorithm maintains, for one virtual tree, arrays ``L`` (leaf
+positions, progressively reordered into lexicographic suffix order), ``A``
+(active areas), ``B`` (branching triplets) and a read buffer ``R``.  Each
+iteration reads ``range`` symbols after every *active* leaf, sorts active
+areas lexicographically, and emits ``B[i] = (c1, c2, offset)`` where two
+adjacent branches diverge.  ``range = |R| / |active|`` grows as leaves
+resolve — the *elastic range*.
+
+TPU-native formulation implemented here:
+
+* the per-leaf read becomes a batched gather (``range_gather_pack``): ``w``
+  symbols per active leaf, packed big-endian 4-symbols/int32 so that integer
+  order == lexicographic order (terminal ``$`` = largest code, matching the
+  paper's traces; S is terminal-padded so overruns are safe — two distinct
+  suffixes always diverge at or before the earlier ``$``);
+* the per-area reorder becomes ONE stable ``jnp.lexsort`` over the whole
+  state with the area id as the major key.  Done elements get a unique
+  singleton major key (their own index) so they never move — this preserves
+  the paper's invariant that resolved positions are frozen;
+* divergence detection becomes a vectorized adjacent-row LCP on the packed
+  words (``lcp_adjacent``);
+* areas / done flags are recomputed with a cumulative-max segment sweep.
+
+``B`` entries are attached to *positions* (boundaries), which is sound
+because areas only ever split in place: once positions ``i-1 | i`` are
+separated, the boundary index never moves again.
+
+Shapes are static per jitted step; the elastic range ``w`` is bucketed to
+powers of two so at most ``log2(w_max/w_min)`` distinct compilations occur.
+The host loop drives steps until every area is resolved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vertical import VirtualTree
+from repro.kernels import ops as kops
+
+DONE = jnp.int32(-1)
+UNDEF = jnp.int32(-1)
+
+
+class PrepareState(NamedTuple):
+    """Per-virtual-tree state; all arrays have static length F (padded)."""
+
+    L: jax.Array       # int32[F]  leaf positions (suffix offsets), -1 pad
+    start: jax.Array   # int32[F]  symbols consumed so far per element
+    area: jax.Array    # int32[F]  active-area id (= index of first element), -1 done
+    b_off: jax.Array   # int32[F]  B offset, -1 undefined (b_*[0] unused)
+    b_c1: jax.Array    # int32[F]  first divergent symbol of left branch
+    b_c2: jax.Array    # int32[F]  first divergent symbol of right branch
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Memory-budget knobs (paper §4.4)."""
+
+    r_budget_symbols: int = 1 << 20  # |R|: total symbols fetched per scan
+    w_min: int = 4
+    w_max: int = 256
+    elastic: bool = True  # False = static range (paper Fig. 9b ablation)
+    static_w: int = 16
+
+
+def init_state(group: VirtualTree, capacity: int) -> PrepareState:
+    """Concatenate the group's occurrence lists into padded state arrays.
+
+    Each prefix's segment gets its own initial area (id = segment start);
+    frequency-1 prefixes are born resolved (a single leaf is a complete
+    sub-tree).
+    """
+    total = sum(p.freq for p in group.prefixes)
+    if total > capacity:
+        raise ValueError(f"group frequency {total} exceeds capacity {capacity}")
+    L = np.full(capacity, -1, dtype=np.int32)
+    start = np.zeros(capacity, dtype=np.int32)
+    area = np.full(capacity, -1, dtype=np.int32)
+    off = 0
+    for p in group.prefixes:
+        f = p.freq
+        L[off : off + f] = p.positions
+        start[off : off + f] = p.length
+        if f > 1:
+            area[off : off + f] = off
+        off += f
+    return PrepareState(
+        L=jnp.asarray(L),
+        start=jnp.asarray(start),
+        area=jnp.asarray(area),
+        b_off=jnp.full(capacity, -1, jnp.int32),
+        b_c1=jnp.zeros(capacity, jnp.int32),
+        b_c2=jnp.zeros(capacity, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Packed-key helpers (shared with kernels.ref)
+# ---------------------------------------------------------------------------
+
+_PACK_WEIGHTS = (1 << 24, 1 << 16, 1 << 8, 1)
+
+
+def pack_words(sym: jax.Array) -> jax.Array:
+    """(… , w) uint8 symbols → (…, w//4) int32 big-endian packed words."""
+    *lead, w = sym.shape
+    assert w % 4 == 0, "range must be a multiple of 4"
+    grp = sym.astype(jnp.int32).reshape(*lead, w // 4, 4)
+    weights = jnp.asarray(_PACK_WEIGHTS, jnp.int32)
+    return jnp.sum(grp * weights, axis=-1)
+
+
+def gather_pack(s_padded: jax.Array, offs: jax.Array, w: int) -> jax.Array:
+    """Gather ``w`` symbols at each offset and pack; pure-jnp fallback path.
+
+    The TPU path is ``repro.kernels.range_gather`` (scalar-prefetch paged
+    gather); this fallback is used on CPU and as the kernel oracle.
+    """
+    idx = offs[:, None] + jnp.arange(w, dtype=offs.dtype)[None, :]
+    # S must be pre-padded with the terminal code (Alphabet.pad_string);
+    # clip is only a safety net for the final over-reads of resolved areas.
+    idx = jnp.minimum(idx, s_padded.shape[0] - 1)
+    sym = jnp.take(s_padded, idx, axis=0)
+    return pack_words(sym)
+
+
+def _clz32(x: jax.Array) -> jax.Array:
+    """Count leading zeros of nonneg int32 via bit smear + popcount."""
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return 32 - jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def lcp_adjacent(keys: jax.Array, w: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """LCP (in symbols) + first divergent symbols between adjacent rows.
+
+    keys: (F, W) int32 packed words.  Returns (lcp, c1, c2) each (F,) where
+    entry i compares rows i-1 and i (entry 0 is garbage, callers mask it).
+    """
+    f, n_words = keys.shape
+    a = jnp.concatenate([keys[:1], keys[:-1]], axis=0)  # row i-1
+    b = keys
+    neq = a != b
+    any_neq = jnp.any(neq, axis=1)
+    word = jnp.argmax(neq, axis=1).astype(jnp.int32)  # first differing word
+    aw = jnp.take_along_axis(a, word[:, None], axis=1)[:, 0]
+    bw = jnp.take_along_axis(b, word[:, None], axis=1)[:, 0]
+    x = aw ^ bw
+    byte = _clz32(x) // 8  # byte index from the top (0..3); x>0 when any_neq
+    lcp = jnp.where(any_neq, word * 4 + byte, w).astype(jnp.int32)
+    shift = (3 - byte) * 8
+    c1 = (aw >> shift) & 0xFF
+    c2 = (bw >> shift) & 0xFF
+    return lcp, c1.astype(jnp.int32), c2.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# One elastic-range step (jitted per static w)
+# ---------------------------------------------------------------------------
+
+def _kernel_impls(use_pallas: bool, packed: bool = False):
+    """Select kernel implementations; a STATIC jit arg so switching the
+    REPRO_KERNELS env var between builds cannot hit a stale trace cache.
+
+    ``packed``: 2-bit packed DNA path (paper §6.1) — 4x less gather traffic
+    and 4x fewer sort key words; uint32 unsigned comparisons."""
+    if packed:
+        from repro.kernels import ref as kref
+
+        return kref.packed_gather_ref, kref.lcp_pairs_packed_ref
+    if use_pallas:
+        from repro.kernels.lcp import lcp_pairs as lcp_k
+        from repro.kernels.range_gather import range_gather_pack as gather_k
+
+        interp = jax.default_backend() != "tpu"
+        return (
+            lambda s, o, w: gather_k(s, o, w, interpret=interp),
+            lambda a, b, w: lcp_k(a, b, w, interpret=interp),
+        )
+    from repro.kernels import ref as kref
+
+    return kref.range_gather_pack_ref, kref.lcp_pairs_ref
+
+
+def prepare_step(s_padded: jax.Array, state: PrepareState, *, w: int,
+                 use_pallas: bool = False, packed: bool = False,
+                 gather_fn=None) -> tuple[PrepareState, jax.Array]:
+    """One iteration of SubTreePrepare for static range ``w``.
+
+    Returns (new_state, n_active).
+    """
+    f = state.L.shape[0]
+    iota = jnp.arange(f, dtype=jnp.int32)
+    active = state.area >= 0
+
+    # 1. read ``w`` symbols after every active leaf (paper lines 9-12);
+    #    Pallas paged-gather on TPU, pure-jnp fallback elsewhere.
+    default_gather, lcp_fn = _kernel_impls(use_pallas, packed)
+    gather_fn = gather_fn or default_gather
+    offs = jnp.where(active, state.L + state.start, 0)
+    keys = gather_fn(s_padded, offs, w)
+    keys = jnp.where(active[:, None], keys, 0)
+
+    # 2. segmented stable sort (paper lines 13-15): major key = area id;
+    #    done elements get singleton majors (their index) so they stay put.
+    major = jnp.where(active, state.area, iota)
+    n_words = keys.shape[1]
+    minor_keys = tuple(keys[:, j] for j in range(n_words - 1, -1, -1))
+    order = jnp.lexsort(minor_keys + (major,))
+    L = state.L[order]
+    start = state.start[order]
+    keys = keys[order]
+    # area / b_* are position-attached: within-area sorting leaves them fixed.
+
+    # 3. adjacent divergence → B entries (paper lines 16-23)
+    same_area = (state.area == jnp.roll(state.area, 1)) & active & (iota > 0)
+    prev_rows = jnp.concatenate([keys[:1], keys[:-1]], axis=0)
+    lcp, c1, c2 = lcp_fn(prev_rows, keys, w)
+    new_split = same_area & (lcp < w)
+    b_off = jnp.where(new_split, start + lcp, state.b_off)
+    b_c1 = jnp.where(new_split, c1, state.b_c1)
+    b_c2 = jnp.where(new_split, c2, state.b_c2)
+
+    # 4. recompute areas: a run starts where the old area changes or a new
+    #    split landed; singleton runs are done (leaf found, Prop. 1 case 1).
+    run_start = active & (
+        (iota == 0)
+        | (state.area != jnp.roll(state.area, 1))
+        | ~jnp.roll(active, 1)
+        | new_split
+    )
+    seg = jax.lax.cummax(jnp.where(run_start, iota, -1))
+    nxt_start = jnp.concatenate([run_start[1:], jnp.array([True])])
+    nxt_active = jnp.concatenate([active[1:], jnp.array([False])])
+    right_bound = nxt_start | ~nxt_active
+    singleton = run_start & right_bound
+    area = jnp.where(active & ~singleton, seg, DONE)
+
+    # 5. elastic advance for survivors
+    start = jnp.where(area >= 0, start + w, start)
+
+    new_state = PrepareState(L=L, start=start, area=area,
+                             b_off=b_off, b_c1=b_c1, b_c2=b_c2)
+    return new_state, jnp.sum(area >= 0)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "use_pallas"))
+def _jit_step(s_padded, state, w, use_pallas=False):
+    return prepare_step(s_padded, state, w=w, use_pallas=use_pallas)
+
+
+def elastic_range(cfg: ElasticConfig, n_active: int) -> int:
+    """range = |R| / |L'| (paper §4.4), bucketed to a power of two."""
+    if not cfg.elastic:
+        return max(4, (cfg.static_w + 3) // 4 * 4)
+    w = max(cfg.w_min, min(cfg.w_max, cfg.r_budget_symbols // max(1, n_active)))
+    return 1 << int(np.floor(np.log2(w)))
+
+
+@dataclasses.dataclass
+class PrepareStats:
+    iterations: int = 0
+    ranges: list = dataclasses.field(default_factory=list)
+    active_history: list = dataclasses.field(default_factory=list)
+    symbols_fetched: int = 0
+    record_offsets: bool = False  # keep per-iteration offsets for iomodel
+    offsets_history: list = dataclasses.field(default_factory=list)
+
+
+def subtree_prepare(
+    s_padded: jax.Array,
+    group: VirtualTree,
+    capacity: int,
+    cfg: ElasticConfig = ElasticConfig(),
+    stats: PrepareStats | None = None,
+    max_iters: int = 10_000,
+) -> PrepareState:
+    """Run SubTreePrepare to completion for one virtual tree."""
+    state = init_state(group, capacity)
+    use_pallas = kops._use_pallas()
+    n_active = int(jnp.sum(state.area >= 0))
+    it = 0
+    while n_active > 0:
+        if it >= max_iters:
+            raise RuntimeError("SubTreePrepare failed to converge")
+        w = elastic_range(cfg, n_active)
+        if stats is not None and stats.record_offsets:
+            act = np.asarray(state.area) >= 0
+            offs = (np.asarray(state.L) + np.asarray(state.start))[act]
+            stats.offsets_history.append(offs.astype(np.int64))
+        state, n_active_dev = _jit_step(s_padded, state, w, use_pallas)
+        if stats is not None:
+            stats.iterations += 1
+            stats.ranges.append(w)
+            stats.active_history.append(n_active)
+            stats.symbols_fetched += n_active * w
+        n_active = int(n_active_dev)
+        it += 1
+    return state
+
+
+def segments_of(group: VirtualTree) -> list[tuple[int, int]]:
+    """(offset, length) of each prefix's slice in the packed state arrays."""
+    segs = []
+    off = 0
+    for p in group.prefixes:
+        segs.append((off, p.freq))
+        off += p.freq
+    return segs

@@ -1,0 +1,186 @@
+"""Numpy reference oracles for the ERA pipeline.
+
+Everything in here is deliberately simple and independent of the JAX
+implementation: prefix-doubling suffix array, Kasai LCP, brute-force
+S-prefix frequency counting, the reference ``(L, B)`` construction of the
+paper's ``SubTreePrepare``, and a canonical interval-form suffix (sub-)tree
+used to check ``BuildSubTree`` output for isomorphism.
+
+Conventions match :mod:`repro.core.alphabet`: ``S`` is a uint8 code array
+whose last element is the terminal code ``|Σ|`` (the largest code, sorting
+after all real symbols, as in the paper's Example 2 traces).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Suffix array / LCP oracles
+# ---------------------------------------------------------------------------
+
+def suffix_array(s: np.ndarray) -> np.ndarray:
+    """Manber–Myers prefix doubling via ``np.lexsort``; O(n log^2 n)."""
+    s = np.asarray(s)
+    n = len(s)
+    rank = s.astype(np.int64)
+    sa = np.argsort(rank, kind="stable")
+    k = 1
+    while k < n:
+        # key = (rank[i], rank[i+k]) with -1 past the end
+        rank2 = np.full(n, -1, dtype=np.int64)
+        rank2[:-k] = rank[k:]
+        sa = np.lexsort((rank2, rank))
+        # recompute ranks
+        prev = (rank[sa[1:]] != rank[sa[:-1]]) | (rank2[sa[1:]] != rank2[sa[:-1]])
+        new_rank = np.zeros(n, dtype=np.int64)
+        new_rank[sa[1:]] = np.cumsum(prev)
+        if new_rank[sa[-1]] == n - 1:
+            return sa
+        rank = new_rank
+        k *= 2
+    return sa
+
+
+def lcp_array(s: np.ndarray, sa: np.ndarray) -> np.ndarray:
+    """Kasai: ``lcp[i] = LCP(suffix sa[i-1], suffix sa[i])``; lcp[0] = 0."""
+    n = len(s)
+    rank = np.zeros(n, dtype=np.int64)
+    rank[sa] = np.arange(n)
+    lcp = np.zeros(n, dtype=np.int64)
+    h = 0
+    for i in range(n):
+        if rank[i] > 0:
+            j = sa[rank[i] - 1]
+            while i + h < n and j + h < n and s[i + h] == s[j + h]:
+                h += 1
+            lcp[rank[i]] = h
+            if h > 0:
+                h -= 1
+        else:
+            h = 0
+    return lcp
+
+
+def suffix_lcp(s: np.ndarray, i: int, j: int) -> int:
+    """Direct LCP of suffixes i and j (small-input oracle)."""
+    n = len(s)
+    h = 0
+    while i + h < n and j + h < n and s[i + h] == s[j + h]:
+        h += 1
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Vertical partitioning oracles
+# ---------------------------------------------------------------------------
+
+def prefix_frequency(s: np.ndarray, prefix: np.ndarray) -> int:
+    """Number of suffixes of ``s`` whose S-prefix equals ``prefix``."""
+    t = len(prefix)
+    n = len(s)
+    count = 0
+    for i in range(n):
+        if i + t <= n and np.array_equal(s[i : i + t], prefix):
+            count += 1
+    return count
+
+
+def prefix_positions(s: np.ndarray, prefix: np.ndarray) -> np.ndarray:
+    t = len(prefix)
+    n = len(s)
+    return np.array(
+        [i for i in range(n) if i + t <= n and np.array_equal(s[i : i + t], prefix)],
+        dtype=np.int64,
+    )
+
+
+def vertical_partition_ref(s: np.ndarray, base: int, f_max: int):
+    """Paper Alg. VerticalPartitioning lines 1-11 (no grouping), brute force.
+
+    Returns a list of ``(prefix_tuple, frequency)`` with 0 < f <= f_max.
+    """
+    out = []
+    work = [(c,) for c in range(base)]
+    while work:
+        nxt = []
+        for p in work:
+            f = prefix_frequency(s, np.array(p, dtype=np.uint8))
+            if 0 < f <= f_max:
+                out.append((p, f))
+            elif f > f_max:
+                nxt.extend(p + (c,) for c in range(base))
+        work = nxt
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (L, B) reference — the paper's SubTreePrepare output
+# ---------------------------------------------------------------------------
+
+def era_reference_lb(s: np.ndarray, prefix: np.ndarray):
+    """Reference ``(L, B)`` arrays for sub-tree T_p (paper §4.2.2).
+
+    ``L[i]`` are occurrence positions of ``prefix`` in lexicographic suffix
+    order; ``B[i] = (c1, c2, offset)`` where ``offset`` is the LCP (counted
+    from the suffix start, i.e. including ``|p|``) of suffixes ``L[i-1]`` and
+    ``L[i]`` and ``c1, c2`` the first symbols after the divergence.
+    """
+    pos = prefix_positions(s, prefix)
+    order = sorted(pos, key=lambda i: tuple(int(x) for x in s[i:]))
+    ell = np.array(order, dtype=np.int64)
+    b = []
+    for k in range(1, len(ell)):
+        off = suffix_lcp(s, int(ell[k - 1]), int(ell[k]))
+        c1 = int(s[ell[k - 1] + off]) if ell[k - 1] + off < len(s) else 0
+        c2 = int(s[ell[k] + off]) if ell[k] + off < len(s) else 0
+        b.append((c1, c2, off))
+    return ell, b
+
+
+# ---------------------------------------------------------------------------
+# Canonical suffix sub-tree from (L, B_off): interval form
+# ---------------------------------------------------------------------------
+
+def tree_intervals(b_off: np.ndarray, f: int):
+    """Canonical internal-node intervals of the sub-tree described by (L, B).
+
+    The suffix sub-tree over leaves ``0..F-1`` (in lexicographic order) is
+    uniquely determined by the adjacent-divergence depths ``b_off[1..F-1]``:
+    each internal node is an interval ``(l, r, depth)`` meaning "the lowest
+    common ancestor of leaves l..r-1 has string-depth ``depth``".  This is
+    the classic SA+LCP interval enumeration (Abouelhoda-style bottom-up
+    traversal); it is the isomorphism oracle for BuildSubTree outputs.
+
+    Returns a sorted list of ``(l, r, depth)`` with r exclusive, one entry
+    per internal node.
+    """
+    if f <= 1:
+        return []
+    out = []
+    stack = [(0, 0)]  # (depth, left_boundary); depth-0 sentinel
+    for i in range(1, f):
+        h = int(b_off[i])
+        lb = i - 1
+        while stack and stack[-1][0] > h:
+            d, l = stack.pop()
+            out.append((l, i, d))
+            lb = l
+        if not stack or stack[-1][0] < h:
+            stack.append((h, lb))
+    min_h = int(min(int(b_off[i]) for i in range(1, f)))
+    while stack:
+        d, l = stack.pop()
+        if d >= min_h:  # drop the artificial depth-0 sentinel root
+            out.append((l, f, d))
+    return sorted(out)
+
+
+def occurrences(s: np.ndarray, pattern: np.ndarray) -> np.ndarray:
+    """Brute-force substring search oracle."""
+    n, m = len(s), len(pattern)
+    return np.array(
+        [i for i in range(n - m + 1) if np.array_equal(s[i : i + m], pattern)],
+        dtype=np.int64,
+    )

@@ -1,0 +1,216 @@
+"""Assembled suffix-tree index: trie-on-top + per-prefix sub-trees.
+
+The final index (paper §4, Figure 3) is a small top trie over the vertical-
+partition prefixes plus one sub-tree per prefix.  Sub-trees are stored in
+structure-of-arrays form (``build.SubTreeNodes``) together with the leaf
+array ``L`` — which is precisely the suffix array restricted to the prefix,
+so substring queries can run either as tree walks or as binary searches
+over ``L``.  Both are implemented; they are cross-checked in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.alphabet import Alphabet
+from repro.core.build import SubTreeNodes
+
+
+@dataclasses.dataclass
+class SubTree:
+    prefix: tuple[int, ...]
+    ell: np.ndarray          # int32[f] leaf positions, lexicographic order
+    b_off: np.ndarray        # int32[f]
+    b_c1: np.ndarray
+    b_c2: np.ndarray
+    nodes: SubTreeNodes | None = None  # filled by BuildSubTree
+
+    @property
+    def freq(self) -> int:
+        return len(self.ell)
+
+
+def _cmp_suffix(s: np.ndarray, pos: int, pattern: np.ndarray) -> int:
+    """-1/0/+1: compare suffix at ``pos`` against ``pattern`` (prefix match = 0)."""
+    n = len(s)
+    m = len(pattern)
+    chunk = s[pos : pos + m]
+    if len(chunk) < m:
+        pad = np.full(m - len(chunk), np.iinfo(np.int32).max, dtype=np.int64)
+        chunk = np.concatenate([chunk.astype(np.int64), pad])
+    diff = np.nonzero(chunk.astype(np.int64) - pattern.astype(np.int64))[0]
+    if len(diff) == 0:
+        return 0
+    d = diff[0]
+    return -1 if chunk[d] < pattern[d] else 1
+
+
+@dataclasses.dataclass
+class SuffixTreeIndex:
+    s: np.ndarray            # the indexed string (codes incl. terminal)
+    alphabet: Alphabet
+    subtrees: dict[tuple[int, ...], SubTree]
+
+    # ---- top trie ---------------------------------------------------------
+
+    def route(self, pattern: np.ndarray) -> list[tuple[int, ...]]:
+        """Prefixes whose sub-tree may contain occurrences of ``pattern``."""
+        m = len(pattern)
+        out = []
+        for p in self.subtrees:
+            k = min(len(p), m)
+            if tuple(pattern[:k]) == p[:k]:
+                out.append(p)
+        return out
+
+    # ---- queries ----------------------------------------------------------
+
+    def find(self, pattern: np.ndarray) -> np.ndarray:
+        """All occurrence positions of ``pattern`` in S (suffix-array search
+        within the routed sub-trees; O(|route| * log f * |P|))."""
+        hits = []
+        m = len(pattern)
+        for p in self.route(pattern):
+            st = self.subtrees[p]
+            if len(p) >= m:
+                hits.append(st.ell)  # whole sub-tree matches
+                continue
+            lo, hi = 0, st.freq  # binary search boundaries in L
+            # lower bound: first suffix >= pattern
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if _cmp_suffix(self.s, int(st.ell[mid]), pattern) < 0:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            first = lo
+            lo, hi = first, st.freq
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if _cmp_suffix(self.s, int(st.ell[mid]), pattern) == 0:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            hits.append(st.ell[first:lo])
+        if not hits:
+            return np.empty(0, dtype=np.int64)
+        return np.sort(np.concatenate(hits).astype(np.int64))
+
+    def find_walk(self, pattern: np.ndarray) -> np.ndarray:
+        """Tree-walk search (paper's O(|P|) descent) — validates the built
+        tree topology; requires ``nodes`` on the routed sub-trees."""
+        hits = []
+        m = len(pattern)
+        for p in self.route(pattern):
+            st = self.subtrees[p]
+            if len(p) >= m:
+                hits.append(st.ell)
+                continue
+            if st.nodes is None:
+                raise ValueError("sub-tree not built; call with build_impl set")
+            node = self._descend(st, pattern)
+            if node is not None:
+                hits.append(st.ell[node[0] : node[1]])
+        if not hits:
+            return np.empty(0, dtype=np.int64)
+        return np.sort(np.concatenate(hits).astype(np.int64))
+
+    def _descend(self, st: SubTree, pattern: np.ndarray):
+        """Walk the sub-tree matching ``pattern``; return (lo, hi) leaf span."""
+        nodes = st.nodes
+        parent = np.asarray(nodes.parent)
+        depth = np.asarray(nodes.depth)
+        f = int(nodes.n_leaves)
+        # children lists + leaf spans computed lazily and cached on the obj
+        if not hasattr(st, "_children"):
+            cap = len(parent)
+            wit = np.asarray(nodes.witness)
+            kids: list[list[int]] = [[] for _ in range(cap)]
+            root = -1
+            for v in range(cap):
+                pv = int(parent[v])
+                if pv >= 0:
+                    kids[pv].append(v)
+                elif v >= f and wit[v] >= 0:
+                    root = v
+            lo = np.full(cap, 10**9)
+            hi = np.full(cap, -1)
+            for leaf in range(f):
+                v = leaf
+                while v != -1:
+                    lo[v] = min(lo[v], leaf)
+                    hi[v] = max(hi[v], leaf)
+                    v = int(parent[v])
+            st._children = kids
+            st._span = (lo, hi)
+            st._root = root
+        kids = st._children
+        lo, hi = st._span
+        witness = np.asarray(nodes.witness)
+
+        v = st._root
+        if v < 0:
+            return None
+        matched = 0
+        m = len(pattern)
+        while matched < m:
+            nxt = None
+            for c in kids[v]:
+                # edge label = S[witness[c]+depth[v] : witness[c]+depth[c]]
+                e0 = int(witness[c]) + int(depth[v])
+                if self.s[e0] == pattern[matched]:
+                    nxt = c
+                    break
+            if nxt is None:
+                return None
+            elen = int(depth[nxt]) - int(depth[v])
+            take = min(elen, m - matched)
+            lbl = self.s[int(witness[nxt]) + int(depth[v]) : int(witness[nxt]) + int(depth[v]) + take]
+            if not np.array_equal(lbl, pattern[matched : matched + take]):
+                return None
+            matched += take
+            v = nxt
+        return int(lo[v]), int(hi[v]) + 1
+
+    # ---- stats / io -------------------------------------------------------
+
+    @property
+    def n_leaves(self) -> int:
+        return sum(st.freq for st in self.subtrees.values())
+
+    @property
+    def n_internal(self) -> int:
+        tot = 0
+        for st in self.subtrees.values():
+            if st.nodes is not None:
+                tot += int(st.nodes.n_nodes) - int(st.nodes.n_leaves)
+        return tot
+
+    def save(self, path: str) -> None:
+        blobs = {"s": self.s, "alphabet": np.frombuffer(self.alphabet.name.encode(), dtype=np.uint8)}
+        for i, (p, st) in enumerate(sorted(self.subtrees.items())):
+            blobs[f"p{i}_prefix"] = np.array(p, dtype=np.int32)
+            blobs[f"p{i}_ell"] = np.asarray(st.ell)
+            blobs[f"p{i}_boff"] = np.asarray(st.b_off)
+            blobs[f"p{i}_bc1"] = np.asarray(st.b_c1)
+            blobs[f"p{i}_bc2"] = np.asarray(st.b_c2)
+        np.savez_compressed(path, **blobs)
+
+    @classmethod
+    def load(cls, path: str, alphabet: Alphabet) -> "SuffixTreeIndex":
+        data = np.load(path)
+        subtrees = {}
+        i = 0
+        while f"p{i}_prefix" in data:
+            p = tuple(int(x) for x in data[f"p{i}_prefix"])
+            subtrees[p] = SubTree(
+                prefix=p,
+                ell=data[f"p{i}_ell"],
+                b_off=data[f"p{i}_boff"],
+                b_c1=data[f"p{i}_bc1"],
+                b_c2=data[f"p{i}_bc2"],
+            )
+            i += 1
+        return cls(s=data["s"], alphabet=alphabet, subtrees=subtrees)

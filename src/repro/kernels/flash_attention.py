@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: causal flash attention with GQA.
+
+The baseline XLA attention materializes the (Sq, Sk) logits and probs in
+HBM — the dominant memory-roofline term for every train/prefill cell in
+EXPERIMENTS.md §Roofline.  This kernel streams K/V blocks through VMEM
+with the online-softmax recurrence, so HBM traffic drops to Q+K+V+O.
+
+Grid: (batch, q_heads, Sq/blk_q, Sk/blk_k); the last axis is sequential on
+TPU, so the running max / denominator / accumulator live in VMEM scratch
+across kv steps (revisiting-output pattern).  GQA: the kv-head index map
+is ``h // (H // KV)`` — K/V blocks are fetched once per query-head group.
+
+Block sizes default to (128, 512): VMEM ≈ blk_q·D (Q) + blk_k·D (K,V) +
+blk_q·blk_k f32 (logits) + blk_q·D f32 (acc) ≈ 1.3MB at D=128 — well
+under budget, MXU-aligned (multiples of 128 on both matmul dims).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, blk_q: int, blk_k: int, scale: float, causal: bool,
+            n_k_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: kv block strictly above the diagonal contributes nothing
+    diag_ok = (ki * blk_k) <= (qi * blk_q + blk_q - 1)
+    run = jnp.logical_or(jnp.logical_not(causal), diag_ok)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)   # (blk_q, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (blk_k, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            row = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            col = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+            s = jnp.where(col <= row, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,  # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    blk_q: int = 128,
+    blk_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0
+    group = h // kv
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    assert sq % blk_q == 0 and sk % blk_k == 0, (sq, blk_q, sk, blk_k)
+    n_k_blocks = sk // blk_k
+    scale = 1.0 / np.sqrt(d)
+
+    grid = (b, h, sq // blk_q, n_k_blocks)
+    return pl.pallas_call(
+        functools.partial(_kernel, blk_q=blk_q, blk_k=blk_k, scale=scale,
+                          causal=causal, n_k_blocks=n_k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((1, blk_k, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // group, 0)),
+            pl.BlockSpec((1, blk_k, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[
+            # VMEM scratch: running max, denominator, accumulator
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Jit'd dispatch wrappers for the ERA Pallas kernels.
+
+On a real TPU the kernels run compiled (``interpret=False``); on CPU they
+run in interpret mode for validation, and the pure-jnp reference path is
+the default for speed.  Selection:
+
+* ``REPRO_KERNELS=pallas``    — always use the Pallas kernels (interpret
+                                 mode off-TPU);
+* ``REPRO_KERNELS=jnp`` (default on CPU) — pure-jnp reference path;
+* on TPU platforms the Pallas path is the default.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.kmer_histogram import kmer_histogram as _kmer_pallas
+from repro.kernels.lcp import lcp_pairs as _lcp_pallas
+from repro.kernels.range_gather import range_gather_pack as _gather_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas() -> bool:
+    env = os.environ.get("REPRO_KERNELS", "")
+    if env == "pallas":
+        return True
+    if env == "jnp":
+        return False
+    return _on_tpu()
+
+
+def range_gather_pack(s_padded, offs, w: int):
+    if _use_pallas():
+        return _gather_pallas(s_padded, offs, w, interpret=not _on_tpu())
+    return _ref.range_gather_pack_ref(s_padded, offs, w)
+
+
+def kmer_histogram(s_padded, n: int, k: int, base: int):
+    if _use_pallas():
+        return _kmer_pallas(s_padded, n, k, base, interpret=not _on_tpu())
+    return _ref.kmer_histogram_ref(s_padded, n, k, base)
+
+
+def lcp_pairs(a, b, w: int):
+    if _use_pallas():
+        return _lcp_pallas(a, b, w, interpret=not _on_tpu())
+    return _ref.lcp_pairs_ref(a, b, w)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: elastic-range gather + pack (ERA's string read).
+
+This is the TPU realization of the paper's "fill R by scanning S" step
+(SubTreePrepare lines 9-12).  On disk the paper streams S sequentially; in
+HBM the natural analogue is a *paged gather*: the per-leaf offset array is
+scalar-prefetched (the same pattern as paged-attention block tables), the
+``index_map`` selects the HBM tile containing each read, and the kernel
+packs ``w`` symbols into big-endian int32 words in VMEM so that integer
+comparisons equal lexicographic symbol comparisons.
+
+Tiling: S is reshaped to ``(n_tiles, tile)``; each grid step DMAs a
+``(2, tile)`` window (the read may straddle one tile boundary; ``w <=
+tile`` is enforced) and writes one ``(1, w//4)`` output row.  VMEM per
+step = ``2*tile*4 + w`` bytes — tile=2048 keeps it ~16KB, far under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import PACK_WEIGHTS
+
+
+def _kernel(offs_ref, s_lo_ref, s_hi_ref, out_ref, *, tile: int, w: int):
+    i = pl.program_id(0)
+    off = offs_ref[i]
+    local = off - (off // tile) * tile  # offset within the 2-tile window
+    flat = jnp.concatenate([s_lo_ref[...], s_hi_ref[...]], axis=1).reshape(2 * tile)
+    sym = jax.lax.dynamic_slice(flat, (local,), (w,))
+    grp = sym.reshape(w // 4, 4).astype(jnp.int32)
+    # unrolled big-endian pack (pallas kernels cannot capture array consts)
+    words = (grp[:, 0] * (1 << 24) + grp[:, 1] * (1 << 16)
+             + grp[:, 2] * (1 << 8) + grp[:, 3])
+    out_ref[0, :] = words
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile", "interpret"))
+def range_gather_pack(
+    s_padded: jax.Array,
+    offs: jax.Array,
+    w: int,
+    *,
+    tile: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """Gather ``w`` symbols per offset from S (terminal-padded) and pack.
+
+    s_padded: (n,) integer codes;  offs: (F,) int32;  returns (F, w//4) int32.
+    """
+    assert w % 4 == 0 and w <= tile, (w, tile)
+    f = offs.shape[0]
+    n = s_padded.shape[0]
+    n_tiles = -(-n // tile) + 1  # +1 halo row so (row, row+1) always exists
+    pad_val = s_padded[-1]  # terminal padding continues the last element
+    s_rows = jnp.full((n_tiles * tile,), pad_val, s_padded.dtype)
+    s_rows = jax.lax.dynamic_update_slice(s_rows, s_padded, (0,))
+    s_rows = s_rows.reshape(n_tiles, tile).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(f,),
+        in_specs=[
+            # the read window may straddle one tile boundary: fetch tiles
+            # r and r+1 as two (1, tile) blocks (halo row exists by padding)
+            pl.BlockSpec((1, tile), lambda i, offs_ref: (offs_ref[i] // tile, 0)),
+            pl.BlockSpec((1, tile), lambda i, offs_ref: (offs_ref[i] // tile + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w // 4), lambda i, offs_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, tile=tile, w=w),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((f, w // 4), jnp.int32),
+        interpret=interpret,
+    )(offs.astype(jnp.int32), s_rows, s_rows)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes and
+dtypes and asserts exact equality (all kernels here are integer kernels)
+against these functions, with the kernel run in ``interpret=True`` mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK_WEIGHTS = (1 << 24, 1 << 16, 1 << 8, 1)
+
+
+def pack_words_ref(sym: jax.Array) -> jax.Array:
+    """(…, w) symbol codes → (…, w//4) int32 big-endian packed words."""
+    *lead, w = sym.shape
+    assert w % 4 == 0
+    grp = sym.astype(jnp.int32).reshape(*lead, w // 4, 4)
+    return jnp.sum(grp * jnp.asarray(PACK_WEIGHTS, jnp.int32), axis=-1)
+
+
+def range_gather_pack_ref(s_padded: jax.Array, offs: jax.Array, w: int) -> jax.Array:
+    """Gather ``w`` symbols at each offset from S and pack into int32 words."""
+    idx = offs[:, None].astype(jnp.int32) + jnp.arange(w, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(idx, s_padded.shape[0] - 1)
+    return pack_words_ref(jnp.take(s_padded, idx, axis=0))
+
+
+def kmer_histogram_ref(s: jax.Array, n: int, k: int, base: int) -> jax.Array:
+    """Counts of every base-``base`` k-mer code over windows 0..n-1.
+
+    ``s`` must be terminal-padded to at least ``n + k - 1`` symbols.
+    Returns int32[base**k].
+    """
+    codes = jnp.zeros(n, jnp.int32)
+    for d in range(k):
+        codes = codes * base + s[d : d + n].astype(jnp.int32)
+    return jnp.zeros(base**k, jnp.int32).at[codes].add(1)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packed path (paper §6.1: DNA symbols encoded in 2 bits).  The string
+# is stored as uint32 words of 16 big-endian 2-bit symbols; gathers shift-
+# align across word boundaries and comparisons run on 4x fewer key words.
+# Terminal handling: windows overlapping the final 16 symbols fall back to
+# the unpacked path (host routes those few leaves) — see DESIGN.md §Perf.
+# ---------------------------------------------------------------------------
+
+SYMS_PER_WORD = 16
+
+
+def pack_string_2bit(s: jax.Array) -> jax.Array:
+    """uint8 symbols (codes 0..3) -> uint32 words, 16 symbols big-endian."""
+    n = s.shape[0]
+    pad = (-n) % SYMS_PER_WORD
+    sp = jnp.concatenate([s.astype(jnp.uint32), jnp.zeros(pad, jnp.uint32)])
+    grp = sp.reshape(-1, SYMS_PER_WORD)
+    shifts = (30 - 2 * jnp.arange(SYMS_PER_WORD, dtype=jnp.uint32))
+    return jnp.sum(grp << shifts[None, :], axis=1).astype(jnp.uint32)
+
+
+def packed_gather_ref(s_words: jax.Array, offs: jax.Array, w: int) -> jax.Array:
+    """Gather ``w`` symbols per offset from the 2-bit packed string.
+
+    Returns (F, w // 16) uint32 key words, shift-aligned so that unsigned
+    integer order == lexicographic symbol order.
+    """
+    assert w % SYMS_PER_WORD == 0
+    nw = w // SYMS_PER_WORD
+    word0 = (offs // SYMS_PER_WORD).astype(jnp.int32)
+    idx = word0[:, None] + jnp.arange(nw + 1, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(idx, s_words.shape[0] - 1)
+    words = jnp.take(s_words, idx, axis=0).astype(jnp.uint32)  # (F, nw+1)
+    sh = (2 * (offs % SYMS_PER_WORD)).astype(jnp.uint32)[:, None]
+    hi = jnp.where(sh > 0, words[:, :-1] << sh, words[:, :-1])
+    lo = jnp.where(sh > 0, words[:, 1:] >> (32 - sh), 0)
+    return (hi | lo).astype(jnp.uint32)
+
+
+def lcp_pairs_packed_ref(a: jax.Array, b: jax.Array, w: int):
+    """Row-wise LCP in SYMBOLS over 2-bit packed key rows (uint32)."""
+    f, nw = a.shape
+    x = a ^ b
+    neq = x != 0
+    iota = jnp.arange(nw, dtype=jnp.int32)[None, :]
+    first_w = jnp.min(jnp.where(neq, iota, nw), axis=1)
+    sel = iota == first_w[:, None]
+    xw = jnp.sum(jnp.where(sel, x, 0), axis=1).astype(jnp.uint32)
+    aw = jnp.sum(jnp.where(sel, a, 0), axis=1).astype(jnp.uint32)
+    bw = jnp.sum(jnp.where(sel, b, 0), axis=1).astype(jnp.uint32)
+    # leading zero bits of the xor -> first divergent 2-bit symbol
+    y = xw
+    y = y | (y >> 1); y = y | (y >> 2); y = y | (y >> 4)
+    y = y | (y >> 8); y = y | (y >> 16)
+    clz = 32 - jax.lax.population_count(y).astype(jnp.int32)
+    sym_in_word = clz // 2
+    any_neq = jnp.any(neq, axis=1)
+    lcp = jnp.where(any_neq, first_w * SYMS_PER_WORD + sym_in_word, w)
+    shift = (30 - 2 * jnp.minimum(sym_in_word, SYMS_PER_WORD - 1)).astype(jnp.uint32)
+    c1 = (aw >> shift) & 3
+    c2 = (bw >> shift) & 3
+    return (jnp.minimum(lcp, w).astype(jnp.int32),
+            c1.astype(jnp.int32), c2.astype(jnp.int32))
+
+
+def lcp_pairs_ref(a: jax.Array, b: jax.Array, w: int):
+    """Per-row LCP (symbols) and first divergent symbols of packed rows.
+
+    a, b: (F, W) int32 packed words (W = w // 4).
+    Returns (lcp, c1, c2): int32[F] each; rows that are fully equal get
+    lcp == w and c1 == c2 == 0.
+    """
+    f, n_words = a.shape
+    shifts = jnp.array([24, 16, 8, 0], jnp.int32)
+    ab = ((a[:, :, None] >> shifts[None, None, :]) & 0xFF).reshape(f, n_words * 4)
+    bb = ((b[:, :, None] >> shifts[None, None, :]) & 0xFF).reshape(f, n_words * 4)
+    neq = ab != bb
+    iota = jnp.arange(n_words * 4, dtype=jnp.int32)[None, :]
+    first = jnp.min(jnp.where(neq, iota, n_words * 4), axis=1)
+    sel = iota == first[:, None]
+    c1 = jnp.sum(jnp.where(sel, ab, 0), axis=1)
+    c2 = jnp.sum(jnp.where(sel, bb, 0), axis=1)
+    lcp = jnp.minimum(first, w)
+    return lcp.astype(jnp.int32), c1.astype(jnp.int32), c2.astype(jnp.int32)

@@ -1,0 +1,442 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent — sharding
+propagates, the per-device program fits, the collective schedule exists —
+and extracts the roofline terms (cost_analysis + HLO collective parse).
+Results are appended incrementally to a JSON artifact consumed by
+EXPERIMENTS.md §Dry-run / §Roofline and by ``benchmarks/``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      [--arch qwen3-1.7b] [--shape train_4k] [--multi-pod {off,on,both}] \
+      [--out experiments/dryrun.json] [--remat-policy none|dots]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import SHAPES
+from repro.models.registry import ARCHS, cell_is_runnable, get_config, input_specs
+from repro.optim import adamw
+from repro.roofline import analysis as roofline
+
+
+def _abstract_params(cfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def _tokens_per_step(cfg, shape) -> float:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch * (shape.seq_len if shape.kind == "prefill" else 1)
+
+
+def model_flops(cfg, shape) -> float:
+    """Global useful FLOPs: 6·N_active·tokens (train) or 2·N_active·tokens."""
+    n_active = cfg.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * _tokens_per_step(cfg, shape)
+
+
+def build_cell(cfg, shape, mesh, *, remat_policy: str = "none",
+               dtype=jnp.bfloat16, variant: str = "base"):
+    """Returns (fn, args_abstract, in_shardings, out_shardings, donate).
+
+    variants (§Perf hillclimb):
+      base     — the paper-faithful/naive distribution
+      sp       — sequence parallelism: activations constrained to
+                 (batch→data, seq→model); rescues non-divisible-head archs
+      seqcache — decode KV cache sequence dim sharded over model
+                 (flash-decoding-style partial softmax under GSPMD)
+    """
+    params_abs = _abstract_params(cfg, dtype)
+    specs_tree = T.model_specs(cfg)
+    p_shard = shd.param_shardings(specs_tree, mesh)
+    batch_abs = input_specs(cfg, shape, dtype=dtype)
+    b_shard = shd.batch_shardings(mesh, batch_abs)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        o_shard = adamw.AdamWState(
+            step=shd.replicated(mesh),
+            m=jax.tree.map(lambda _, s: s, params_abs, p_shard),
+            v=jax.tree.map(lambda _, s: s, params_abs, p_shard),
+        )
+        fn = steps.make_train_step(cfg, adamw.AdamWConfig(), remat_policy=remat_policy)
+        args = (params_abs, opt_abs, batch_abs)
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, None)
+        donate = (0, 1)
+        return fn, args, in_sh, out_sh, donate
+
+    seq_parallel = shape.name == "long_500k"
+    cache_abs = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+    c_shard = shd.cache_shardings(cfg, mesh, cache_abs, seq_parallel=seq_parallel)
+    if variant == "seqcache":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def seq_over_model(x, s):
+            if len(x.shape) >= 4 and x.shape[2] % mesh.shape["model"] == 0:
+                parts = list(s.spec) + [None] * (len(x.shape) - len(s.spec))
+                parts[2] = "model"
+                parts[-2] = None if parts[-2] == "model" else parts[-2]
+                parts[-1] = None if parts[-1] == "model" else parts[-1]
+                return NamedSharding(mesh, P(*parts))
+            return s
+
+        c_shard = jax.tree.map(seq_over_model, cache_abs, c_shard)
+
+    if shape.kind == "prefill":
+        fn = steps.make_prefill_step(cfg)
+        args = (params_abs, batch_abs, cache_abs)
+        in_sh = (p_shard, b_shard, c_shard)
+        out_sh = (None, c_shard)
+        donate = (2,)
+        return fn, args, in_sh, out_sh, donate
+
+    # decode
+    fn = steps.make_decode_step(cfg)
+    tok_abs = batch_abs  # {"tokens": (B,1)}
+    args = (params_abs, tok_abs["tokens"], cache_abs)
+    in_sh = (p_shard, shd.batch_sharding(mesh, shape.global_batch, 2), c_shard)
+    out_sh = (None, c_shard)
+    donate = (2,)
+    return fn, args, in_sh, out_sh, donate
+
+
+# ---------------------------------------------------------------------------
+# Depth extrapolation: XLA cost_analysis counts a scan (while-loop) body
+# ONCE, not × trip count (verified empirically).  All layer stacks here are
+# scanned, so per-cell FLOPs / bytes / collective-bytes are derived from two
+# reduced-depth compiles and a linear fit Q(L) = b + a·L evaluated at the
+# full depth — every number stays grounded in real compiled SPMD HLO.
+# ---------------------------------------------------------------------------
+
+def _depth_points(cfg) -> tuple[int, int]:
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every
+    if cfg.family == "encdec":
+        return 4, 8  # 2enc+2dec, 4enc+4dec
+    if cfg.family == "moe" and cfg.n_dense_layers:
+        return cfg.n_dense_layers + 2, cfg.n_dense_layers + 4
+    return 2, 4
+
+
+def _with_depth(cfg, depth: int):
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=depth,
+                                   n_enc_layers=depth // 2,
+                                   n_dec_layers=depth // 2)
+    return dataclasses.replace(cfg, n_layers=depth)
+
+
+def _cell_costs(cfg, shape, mesh, remat_policy: str, variant: str = "base"):
+    """(flops, hbm_bytes, wire_bytes) per device for one compiled cell."""
+    import contextlib
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.roofline.analysis import parse_collectives
+
+    fn, args, in_sh, out_sh, donate = build_cell(
+        cfg, shape, mesh, remat_policy=remat_policy, variant=variant)
+    sp_ctx = (T.activation_sharding(P(shd.dp_axes(mesh), "model", None))
+              if variant == "sp" else contextlib.nullcontext())
+    with sp_ctx, mesh, T.unrolled_layers():
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        coll = parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll.wire_bytes))
+
+
+def extrapolated_costs(cfg, shape, mesh, remat_policy: str, variant: str = "base"):
+    l1, l2 = _depth_points(cfg)
+    q1 = _cell_costs(_with_depth(cfg, l1), shape, mesh, remat_policy, variant)
+    q2 = _cell_costs(_with_depth(cfg, l2), shape, mesh, remat_policy, variant)
+    lf = cfg.n_layers
+    out = []
+    for a, b in zip(q1, q2):
+        slope = (b - a) / (l2 - l1)
+        out.append(max(0.0, a + slope * (lf - l1)))
+    return tuple(out)  # (flops, hbm_bytes, wire_bytes) at full depth
+
+
+# ---------------------------------------------------------------------------
+# ERA engine dry-run cell: the paper's own workload on the production mesh.
+# One elastic-range SubTreePrepare iteration, vmapped over a per-device
+# batch of virtual trees, groups sharded over every mesh axis (ERA has no
+# matmul to TP-shard: all 512 chips are independent workers — §5).  The
+# string is replicated (the shared-nothing broadcast).  Zero collectives
+# in the step is the *proof* of the paper's no-merge parallelism.
+# ---------------------------------------------------------------------------
+
+ERA_GENOME_N = 2_100_000_000  # human-genome scale, int32-offset safe
+ERA_F_M = 1 << 20             # leaves per virtual tree (MTS 32MB @ 32B/node)
+ERA_RANGE_W = 64
+
+
+def build_era_cell(mesh, *, w: int = ERA_RANGE_W, n: int = ERA_GENOME_N,
+                   f_m: int = ERA_F_M, packed: bool = False):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.prepare import PrepareState
+    from repro.launch.era_run import era_prepare_batch
+
+    g = mesh.size  # one virtual tree per chip
+    all_axes = tuple(mesh.axis_names)
+    s_dtype = jnp.int32 if packed else jnp.uint8
+    s_len = n // 16 if packed else n  # 2-bit packing: 16 symbols / int32
+    s_abs = jax.ShapeDtypeStruct((s_len,), s_dtype)
+    st_abs = PrepareState(
+        L=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
+        start=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
+        area=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
+        b_off=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
+        b_c1=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
+        b_c2=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
+    )
+    rep = NamedSharding(mesh, P())
+    by_group = NamedSharding(mesh, P(all_axes, None))
+    st_shard = PrepareState(*([by_group] * 6))
+
+    def fn(s_padded, states):
+        return era_prepare_batch(s_padded, states, w=w, packed=packed)
+
+    args = (s_abs, st_abs)
+    in_sh = (rep, st_shard)
+    out_sh = (st_shard, NamedSharding(mesh, P(all_axes)))
+    return fn, args, in_sh, out_sh, (1,)
+
+
+def run_era_cell(multi_pod: bool, *, packed: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": "era-genome" + ("-packed" if packed else ""),
+           "shape": "prepare_2.1G", "mesh": "2x16x16" if multi_pod else "16x16",
+           "remat_policy": "n/a", "variant": "base"}
+    t0 = time.perf_counter()
+    try:
+        fn, args, in_sh, out_sh, donate = build_era_cell(mesh, packed=packed)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            # single iteration; no scan over layers -> costs are exact
+            terms, coll = roofline.terms_from_compiled(
+                compiled, mesh.size, 0.0, hlo_text=hlo)
+        rec.update(
+            status="ok", t_compile_s=round(time.perf_counter() - t0, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_bytes": (
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+            },
+            roofline=terms.to_dict(),
+            collectives={"counts": coll.count_by_kind,
+                         "result_bytes": coll.bytes_by_kind,
+                         "wire_bytes_per_device": coll.wire_bytes},
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             remat_policy: str = "none", variant: str = "base") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "remat_policy": remat_policy,
+        "variant": variant,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.perf_counter()
+
+    import contextlib
+
+    from jax.sharding import PartitionSpec as P
+
+    sp_ctx = (T.activation_sharding(P(shd.dp_axes(mesh), "model", None))
+              if variant == "sp" else contextlib.nullcontext())
+    try:
+        fn, args, in_sh, out_sh, donate = build_cell(
+            cfg, shape, mesh, remat_policy=remat_policy, variant=variant)
+        with sp_ctx, mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t1
+
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            terms, coll = roofline.terms_from_compiled(
+                compiled, chips, model_flops(cfg, shape), hlo_text=hlo)
+        # depth-extrapolated costs (scan bodies are cost-counted once;
+        # see module comment) — these are the table-of-record numbers
+        flops_x, hbm_x, wire_x = extrapolated_costs(cfg, shape, mesh,
+                                                    remat_policy, variant)
+        terms_x = roofline.RooflineTerms(
+            flops=flops_x, hbm_bytes=hbm_x, wire_bytes=wire_x,
+            chips=chips, model_flops=model_flops(cfg, shape))
+        rec.update(
+            status="ok",
+            t_lower_s=round(t_lower, 2),
+            t_compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_bytes": (
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+                ),
+            },
+            roofline=terms_x.to_dict(),
+            roofline_raw_hlo=terms.to_dict(),  # un-extrapolated (body-once)
+            collectives={
+                "counts": coll.count_by_kind,
+                "result_bytes": coll.bytes_by_kind,
+                "wire_bytes_per_device": coll.wire_bytes,
+            },
+        )
+    except Exception as e:  # a failing cell is a bug to fix, but keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="both")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--remat-policy", default="none")
+    ap.add_argument("--variant", default="base",
+                    choices=["base", "sp", "seqcache"])
+    args = ap.parse_args()
+
+    era_only = args.arch in ("era", "era-packed")
+    archs = list(ARCHS) if args.arch == "all" else ([] if era_only else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("remat_policy", "none"),
+             r.get("variant", "base"))
+            for r in results if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                mesh_name = "2x16x16" if mp else "16x16"
+                key = (arch, shape_name, mesh_name, args.remat_policy, args.variant)
+                if key in done:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[dryrun] {arch} × {shape_name} × {mesh_name} "
+                      f"variant={args.variant} ...", flush=True)
+                rec = run_cell(arch, shape_name, mp, args.remat_policy, args.variant)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" tc={r['t_compute_s']:.3g}s tm={r['t_memory_s']:.3g}s"
+                             f" tx={r['t_collective_s']:.3g}s"
+                             f" useful={r['useful_flops_ratio']:.2f}"
+                             f" compile={rec['t_compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"  -> {status}{extra}", flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"],
+                               r.get("remat_policy", "none"),
+                               r.get("variant", "base")) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    # ERA engine cells (paper-representative; included in 'all' sweeps)
+    if args.arch in ("all", "era", "era-packed"):
+        packed_opts = {"all": [False, True], "era": [False],
+                       "era-packed": [True]}[args.arch]
+        for packed in packed_opts:
+            for mp in pods:
+                name = "era-genome" + ("-packed" if packed else "")
+                mesh_name = "2x16x16" if mp else "16x16"
+                key = (name, "prepare_2.1G", mesh_name, "n/a", "base")
+                if key in done:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[dryrun] {name} × prepare_2.1G × {mesh_name} ...", flush=True)
+                rec = run_era_cell(mp, packed=packed)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"  -> ok bottleneck={r['bottleneck']}"
+                          f" tc={r['t_compute_s']:.3g}s tm={r['t_memory_s']:.3g}s"
+                          f" tx={r['t_collective_s']:.3g}s", flush=True)
+                else:
+                    print(f"  -> {rec['status']} {rec.get('error', '')[:200]}", flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"],
+                               r.get("remat_policy", "none"),
+                               r.get("variant", "base")) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                print(f"  ERROR {r['arch']} × {r['shape']} × {r['mesh']}: {r['error'][:200]}")
+
+
+if __name__ == "__main__":
+    main()

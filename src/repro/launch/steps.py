@@ -1,0 +1,60 @@
+"""Jit-able train / prefill / decode step builders shared by the training
+driver, the serving driver and the multi-pod dry-run."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions; vocab may be model-sharded (the gather
+    and the logsumexp reduce become collectives under GSPMD)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+def make_loss_fn(cfg: ModelConfig, *, aux_weight: float = 0.01,
+                 remat_policy: str = "none"):
+    def loss_fn(params, batch):
+        logits, aux = T.forward_train(params, batch, cfg, remat=True,
+                                      remat_policy=remat_policy)
+        return cross_entropy(logits, batch["labels"]) + aux_weight * aux
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    *, remat_policy: str = "none"):
+    loss_fn = make_loss_fn(cfg, remat_policy=remat_policy)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return T.forward_prefill(params, batch, cfg, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, greedy: bool = True):
+    def serve_step(params, tokens, cache):
+        logits, cache = T.forward_decode(params, tokens, cfg, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step

@@ -1,0 +1,387 @@
+"""Parameter-spec system + neural layers (pure JAX, no flax).
+
+Every parameter is declared once as a :class:`Spec` carrying its shape AND
+its logical sharding axes — a single source of truth consumed both by
+``init_params`` (real or abstract init via ``jax.eval_shape``) and by
+``repro.sharding`` (logical axes → mesh ``PartitionSpec``).
+
+Layers are pure functions ``f(params_dict, inputs, cfg, ...)``.  Layer
+stacks are homogeneous pytrees with a leading ``layers`` axis consumed by
+``jax.lax.scan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Spec system
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple  # logical axis names (len == len(shape)); None = replicated
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_specs(tree: Any, n: int) -> Any:
+    """Prepend a ``layers`` dimension to every Spec (for lax.scan stacks)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def init_params(rng: jax.Array, tree: Any, dtype=jnp.float32) -> Any:
+    """Materialize a Spec tree into arrays (deterministic per-path folds)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, Spec))
+
+    def make(i, s: Spec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else max(1, s.shape[-1])
+        scale = s.scale if s.scale is not None else 1.0 / np.sqrt(fan_in)
+        k = jax.random.fold_in(rng, i)
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(i, s) for i, s in enumerate(leaves)])
+
+
+def axes_tree(tree: Any) -> Any:
+    """The logical-axes pytree matching ``init_params`` output."""
+    return jax.tree.map(
+        lambda s: s.axes, tree, is_leaf=lambda x: isinstance(x, Spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Elementary ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float):
+    """cos/sin tables: positions (…,) -> (…, dim//2)."""
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    while cos.ndim < x1.ndim:  # broadcast over heads
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: jax.Array | int,
+                is_global: jax.Array | bool = True) -> jax.Array:
+    """(…, Sq, Sk) boolean mask.  ``window`` <= 0 or ``is_global`` = full
+    causal; else sliding-window causal."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    causal = diff >= 0
+    win = jnp.asarray(window)
+    use_window = jnp.logical_and(win > 0, jnp.logical_not(jnp.asarray(is_global)))
+    windowed = jnp.logical_and(causal, diff < jnp.maximum(win, 1))
+    return jnp.where(use_window, windowed, causal)
+
+
+def _sdpa(q, k, v, mask, *, kv_groups: int) -> jax.Array:
+    """q: (B,Sq,H,D); k/v: (B,Sk,KV,D); H = KV * kv_groups.
+
+    GQA is computed in grouped form without materializing repeated K/V.
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, sq, kv, kv_groups, d)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+    logits = logits.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    while mask.ndim < logits.ndim:  # (…,Sq,Sk) -> (B,KV,G,Sq,Sk)
+        mask = mask[None]
+    logits = jnp.where(mask, logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + qk-norm + bias + sliding window; KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head")),
+        "wk": Spec((d, kv, hd), ("embed", "kv_heads", "head")),
+        "wv": Spec((d, kv, hd), ("embed", "kv_heads", "head")),
+        "wo": Spec((h, hd, d), ("heads", "head", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        s["bq"] = Spec((h, hd), ("heads", "head"), "zeros")
+        s["bk"] = Spec((kv, hd), ("kv_heads", "head"), "zeros")
+        s["bv"] = Spec((kv, hd), ("kv_heads", "head"), "zeros")
+    if cfg.qk_norm and not cross:
+        s["q_norm"] = Spec((hd,), (None,), "zeros")
+        s["k_norm"] = Spec((hd,), (None,), "zeros")
+    return s
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    q_pos: jax.Array,           # (B, Sq) absolute positions
+    window: jax.Array | int = 0,
+    is_global: jax.Array | bool = True,
+    cache: tuple | None = None,  # (k_cache, v_cache) (B, S_max, KV, hd)
+    cache_index: jax.Array | None = None,  # scalar write position
+    kv_source: jax.Array | None = None,    # cross-attention memory (B, Sk, d)
+    bidirectional: bool = False,
+):
+    """Returns (y, new_cache)."""
+    b, sq, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_source is None else kv_source
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if kv_source is None:  # rope only for self-attention
+        cos_q, sin_q = rope_tables(q_pos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos_q, sin_q)
+        k_pos_new = q_pos
+        cos_k, sin_k = rope_tables(k_pos_new, hd, cfg.rope_theta)
+        k = apply_rope(k, cos_k, sin_k)
+
+    if cache is not None:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, cache_index, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, cache_index, 0, 0))
+        k, v = k_cache, v_cache
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)[None, :]
+        valid = k_pos <= (cache_index + sq - 1)
+        mask = causal_mask(q_pos, k_pos, window, is_global) & valid[:, None, :]
+        new_cache = (k_cache, v_cache)
+    else:
+        k_pos = q_pos
+        if bidirectional or kv_source is not None:
+            mask = jnp.ones((b, sq, k.shape[1]), bool)
+        else:
+            mask = causal_mask(q_pos, k_pos, window, is_global)
+        new_cache = None
+
+    # mask: (B, Sq, Sk) -> (B, 1, 1, Sq, Sk) broadcasting over (KV, G)
+    out = _sdpa(q, k, v, mask[:, None, None, :, :], kv_groups=h // kvh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ql, kvl, rd = cfg.q_lora, cfg.kv_lora, cfg.rope_dims
+    s = {
+        "w_dkv": Spec((d, kvl), ("embed", "kv_lora")),
+        "kv_norm": Spec((kvl,), (None,), "zeros"),
+        "w_uk": Spec((kvl, h, hd), ("kv_lora", "heads", "head")),
+        "w_uv": Spec((kvl, h, hd), ("kv_lora", "heads", "head")),
+        "w_kr": Spec((d, rd), ("embed", None)),
+        "wo": Spec((h, hd, d), ("heads", "head", "embed")),
+    }
+    if ql:
+        s["w_dq"] = Spec((d, ql), ("embed", None))
+        s["q_norm"] = Spec((ql,), (None,), "zeros")
+        s["w_uq"] = Spec((ql, h, hd), (None, "heads", "head"))
+        s["w_uqr"] = Spec((ql, h, rd), (None, "heads", None))
+    else:
+        s["w_uq"] = Spec((d, h, hd), ("embed", "heads", "head"))
+        s["w_uqr"] = Spec((d, h, rd), ("embed", "heads", None))
+    return s
+
+
+def mla_attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    q_pos: jax.Array,
+    cache: tuple | None = None,   # (c_kv (B,S,kvl), k_rope (B,S,rd))
+    cache_index: jax.Array | None = None,
+):
+    b, sq, d = x.shape
+    h, hd, rd = cfg.n_heads, cfg.head_dim, cfg.rope_dims
+
+    if cfg.q_lora:
+        cq = rms_norm(jnp.einsum("bsd,dq->bsq", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    else:
+        cq = x
+    q_nope = jnp.einsum("bsq,qhk->bshk", cq, p["w_uq"])
+    q_rope = jnp.einsum("bsq,qhr->bshr", cq, p["w_uqr"])
+    cos, sin = rope_tables(q_pos, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_kv = rms_norm(jnp.einsum("bsd,dl->bsl", x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is not None:
+        ckv_cache, kr_cache = cache
+        ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, c_kv.astype(ckv_cache.dtype), (0, cache_index, 0))
+        kr_cache = jax.lax.dynamic_update_slice(kr_cache, k_rope.astype(kr_cache.dtype), (0, cache_index, 0))
+        c_kv, k_rope = ckv_cache, kr_cache
+        k_pos = jnp.arange(c_kv.shape[1], dtype=jnp.int32)[None, :]
+        valid = k_pos <= (cache_index + sq - 1)
+        mask = causal_mask(q_pos, k_pos, 0, True) & valid[:, None, :]
+        new_cache = (ckv_cache, kr_cache)
+    else:
+        k_pos = q_pos
+        mask = causal_mask(q_pos, k_pos, 0, True)
+        new_cache = None
+
+    # up-project cached latents (the naive/faithful path; the absorbed-matmul
+    # variant is a §Perf hillclimb change)
+    k_nope = jnp.einsum("btl,lhk->bthk", c_kv, p["w_uk"])
+    v = jnp.einsum("btl,lhk->bthk", c_kv, p["w_uv"])
+
+    scale = 1.0 / np.sqrt(hd + rd)
+    logits = (
+        jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+        + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+    ) * scale
+    logits = logits.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    logits = jnp.where(mask[:, None, :, :], logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs — dense SwiGLU and top-k routed MoE (capacity-based, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": Spec((d, f), ("embed", "mlp")),
+        "w_up": Spec((d, f), ("embed", "mlp")),
+        "w_down": Spec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", g * u, p["w_down"])
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    e = cfg.n_experts
+    fe = cfg.d_ff_expert or cfg.d_ff
+    s = {
+        "router": Spec((d, e), ("embed", None)),
+        "w_gate": Spec((e, d, fe), ("experts", "embed", "mlp")),
+        "w_up": Spec((e, d, fe), ("experts", "embed", "mlp")),
+        "w_down": Spec((e, fe, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = mlp_specs(cfg, d_ff=fe * cfg.n_shared_experts)
+    return s
+
+
+def moe(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Top-k routed MoE with fixed expert capacity (sort-free scatter).
+
+    Returns (y, aux_loss).  Expert weights carry the ``experts`` logical
+    axis → EP sharding over the ``model`` mesh axis; the token permute
+    becomes an all-to-all under GSPMD.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], e), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * router_mean)
+
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(cap, 4)
+
+    flat_ids = ids.reshape(-1)                      # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    # rank of each assignment within its expert (capacity slot)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)       # (T*k, E)
+    ranks = (jnp.cumsum(onehot, axis=0) - onehot) * onehot      # (T*k, E)
+    slot = jnp.sum(ranks, axis=-1)                              # (T*k,)
+    keep = slot < cap
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    # scatter tokens into (E, cap, d)
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    eids = jnp.where(keep, flat_ids, 0)
+    slts = jnp.where(keep, slot, 0)
+    contrib = jnp.where(keep[:, None], xt[token_of], 0)
+    buf = buf.at[eids, slts].add(contrib)
+
+    # expert FFNs (grouped einsum — EP shards the leading E axis)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y_e = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])
+
+    # gather back
+    out_flat = y_e[eids, slts]                                  # (T*k, d)
+    out_flat = jnp.where(keep[:, None], out_flat, 0) * flat_gate[:, None].astype(xt.dtype)
+    y = jnp.zeros_like(xt).at[token_of].add(out_flat)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x).reshape(t, d)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,101 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig, plus the per-cell
+input specs (ShapeDtypeStruct stand-ins — no allocation) for the dry-run.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+ARCHS = {
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch × shape) is a valid dry-run cell; reason if skipped.
+
+    ``long_500k`` needs sub-quadratic attention: run for SSM/hybrid, skip
+    for pure full-attention archs (incl. gemma3 — its global layers are
+    full attention and its published context is 128k < 500k).  See
+    DESIGN.md §Arch-applicability.
+    """
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(shp):
+        return jax.ShapeDtypeStruct(shp, i32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok((b, s)), "labels": tok((b, s))}
+        if cfg.family == "encdec":
+            # encoder frames + decoder tokens (frames len = seq len)
+            batch = {
+                "frontend": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), dtype),
+                "tokens": tok((b, s)),
+                "labels": tok((b, s)),
+            }
+        elif cfg.frontend:  # vlm: patches + text (labels cover full sequence)
+            batch = {
+                "frontend": jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.frontend_dim), dtype),
+                "tokens": tok((b, s)),
+                "labels": tok((b, cfg.frontend_len + s)),
+            }
+        return batch
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frontend": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), dtype),
+                "tokens": tok((b, min(s, 1024))),  # decoder prompt
+            }
+        if cfg.frontend:
+            return {
+                "frontend": jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.frontend_dim), dtype),
+                "tokens": tok((b, s - cfg.frontend_len)),
+            }
+        return {"tokens": tok((b, s))}
+
+    # decode: one new token against a seq_len cache
+    return {"tokens": tok((b, 1))}
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+                    dtype=jnp.float32) -> dict:
+    """Small concrete batch for smoke tests (same structure as input_specs)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape, dtype=dtype)
+    out = {}
+    for k, v in specs.items():
+        if v.dtype in (jnp.int32, np.int32):
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab, size=v.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(rng.normal(size=v.shape), dtype=dtype)
+    return out

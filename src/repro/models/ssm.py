@@ -1,0 +1,185 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and a multi-head
+scalar-decay Mamba-2 (zamba2's backbone).
+
+Training runs the recurrence as a ``jax.lax.associative_scan`` over the
+sequence axis (TPU-friendly: log-depth, matmul-free); decode is the O(1)
+single-step update carrying ``(conv_state, ssm_state)`` — the reason the
+SSM/hybrid archs are the ones that run ``long_500k``.
+
+Mamba-2 here is the SSD simplification used for systems purposes: scalar
+decay per head, shared B/C of width ``d_state`` — the tensor shapes and
+arithmetic intensity match the published block; the exact SSD chunked
+algorithm is an optimization alternative, not a different interface.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.nn import Spec
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, int(np.ceil(cfg.d_model / 16)))
+
+
+def mamba1_specs(cfg: ModelConfig) -> dict:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    r = _dt_rank(cfg)
+    return {
+        "in_proj": Spec((d, 2 * di), ("embed", "inner")),
+        "conv_w": Spec((k, di), (None, "inner")),
+        "conv_b": Spec((di,), ("inner",), "zeros"),
+        "x_proj": Spec((di, r + 2 * n), ("inner", None)),
+        "dt_proj": Spec((r, di), (None, "inner")),
+        "dt_bias": Spec((di,), ("inner",), "zeros"),
+        "A_log": Spec((di, n), ("inner", None), "ones"),
+        "D": Spec((di,), ("inner",), "ones"),
+        "out_proj": Spec((di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def _ssm_scan(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1; returns all h_t."""
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def mamba1(p: dict, x: jax.Array, cfg: ModelConfig, state: tuple | None = None,
+           return_state: bool = False):
+    """x: (B,S,d).  state (decode): (conv_state (B,K-1,di), h (B,di,N)).
+
+    Returns (y, new_state).  ``return_state=True`` in full-sequence mode
+    extracts the final (conv, h) state — the SSM prefill path.
+    """
+    b, s, d = x.shape
+    di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+    r = _dt_rank(cfg)
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        raw = xs
+        if return_state:  # last K-1 pre-conv inputs feed future decode steps
+            pad = jnp.zeros((b, max(0, (k - 1) - s), di), xs.dtype)
+            new_conv = jnp.concatenate([pad, raw[:, -(k - 1):, :]], axis=1)
+        else:
+            new_conv = None
+        xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    else:
+        conv_state, h0 = state
+        window = jnp.concatenate([conv_state, xs], axis=1)  # (B, K, di) for S=1
+        xs = jnp.einsum("bkc,kc->bc", window[:, -k:], p["conv_w"])[:, None, :] + p["conv_b"]
+        new_conv = window[:, -(k - 1):, :]
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bsc,ce->bse", xs, p["x_proj"])
+    dt_r, bc, cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rc->bsc", dt_r, p["dt_proj"]) + p["dt_bias"])
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+
+    decay = jnp.exp(dt[..., None].astype(jnp.float32) * a_mat)       # (B,S,di,N)
+    drive = (dt[..., None] * bc[:, :, None, :] * xs[..., None]).astype(jnp.float32)
+
+    if state is None:
+        h = _ssm_scan(decay, drive)                                   # (B,S,di,N)
+        new_h = h[:, -1] if return_state else None
+    else:
+        h = decay * h0[:, None] + drive
+        new_h = h[:, 0]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h.astype(x.dtype), cc)
+    y = y + p["D"] * xs
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"])
+    new_state = None if new_h is None else (new_conv, new_h)
+    return out, new_state
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    nh = cfg.ssm_heads
+    return {
+        "in_proj": Spec((d, 2 * di), ("embed", "inner")),
+        "conv_w": Spec((k, di), (None, "inner")),
+        "conv_b": Spec((di,), ("inner",), "zeros"),
+        "bc_proj": Spec((d, 2 * n), ("embed", None)),
+        "dt_proj": Spec((d, nh), ("embed", None)),
+        "dt_bias": Spec((nh,), (None,), "zeros"),
+        "A_log": Spec((nh,), (None,), "ones"),
+        "D": Spec((di,), ("inner",), "ones"),
+        "out_proj": Spec((di, d), ("inner", "embed")),
+    }
+
+
+def mamba2(p: dict, x: jax.Array, cfg: ModelConfig, state: tuple | None = None,
+           return_state: bool = False):
+    """Multi-head scalar-decay SSD block.  state: (conv (B,K-1,di), h (B,NH,HD,N))."""
+    b, s, d = x.shape
+    di, n, k, nh = cfg.d_inner, cfg.d_state, cfg.d_conv, cfg.ssm_heads
+    hd = di // nh
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        raw = xs
+        if return_state:
+            pad = jnp.zeros((b, max(0, (k - 1) - s), di), xs.dtype)
+            new_conv = jnp.concatenate([pad, raw[:, -(k - 1):, :]], axis=1)
+        else:
+            new_conv = None
+        xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    else:
+        conv_state, h0 = state
+        window = jnp.concatenate([conv_state, xs], axis=1)
+        xs = jnp.einsum("bkc,kc->bc", window[:, -k:], p["conv_w"])[:, None, :] + p["conv_b"]
+        new_conv = window[:, -(k - 1):, :]
+    xs = jax.nn.silu(xs)
+
+    bc = jnp.einsum("bsd,dn->bsn", x, p["bc_proj"])
+    b_in, c_out = jnp.split(bc, 2, axis=-1)                 # (B,S,N) each
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["dt_proj"]) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))            # (NH,)
+
+    xh = xs.reshape(b, s, nh, hd)
+    decay = jnp.exp(dt.astype(jnp.float32) * a)             # (B,S,NH)
+    drive = (dt[..., None, None] * xh[..., None] * b_in[:, :, None, None, :])
+    # (B,S,NH,HD,N)
+
+    if state is None:
+        h = _ssm_scan(decay[..., None, None], drive.astype(jnp.float32))
+        new_h = h[:, -1] if return_state else None
+    else:
+        h = decay[..., None, None] * h0[:, None] + drive.astype(jnp.float32)
+        new_h = h[:, 0]
+
+    y = jnp.einsum("bshdn,bsn->bshd", h.astype(x.dtype), c_out).reshape(b, s, di)
+    y = y + p["D"] * xs
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"])
+    new_state = None if new_h is None else (new_conv, new_h)
+    return out, new_state

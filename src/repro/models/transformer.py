@@ -1,0 +1,651 @@
+"""Model assembly for the assigned architecture zoo.
+
+Every family is assembled from the layers in ``nn.py`` / ``ssm.py`` with
+``jax.lax.scan`` over stacked per-layer parameters (compact HLO — critical
+for 512-device dry-run compiles), ``jax.checkpoint`` around the layer body
+in training mode, and explicit cache pytrees for decode.
+
+Entry points (all pure functions of (params, batch) given a config):
+
+* ``model_specs(cfg)``       — the parameter Spec tree (single source of
+                               truth for shapes AND logical sharding axes)
+* ``forward_train``          — full-sequence logits (+ MoE aux loss)
+* ``forward_prefill``        — logits for the last position + filled cache
+* ``forward_decode``         — one-token step against the cache
+* ``init_cache(cfg, B, S)``  — abstract-friendly cache construction
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import nn, ssm
+from repro.models.config import ModelConfig
+from repro.models.nn import Spec
+
+# ---------------------------------------------------------------------------
+# Layer-stack scan with optional full unrolling.
+#
+# XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+# count; the roofline pipeline therefore compiles reduced-depth model
+# variants fully unrolled (straight-line HLO, exact costs) and extrapolates
+# Q(L) = b + a·L to full depth.  Production lowering keeps the scan.
+# ---------------------------------------------------------------------------
+
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled_layers():
+    """Trace layer stacks unrolled (for exact cost_analysis); not for
+    production compiles — HLO size grows linearly with depth."""
+    global _UNROLL
+    old = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = old
+
+
+def _scan(f, init, xs):
+    n = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(f, init, xs, unroll=n if _UNROLL else 1)
+
+
+# ---------------------------------------------------------------------------
+# Optional activation-sharding constraint (sequence parallelism).
+#
+# For archs whose head count does not divide the model axis (qwen3-14b /
+# qwen1.5-32b: 40 heads on 16), TP cannot shard attention and GSPMD falls
+# back to replicated compute with giant logits all-reduces (§Perf cell A).
+# Constraining activations to (batch→data, seq→model) shards the S² work
+# 16-way instead; K/V get a cheap per-layer all-gather.
+# ---------------------------------------------------------------------------
+
+_ACT_SPEC = None
+
+
+@contextlib.contextmanager
+def activation_sharding(spec):
+    """spec: PartitionSpec for (B, S, D) activations, or None."""
+    global _ACT_SPEC
+    old = _ACT_SPEC
+    _ACT_SPEC = spec
+    try:
+        yield
+    finally:
+        _ACT_SPEC = old
+
+
+def _constrain(x):
+    if _ACT_SPEC is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Spec assembly
+# ---------------------------------------------------------------------------
+
+def _ln(cfg: ModelConfig) -> Spec:
+    return Spec((cfg.d_model,), (None,), "zeros")
+
+
+def _dense_block_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    s = {"ln1": _ln(cfg), "attn": nn.attention_specs(cfg), "ln2": _ln(cfg),
+         "mlp": nn.mlp_specs(cfg)}
+    if cross:
+        s["lnx"] = _ln(cfg)
+        s["xattn"] = nn.attention_specs(cfg, cross=True)
+    return s
+
+
+def _moe_block_specs(cfg: ModelConfig) -> dict:
+    attn = nn.mla_specs(cfg) if cfg.mla else nn.attention_specs(cfg)
+    return {"ln1": _ln(cfg), "attn": attn, "ln2": _ln(cfg), "moe": nn.moe_specs(cfg)}
+
+
+def _mamba_block_specs(cfg: ModelConfig) -> dict:
+    mk = ssm.mamba2_specs if cfg.ssm == "mamba2" else ssm.mamba1_specs
+    return {"ln": _ln(cfg), "ssm": mk(cfg)}
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "embed": Spec((cfg.vocab, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": _ln(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = Spec((d, cfg.vocab), ("embed", "vocab"))
+    if cfg.frontend:
+        specs["frontend_proj"] = Spec((cfg.frontend_dim, d), (None, "embed"))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        specs["layers"] = nn.stack_specs(_dense_block_specs(cfg), cfg.n_layers)
+    elif fam == "moe":
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        if cfg.n_dense_layers:
+            dense = {"ln1": _ln(cfg), "ln2": _ln(cfg), "mlp": nn.mlp_specs(cfg),
+                     "attn": nn.mla_specs(cfg) if cfg.mla else nn.attention_specs(cfg)}
+            specs["dense_layers"] = nn.stack_specs(dense, cfg.n_dense_layers)
+        specs["layers"] = nn.stack_specs(_moe_block_specs(cfg), n_moe)
+    elif fam == "ssm":
+        specs["layers"] = nn.stack_specs(_mamba_block_specs(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        assert cfg.attn_every and cfg.n_layers % cfg.attn_every == 0
+        specs["layers"] = nn.stack_specs(_mamba_block_specs(cfg), cfg.n_layers)
+        specs["shared_attn"] = _dense_block_specs(cfg)  # ONE shared block
+    elif fam == "encdec":
+        specs["enc_layers"] = nn.stack_specs(_dense_block_specs(cfg), cfg.n_enc_layers)
+        specs["dec_layers"] = nn.stack_specs(
+            _dense_block_specs(cfg, cross=True), cfg.n_dec_layers)
+    else:
+        raise ValueError(fam)
+    return specs
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
+    return nn.init_params(rng, model_specs(cfg), dtype)
+
+
+def param_logical_axes(cfg: ModelConfig):
+    return nn.axes_tree(model_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _dense_block(p, x, cfg: ModelConfig, *, q_pos, window, is_global,
+                 cache=None, cache_index=None, enc_out=None, bidirectional=False):
+    x = _constrain(x)
+    h, kv = nn.attention(
+        p["attn"], nn.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+        q_pos=q_pos, window=window, is_global=is_global,
+        cache=cache, cache_index=cache_index, bidirectional=bidirectional,
+    )
+    x = x + h
+    if enc_out is not None:
+        hx, _ = nn.attention(
+            p["xattn"], nn.rms_norm(x, p["lnx"], cfg.norm_eps), cfg,
+            q_pos=q_pos, kv_source=enc_out,
+        )
+        x = x + hx
+    x = x + nn.mlp(p["mlp"], nn.rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, kv
+
+
+def _moe_block(p, x, cfg: ModelConfig, *, q_pos, cache=None, cache_index=None):
+    if cfg.mla:
+        h, kv = nn.mla_attention(p["attn"], nn.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                 cfg, q_pos=q_pos, cache=cache, cache_index=cache_index)
+    else:
+        h, kv = nn.attention(p["attn"], nn.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                             q_pos=q_pos, window=0, is_global=True,
+                             cache=cache, cache_index=cache_index)
+    x = x + h
+    y, aux = nn.moe(p["moe"], nn.rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x + y, kv, aux
+
+
+def _mamba_block(p, x, cfg: ModelConfig, state=None):
+    fn = ssm.mamba2 if cfg.ssm == "mamba2" else ssm.mamba1
+    h, new_state = fn(p["ssm"], nn.rms_norm(x, p["ln"], cfg.norm_eps), cfg, state)
+    return x + h, new_state
+
+
+def _is_global_flags(cfg: ModelConfig, n: int) -> jnp.ndarray:
+    if cfg.sliding_window and cfg.global_every:
+        return jnp.array([(i + 1) % cfg.global_every == 0 for i in range(n)])
+    if cfg.sliding_window:
+        return jnp.zeros(n, bool)
+    return jnp.ones(n, bool)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, tokens, cfg: ModelConfig, dtype):
+    scale = jnp.asarray(np.sqrt(cfg.d_model), dtype)  # keep compute dtype
+    return jnp.take(params["embed"], tokens, axis=0).astype(dtype) * scale
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+
+
+def _frontend(params, batch, cfg: ModelConfig, dtype):
+    """Prepend stub modality embeddings (patches/frames) to token embeds."""
+    emb = _embed_tokens(params, batch["tokens"], cfg, dtype)
+    if cfg.frontend and "frontend" in batch:
+        fr = jnp.einsum("btf,fd->btd", batch["frontend"].astype(dtype),
+                        params["frontend_proj"].astype(dtype))
+        emb = jnp.concatenate([fr, emb], axis=1)
+    return emb
+
+
+# ---------------------------------------------------------------------------
+# Training forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, batch, cfg: ModelConfig, *, remat: bool = True,
+                  remat_policy: str = "none"):
+    """Returns (logits, aux_loss)."""
+    dtype = params["final_norm"].dtype
+    fam = cfg.family
+
+    if fam == "encdec":
+        return _encdec_train(params, batch, cfg, remat)
+
+    x = _frontend(params, batch, cfg, dtype)
+    b, s, _ = x.shape
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def maybe_remat(f):
+        if not remat:
+            return f
+        policy = None
+        if remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(f, policy=policy)
+
+    if fam in ("dense", "vlm"):
+        flags = _is_global_flags(cfg, cfg.n_layers)
+
+        def body(carry, inp):
+            lp, is_g = inp
+            y, _ = _dense_block(lp, carry, cfg, q_pos=q_pos,
+                                window=cfg.sliding_window, is_global=is_g)
+            return y, None
+
+        x, _ = _scan(maybe_remat(body), x, (params["layers"], flags))
+
+    elif fam == "moe":
+        if cfg.n_dense_layers:
+            def dbody(carry, lp):
+                xx = carry
+                if cfg.mla:
+                    h, _ = nn.mla_attention(lp["attn"], nn.rms_norm(xx, lp["ln1"], cfg.norm_eps),
+                                            cfg, q_pos=q_pos)
+                else:
+                    h, _ = nn.attention(lp["attn"], nn.rms_norm(xx, lp["ln1"], cfg.norm_eps),
+                                        cfg, q_pos=q_pos, window=0, is_global=True)
+                xx = xx + h
+                xx = xx + nn.mlp(lp["mlp"], nn.rms_norm(xx, lp["ln2"], cfg.norm_eps))
+                return xx, None
+
+            x, _ = _scan(maybe_remat(dbody), x, params["dense_layers"])
+
+        def body(carry, lp):
+            xx, aux = carry
+            y, _, a = _moe_block(lp, xx, cfg, q_pos=q_pos)
+            return (y, aux + a), None
+
+        (x, aux_total), _ = _scan(maybe_remat(body), (x, aux_total), params["layers"])
+
+    elif fam == "ssm":
+        def body(carry, lp):
+            y, _ = _mamba_block(lp, carry, cfg)
+            return y, None
+
+        x, _ = _scan(maybe_remat(body), x, params["layers"])
+
+    elif fam == "hybrid":
+        n_chunk = cfg.n_layers // cfg.attn_every
+        chunked = jax.tree.map(
+            lambda a: a.reshape((n_chunk, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+
+        def inner(carry, lp):
+            y, _ = _mamba_block(lp, carry, cfg)
+            return y, None
+
+        def chunk_body(carry, chunk_params):
+            y, _ = _scan(inner, carry, chunk_params)
+            y, _ = _dense_block(shared, y, cfg, q_pos=q_pos, window=0, is_global=True)
+            return y, None
+
+        x, _ = _scan(maybe_remat(chunk_body), x, chunked)
+
+    logits = _logits(params, x, cfg)
+    return logits, aux_total
+
+
+def _encdec_train(params, batch, cfg: ModelConfig, remat: bool):
+    dtype = params["final_norm"].dtype
+    fr = batch["frontend"].astype(dtype)
+    enc = jnp.einsum("btf,fd->btd", fr, params["frontend_proj"].astype(dtype))
+    b, t, _ = enc.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def ebody(carry, lp):
+        y, _ = _dense_block(lp, carry, cfg, q_pos=enc_pos, window=0,
+                            is_global=True, bidirectional=True)
+        return y, None
+
+    ebody_ = jax.checkpoint(ebody) if remat else ebody
+    enc, _ = _scan(ebody_, enc, params["enc_layers"])
+
+    dec = _embed_tokens(params, batch["tokens"], cfg, dtype)
+    s = dec.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def dbody(carry, lp):
+        y, _ = _dense_block(lp, carry, cfg, q_pos=q_pos, window=0,
+                            is_global=True, enc_out=enc)
+        return y, None
+
+    dbody_ = jax.checkpoint(dbody) if remat else dbody
+    dec, _ = _scan(dbody_, dec, params["dec_layers"])
+    return _logits(params, dec, cfg), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    fam = cfg.family
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.zeros((), jnp.int32)
+    if fam in ("dense", "vlm"):
+        shape = (cfg.n_layers, batch, max_len, kvh, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype), "pos": pos}
+    if fam == "moe":
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        if cfg.mla:
+            c = {"ckv": jnp.zeros((n_moe, batch, max_len, cfg.kv_lora), dtype),
+                 "kr": jnp.zeros((n_moe, batch, max_len, cfg.rope_dims), dtype),
+                 "pos": pos}
+            if cfg.n_dense_layers:
+                c["d_ckv"] = jnp.zeros((cfg.n_dense_layers, batch, max_len, cfg.kv_lora), dtype)
+                c["d_kr"] = jnp.zeros((cfg.n_dense_layers, batch, max_len, cfg.rope_dims), dtype)
+            return c
+        c = {"k": jnp.zeros((n_moe, batch, max_len, kvh, hd), dtype),
+             "v": jnp.zeros((n_moe, batch, max_len, kvh, hd), dtype), "pos": pos}
+        if cfg.n_dense_layers:
+            c["d_k"] = jnp.zeros((cfg.n_dense_layers, batch, max_len, kvh, hd), dtype)
+            c["d_v"] = jnp.zeros((cfg.n_dense_layers, batch, max_len, kvh, hd), dtype)
+        return c
+    if fam == "ssm":
+        di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+        return {"conv": jnp.zeros((cfg.n_layers, batch, k - 1, di), dtype),
+                "h": jnp.zeros((cfg.n_layers, batch, di, n), jnp.float32), "pos": pos}
+    if fam == "hybrid":
+        di, n, k = cfg.d_inner, cfg.d_state, cfg.d_conv
+        nh, hdim = cfg.ssm_heads, cfg.d_inner // cfg.ssm_heads
+        n_chunk = cfg.n_layers // cfg.attn_every
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, k - 1, di), dtype),
+            "h": jnp.zeros((cfg.n_layers, batch, nh, hdim, n), jnp.float32),
+            "k": jnp.zeros((n_chunk, batch, max_len, kvh, hd), dtype),
+            "v": jnp.zeros((n_chunk, batch, max_len, kvh, hd), dtype),
+            "pos": pos,
+        }
+    if fam == "encdec":
+        return {"k": jnp.zeros((cfg.n_dec_layers, batch, max_len, kvh, hd), dtype),
+                "v": jnp.zeros((cfg.n_dec_layers, batch, max_len, kvh, hd), dtype),
+                "enc": jnp.zeros((batch, cfg.frontend_len, cfg.d_model), dtype),
+                "pos": pos}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Prefill + decode
+# ---------------------------------------------------------------------------
+
+def forward_prefill(params, batch, cfg: ModelConfig, cache):
+    """Fill the cache with the prompt; return (last-position logits, cache)."""
+    dtype = params["final_norm"].dtype
+    fam = cfg.family
+    idx = cache["pos"]
+
+    if fam == "encdec":
+        enc = jnp.einsum("btf,fd->btd", batch["frontend"].astype(dtype),
+                         params["frontend_proj"].astype(dtype))
+        b, t, _ = enc.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+        def ebody(carry, lp):
+            y, _ = _dense_block(lp, carry, cfg, q_pos=enc_pos, window=0,
+                                is_global=True, bidirectional=True)
+            return y, None
+
+        enc, _ = _scan(ebody, enc, params["enc_layers"])
+        dec = _embed_tokens(params, batch["tokens"], cfg, dtype)
+        s = dec.shape[1]
+        q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def dbody(carry, inp):
+            lp, kc, vc = inp
+            y, kv = _dense_block(lp, carry, cfg, q_pos=q_pos, window=0,
+                                 is_global=True, enc_out=enc,
+                                 cache=(kc, vc), cache_index=idx)
+            return y, kv
+
+        dec, (ks, vs) = _scan(dbody, dec, (params["dec_layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs, "enc": enc.astype(cache["enc"].dtype),
+                     "pos": idx + s}
+        return _logits(params, dec[:, -1:], cfg), new_cache
+
+    x = _frontend(params, batch, cfg, dtype)
+    b, s, _ = x.shape
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)) + idx
+
+    if fam in ("dense", "vlm"):
+        flags = _is_global_flags(cfg, cfg.n_layers)
+
+        def body(carry, inp):
+            lp, is_g, kc, vc = inp
+            y, kv = _dense_block(lp, carry, cfg, q_pos=q_pos,
+                                 window=cfg.sliding_window, is_global=is_g,
+                                 cache=(kc, vc), cache_index=idx)
+            return y, kv
+
+        x, (ks, vs) = _scan(body, x, (params["layers"], flags, cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs, "pos": idx + s}
+
+    elif fam == "moe":
+        new_cache = dict(cache)
+        if cfg.n_dense_layers:
+            def dbody(carry, inp):
+                if cfg.mla:
+                    lp, c1, c2 = inp
+                    h, kv = nn.mla_attention(lp["attn"], nn.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                                             cfg, q_pos=q_pos, cache=(c1, c2), cache_index=idx)
+                else:
+                    lp, c1, c2 = inp
+                    h, kv = nn.attention(lp["attn"], nn.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                                         cfg, q_pos=q_pos, window=0, is_global=True,
+                                         cache=(c1, c2), cache_index=idx)
+                xx = carry + h
+                xx = xx + nn.mlp(lp["mlp"], nn.rms_norm(xx, lp["ln2"], cfg.norm_eps))
+                return xx, kv
+
+            keys = ("d_ckv", "d_kr") if cfg.mla else ("d_k", "d_v")
+            x, (c1s, c2s) = _scan(
+                dbody, x, (params["dense_layers"], cache[keys[0]], cache[keys[1]]))
+            new_cache[keys[0]], new_cache[keys[1]] = c1s, c2s
+
+        def body(carry, inp):
+            lp, c1, c2 = inp
+            xx, aux = carry
+            y, kv, a = _moe_block(lp, xx, cfg, q_pos=q_pos, cache=(c1, c2), cache_index=idx)
+            return (y, aux + a), kv
+
+        keys = ("ckv", "kr") if cfg.mla else ("k", "v")
+        (x, _), (c1s, c2s) = _scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], cache[keys[0]], cache[keys[1]]))
+        new_cache[keys[0]], new_cache[keys[1]] = c1s, c2s
+        new_cache["pos"] = idx + s
+
+    elif fam == "ssm":
+        # prefill for SSM = full-sequence scan, extracting the final state
+        fn = ssm.mamba2 if cfg.ssm == "mamba2" else ssm.mamba1
+
+        def body(carry, lp):
+            xln = nn.rms_norm(carry, lp["ln"], cfg.norm_eps)
+            y, st = fn(lp["ssm"], xln, cfg, None, return_state=True)
+            return carry + y, st
+
+        x, (convs, hs) = _scan(body, x, params["layers"])
+        new_cache = {"conv": convs.astype(cache["conv"].dtype), "h": hs,
+                     "pos": idx + s}
+
+    elif fam == "hybrid":
+        n_chunk = cfg.n_layers // cfg.attn_every
+        chunked = jax.tree.map(
+            lambda a: a.reshape((n_chunk, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+        fn = ssm.mamba2 if cfg.ssm == "mamba2" else ssm.mamba1
+
+        def inner(carry, lp):
+            xln = nn.rms_norm(carry, lp["ln"], cfg.norm_eps)
+            y, st = fn(lp["ssm"], xln, cfg, None, return_state=True)
+            return carry + y, st
+
+        def chunk_body(carry, inp):
+            cp, kc, vc = inp
+            y, sts = _scan(inner, carry, cp)
+            y, kv = _dense_block(shared, y, cfg, q_pos=q_pos, window=0,
+                                 is_global=True, cache=(kc, vc), cache_index=idx)
+            return y, (sts, kv)
+
+        x, (sts, kvs) = _scan(chunk_body, x, (chunked, cache["k"], cache["v"]))
+        convs, hs = sts
+        new_cache = {
+            "conv": convs.reshape(cache["conv"].shape).astype(cache["conv"].dtype),
+            "h": hs.reshape(cache["h"].shape),
+            "k": kvs[0], "v": kvs[1],
+            "pos": idx + s,
+        }
+
+    return _logits(params, x[:, -1:], cfg), new_cache
+
+
+def forward_decode(params, token, cfg: ModelConfig, cache):
+    """One decode step.  token: (B, 1) int32.  Returns (logits, cache)."""
+    dtype = params["final_norm"].dtype
+    fam = cfg.family
+    idx = cache["pos"]
+    x = _embed_tokens(params, token, cfg, dtype)
+    b = x.shape[0]
+    q_pos = jnp.full((b, 1), idx, jnp.int32)
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm"):
+        flags = _is_global_flags(cfg, cfg.n_layers)
+
+        def body(carry, inp):
+            lp, is_g, kc, vc = inp
+            y, kv = _dense_block(lp, carry, cfg, q_pos=q_pos,
+                                 window=cfg.sliding_window, is_global=is_g,
+                                 cache=(kc, vc), cache_index=idx)
+            return y, kv
+
+        x, (ks, vs) = _scan(body, x, (params["layers"], flags, cache["k"], cache["v"]))
+        new_cache.update(k=ks, v=vs)
+
+    elif fam == "moe":
+        if cfg.n_dense_layers:
+            def dbody(carry, inp):
+                lp, c1, c2 = inp
+                if cfg.mla:
+                    h, kv = nn.mla_attention(lp["attn"], nn.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                                             cfg, q_pos=q_pos, cache=(c1, c2), cache_index=idx)
+                else:
+                    h, kv = nn.attention(lp["attn"], nn.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                                         cfg, q_pos=q_pos, window=0, is_global=True,
+                                         cache=(c1, c2), cache_index=idx)
+                xx = carry + h
+                xx = xx + nn.mlp(lp["mlp"], nn.rms_norm(xx, lp["ln2"], cfg.norm_eps))
+                return xx, kv
+
+            keys = ("d_ckv", "d_kr") if cfg.mla else ("d_k", "d_v")
+            x, (c1s, c2s) = _scan(
+                dbody, x, (params["dense_layers"], cache[keys[0]], cache[keys[1]]))
+            new_cache[keys[0]], new_cache[keys[1]] = c1s, c2s
+
+        def body(carry, inp):
+            lp, c1, c2 = inp
+            xx, aux = carry
+            y, kv, a = _moe_block(lp, xx, cfg, q_pos=q_pos, cache=(c1, c2), cache_index=idx)
+            return (y, aux + a), kv
+
+        keys = ("ckv", "kr") if cfg.mla else ("k", "v")
+        (x, _), (c1s, c2s) = _scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], cache[keys[0]], cache[keys[1]]))
+        new_cache[keys[0]], new_cache[keys[1]] = c1s, c2s
+
+    elif fam == "ssm":
+        def body(carry, inp):
+            lp, conv_c, h_c = inp
+            y, st = _mamba_block(lp, carry, cfg, state=(conv_c, h_c))
+            return y, st
+
+        x, (convs, hs) = _scan(body, x, (params["layers"], cache["conv"], cache["h"]))
+        new_cache.update(conv=convs, h=hs)
+
+    elif fam == "hybrid":
+        n_chunk = cfg.n_layers // cfg.attn_every
+        chunked = jax.tree.map(
+            lambda a: a.reshape((n_chunk, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        conv_c = cache["conv"].reshape((n_chunk, cfg.attn_every) + cache["conv"].shape[1:])
+        h_c = cache["h"].reshape((n_chunk, cfg.attn_every) + cache["h"].shape[1:])
+        shared = params["shared_attn"]
+
+        def inner(carry, inp):
+            lp, cc, hh = inp
+            y, st = _mamba_block(lp, carry, cfg, state=(cc, hh))
+            return y, st
+
+        def chunk_body(carry, inp):
+            cp, cc, hh, kc, vc = inp
+            y, sts = _scan(inner, carry, (cp, cc, hh))
+            y, kv = _dense_block(shared, y, cfg, q_pos=q_pos, window=0,
+                                 is_global=True, cache=(kc, vc), cache_index=idx)
+            return y, (sts, kv)
+
+        x, (sts, kvs) = _scan(
+            chunk_body, x, (chunked, conv_c, h_c, cache["k"], cache["v"]))
+        convs, hs = sts
+        new_cache.update(
+            conv=convs.reshape(cache["conv"].shape),
+            h=hs.reshape(cache["h"].shape),
+            k=kvs[0], v=kvs[1],
+        )
+
+    elif fam == "encdec":
+        enc = cache["enc"].astype(dtype)
+
+        def body(carry, inp):
+            lp, kc, vc = inp
+            y, kv = _dense_block(lp, carry, cfg, q_pos=q_pos, window=0,
+                                 is_global=True, enc_out=enc,
+                                 cache=(kc, vc), cache_index=idx)
+            return y, kv
+
+        x, (ks, vs) = _scan(body, x, (params["dec_layers"], cache["k"], cache["v"]))
+        new_cache.update(k=ks, v=vs)
+
+    new_cache["pos"] = idx + 1
+    return _logits(params, x, cfg), new_cache

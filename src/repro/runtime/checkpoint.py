@@ -1,0 +1,92 @@
+"""Checkpoint / restore for fault tolerance.
+
+Two checkpoint families:
+
+* **Training state** (params + optimizer + step): flat-key npz per process
+  with step provenance and an atomic rename commit, so a node can die
+  mid-write without corrupting the latest checkpoint.  Restore validates
+  the tree structure against the abstract target.
+
+* **ERA construction state**: each completed *virtual tree* is a natural
+  recovery unit (the paper's groups are independent — §5); the scheduler
+  persists one record per finished group and recovery replays only the
+  remainder.  See ``runtime/scheduler.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree, *, step: int | None = None, meta: dict | None = None):
+    """Atomic checkpoint write (tmp file + rename)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blobs = _flatten_with_paths(tree)
+    payload = dict(blobs)
+    header = {"step": step, **(meta or {})}
+    payload["__meta__"] = np.frombuffer(json.dumps(header).encode(), dtype=np.uint8)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)  # file handle: numpy won't append ".npz"
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def restore(path: str, target_tree):
+    """Restore into the structure of ``target_tree`` (abstract ok)."""
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(bytes(data["__meta__"]).decode()) if "__meta__" in data else {}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    out = []
+    for pathk, leaf in leaves:
+        key = "/".join(_path_str(p) for p in pathk)
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = data[key]
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: shape {arr.shape} != expected {want}")
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target_tree), out)
+    return tree, meta
+
+
+def latest_step_path(ckpt_dir: str, prefix: str = "step_") -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best, best_step = None, -1
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(rf"{prefix}(\d+)\.npz", f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(ckpt_dir, f), int(m.group(1))
+    return best

@@ -1,0 +1,134 @@
+"""Logical-axis → mesh PartitionSpec rules (DP / TP / EP / SP).
+
+Every parameter Spec carries logical axis names (see ``models/nn.py``);
+this module maps them onto the physical mesh:
+
+* ``vocab / heads / kv_heads / mlp / experts / inner`` → the ``model`` axis
+  (TP for dense projections, EP for expert stacks, vocab-parallel embeddings)
+* batch dims of activations/caches → the data axes ``("pod", "data")``
+* long-context decode (batch=1) → KV-cache *sequence* dim over ``data`` (SP)
+
+A logical axis is only sharded when its size divides the mesh axis size —
+e.g. qwen3's 8 KV heads on a 16-way model axis stay replicated while its
+16 query heads shard.  This divisibility resolution is what lets one rule
+table serve all ten architectures.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axis (first match that divides wins)
+LOGICAL_RULES: dict[str | None, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": (),          # replicated: rows of weight matrices
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "kv_lora": (),
+    "inner": ("model",),
+    "layers": (),         # scan dim
+    None: (),
+}
+
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def spec_for(shape: tuple, axes: tuple, mesh: Mesh) -> P:
+    parts = []
+    used: set[str] = set()  # a mesh axis may appear at most once per spec
+    for dim, ax in zip(shape, axes):
+        chosen = None
+        for cand in LOGICAL_RULES.get(ax, ()):
+            sz = _mesh_axis_size(mesh, cand)
+            if sz and dim % sz == 0 and cand not in used:
+                chosen = cand
+                used.add(cand)
+                break
+        parts.append(chosen)
+    return P(*parts)
+
+
+def param_shardings(specs_tree, mesh: Mesh):
+    """Spec tree -> NamedSharding tree (same structure as params)."""
+    from repro.models.nn import Spec
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, mesh)),
+        specs_tree,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_sharding(mesh: Mesh, batch_size: int, ndim: int) -> NamedSharding:
+    """Shard the leading batch dim over the data axes (DP)."""
+    dp = dp_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    lead = dp if total and batch_size % total == 0 else ()
+    return NamedSharding(mesh, P(lead if lead else None, *([None] * (ndim - 1))))
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    """Sharding tree for an input batch (dict of ShapeDtypeStructs)."""
+    return jax.tree.map(
+        lambda x: batch_sharding(mesh, x.shape[0], len(x.shape)), batch_tree
+    )
+
+
+def cache_shardings(cfg, mesh: Mesh, cache_tree, *, seq_parallel: bool = False):
+    """Shardings for a decode cache.
+
+    Layout conventions (see transformer.init_cache):
+      attention KV   (L, B, S, KV, hd)   -> B→data, KV→model (if divisible)
+      MLA latents    (L, B, S, lora)     -> B→data
+      ssm conv state (L, B, K-1, di)     -> B→data, di→model
+      ssm h state    (L, B, …, N)        -> B→data, inner/heads→model
+      enc memory     (B, T, d)           -> B→data
+
+    ``seq_parallel=True`` (long_500k, batch=1): the cache *sequence* dim is
+    sharded over ``data`` instead (context/sequence parallelism); GSPMD
+    turns the decode attention into partial-softmax + all-reduce.
+    """
+    dp = dp_axes(mesh)
+    model_sz = _mesh_axis_size(mesh, "model")
+    dp_sz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(x):
+        shp = x.shape
+        if len(shp) == 0:  # pos scalar
+            return NamedSharding(mesh, P())
+        if len(shp) == 3 and shp[-1] == cfg.d_model:  # enc memory (B,T,d)
+            b_ax = dp if shp[0] % max(dp_sz, 1) == 0 and dp_sz > 1 else None
+            return NamedSharding(mesh, P(b_ax, None, None))
+        parts = [None] * len(shp)
+        # dim 1 is batch for stacked (L, B, ...) caches
+        if len(shp) >= 2:
+            if shp[1] % max(dp_sz, 1) == 0 and dp_sz > 1 and not seq_parallel:
+                parts[1] = dp
+            elif seq_parallel and len(shp) >= 3 and shp[2] % max(dp_sz, 1) == 0:
+                parts[2] = dp  # sequence dim of (L,B,S,…) caches
+        # last-but-one dim: KV heads / ssm channels; last dim: head/state
+        if len(shp) >= 4 and model_sz:
+            if shp[-2] % model_sz == 0:
+                parts[-2] = "model"
+            elif shp[-1] % model_sz == 0:
+                parts[-1] = "model"
+        elif len(shp) == 3 and model_sz and shp[-1] % model_sz == 0:
+            parts[-1] = "model"  # (L, B, lora) etc.
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

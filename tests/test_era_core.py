@@ -1,0 +1,190 @@
+"""ERA core correctness: paper worked example + oracle sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ref
+from repro.core.alphabet import DNA, ENGLISH, PROTEIN
+from repro.core.api import BuildReport, EraConfig, EraIndexer
+from repro.core.build import build_numpy, build_parallel, build_scan, nodes_to_intervals
+from repro.core.prepare import ElasticConfig, PrepareStats
+from repro.core.vertical import (
+    VerticalStats,
+    group_prefixes,
+    vertical_partition,
+    vertical_partition_grouped,
+)
+
+PAPER_S = "TGGTGGTGGTGCGGTGATGGTGC"  # Figure 2
+
+
+class TestPaperExample:
+    """The worked example of §4.2.2 (Table 1, Example 2, Figure 4/5)."""
+
+    def test_reference_lb_matches_paper(self):
+        s = DNA.encode(PAPER_S)
+        ell, b = ref.era_reference_lb(s, DNA.encode("TG", terminate=False))
+        assert list(ell) == [14, 9, 20, 6, 17, 3, 0]
+        sym = DNA.char_of
+        decoded = [(sym(c1), sym(c2), off) for c1, c2, off in b]
+        assert decoded == [("A", "C", 2), ("G", "$", 3), ("C", "G", 2),
+                           ("G", "$", 6), ("C", "G", 5), ("C", "G", 8)]
+
+    def test_prepare_matches_paper(self):
+        """SubTreePrepare on T_TG reproduces Example 2's final trace."""
+        from repro.core.prepare import subtree_prepare
+        from repro.core.vertical import SubTreePrefix, VirtualTree
+
+        s = DNA.encode(PAPER_S)
+        p = DNA.encode("TG", terminate=False)
+        pos = ref.prefix_positions(s, p)
+        vt = VirtualTree(prefixes=[SubTreePrefix(
+            symbols=tuple(int(x) for x in p), freq=len(pos), positions=pos)])
+        s_pad = jnp.asarray(DNA.pad_string(s, extra=64))
+        state = subtree_prepare(s_pad, vt, capacity=8,
+                                cfg=ElasticConfig(r_budget_symbols=28, w_min=4, w_max=16))
+        assert list(np.asarray(state.L)[:7]) == [14, 9, 20, 6, 17, 3, 0]
+        assert list(np.asarray(state.b_off)[1:7]) == [2, 3, 2, 6, 5, 8]
+        sym = DNA.char_of
+        c1 = [sym(int(c)) for c in np.asarray(state.b_c1)[1:7]]
+        c2 = [sym(int(c)) for c in np.asarray(state.b_c2)[1:7]]
+        assert c1 == ["A", "G", "C", "G", "C", "C"]
+        assert c2 == ["C", "$", "G", "$", "G", "G"]
+
+    def test_paper_frequency_claims(self):
+        """§4.1: f_TG = 7; extending TG gives f_TGA=1, f_TGC=2, f_TGG=4."""
+        s = DNA.encode(PAPER_S)
+        assert ref.prefix_frequency(s, DNA.encode("TG", terminate=False)) == 7
+        assert ref.prefix_frequency(s, DNA.encode("TGA", terminate=False)) == 1
+        assert ref.prefix_frequency(s, DNA.encode("TGC", terminate=False)) == 2
+        assert ref.prefix_frequency(s, DNA.encode("TGG", terminate=False)) == 4
+        assert ref.prefix_frequency(s, DNA.encode("TGT", terminate=False)) == 0
+
+
+class TestVerticalPartitioning:
+    @pytest.mark.parametrize("strategy", ["histogram", "positions"])
+    def test_matches_bruteforce(self, strategy):
+        s = DNA.random_string(300, seed=1)
+        want = {p: f for p, f in ref.vertical_partition_ref(s, DNA.base, f_max=20)}
+        got = vertical_partition(s, DNA.base, 20, strategy=strategy)
+        got_map = {p.symbols: p.freq for p in got}
+        assert got_map == want
+        for p in got:  # position lists must be exact
+            assert np.array_equal(p.positions,
+                                  ref.prefix_positions(s, np.array(p.symbols, np.uint8)))
+
+    def test_partition_covers_all_suffixes(self):
+        s = PROTEIN.random_string(500, seed=2)
+        parts = vertical_partition(s, PROTEIN.base, 30)
+        assert sum(p.freq for p in parts) == len(s)
+
+    def test_grouping_respects_budget_and_is_exhaustive(self):
+        s = DNA.random_string(800, seed=3)
+        parts = vertical_partition(s, DNA.base, 25)
+        groups = group_prefixes(parts, 25)
+        assert sum(len(g.prefixes) for g in groups) == len(parts)
+        for g in groups:
+            assert g.total_freq <= 25
+        # FFD should beat one-group-per-prefix substantially
+        assert len(groups) < len(parts)
+
+    def test_strategies_agree(self):
+        s = ENGLISH.random_string(400, seed=4)
+        a = {p.symbols: p.freq for p in vertical_partition(s, ENGLISH.base, 15, strategy="histogram")}
+        b = {p.symbols: p.freq for p in vertical_partition(s, ENGLISH.base, 15, strategy="positions")}
+        assert a == b
+
+
+class TestPrepare:
+    @pytest.mark.parametrize("alpha,n,fmax,r", [
+        (DNA, 400, 24, 64), (PROTEIN, 300, 16, 32), (ENGLISH, 350, 12, 256)])
+    def test_lb_matches_oracle(self, alpha, n, fmax, r):
+        s = alpha.random_string(n, seed=n)
+        idx = EraIndexer(alpha, EraConfig(memory_bytes=fmax * 32, r_bytes=r,
+                                          build_impl="none")).build(s)
+        for prefix, st in list(idx.subtrees.items())[:20]:
+            ell_ref, b_ref = ref.era_reference_lb(s, np.array(prefix, np.uint8))
+            assert np.array_equal(st.ell, ell_ref), prefix
+            got = [(int(st.b_c1[i]), int(st.b_c2[i]), int(st.b_off[i]))
+                   for i in range(1, len(ell_ref))]
+            assert got == b_ref, prefix
+
+    def test_elastic_equals_static_results(self):
+        """Elastic range changes I/O, never results (paper Fig. 9b ablation)."""
+        s = DNA.random_string(600, seed=9)
+        kw = dict(memory_bytes=2048, build_impl="none")
+        ela = EraIndexer(DNA, EraConfig(r_bytes=128, elastic=True, **kw)).build(s)
+        sta = EraIndexer(DNA, EraConfig(r_bytes=128, elastic=False, static_w=16, **kw)).build(s)
+        assert set(ela.subtrees) == set(sta.subtrees)
+        for p in ela.subtrees:
+            assert np.array_equal(ela.subtrees[p].ell, sta.subtrees[p].ell)
+            assert np.array_equal(ela.subtrees[p].b_off, sta.subtrees[p].b_off)
+
+    def test_elastic_range_grows(self):
+        s = DNA.random_string(2000, seed=5)
+        stats = PrepareStats()
+        rep = BuildReport(VerticalStats(), stats)
+        EraIndexer(DNA, EraConfig(memory_bytes=8192, r_bytes=512,
+                                  build_impl="none")).build(s, rep)
+        # as areas resolve, later ranges must be >= earlier ones on average
+        assert max(stats.ranges) > min(stats.ranges)
+        assert stats.active_history[0] >= stats.active_history[-1]
+
+
+class TestBuilders:
+    @pytest.mark.parametrize("n,seed", [(30, 0), (80, 1), (200, 2)])
+    def test_all_builders_match_interval_oracle(self, n, seed):
+        s = DNA.random_string(n, seed=seed)
+        sa = ref.suffix_array(s)
+        lcp = ref.lcp_array(s, sa)
+        b = lcp.astype(np.int32)
+        b[0] = 0
+        want = ref.tree_intervals(b, len(sa))
+        assert nodes_to_intervals(build_numpy(sa.astype(np.int32), b, len(s))) == want
+        assert nodes_to_intervals(
+            build_scan(jnp.asarray(sa, jnp.int32), jnp.asarray(b), len(s))) == want
+        assert nodes_to_intervals(
+            build_parallel(jnp.asarray(sa, jnp.int32), jnp.asarray(b), len(s))) == want
+
+    def test_internal_nodes_bounded_by_leaves(self):
+        """Paper §4.1: #internal nodes == #leaves (bound used for Eq. 1)."""
+        s = DNA.random_string(150, seed=3)
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=1024, build_impl="numpy")).build(s)
+        for st in idx.subtrees.values():
+            n_int = int(st.nodes.n_nodes) - int(st.nodes.n_leaves)
+            assert n_int <= max(1, st.freq)
+
+
+class TestEndToEnd:
+    @pytest.mark.parametrize("alpha,n", [(DNA, 500), (PROTEIN, 400), (ENGLISH, 300)])
+    def test_queries_match_bruteforce(self, alpha, n):
+        s = alpha.random_string(n, seed=n + 7)
+        idx = EraIndexer(alpha, EraConfig(memory_bytes=4096, r_bytes=128)).build(s)
+        assert idx.n_leaves == len(s)
+        rng = np.random.default_rng(0)
+        for _ in range(15):
+            m = int(rng.integers(1, 7))
+            i = int(rng.integers(0, len(s) - m))
+            pat = s[i : i + m]
+            want = ref.occurrences(s, pat)
+            assert np.array_equal(idx.find(pat), want)
+            assert np.array_equal(idx.find_walk(pat), want)
+
+    def test_absent_patterns(self):
+        s = DNA.random_string(200, seed=11)
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=2048)).build(s)
+        for q in range(8):
+            pat = DNA.random_string(9, seed=500 + q)[:-1]
+            assert np.array_equal(idx.find(pat), ref.occurrences(s, pat))
+
+    def test_save_load_roundtrip(self, tmp_path):
+        s = DNA.random_string(200, seed=13)
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=2048, build_impl="none")).build(s)
+        p = str(tmp_path / "index.npz")
+        idx.save(p)
+        from repro.core.suffix_tree import SuffixTreeIndex
+        idx2 = SuffixTreeIndex.load(p, DNA)
+        assert set(idx2.subtrees) == set(idx.subtrees)
+        pat = s[10:14]
+        assert np.array_equal(idx2.find(pat), idx.find(pat))

@@ -1,0 +1,104 @@
+"""Flash-attention kernel + 2-bit packed ERA path (the §Perf changes)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention
+
+
+def ref_attn(q, k, v, causal=True):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,kv,d,bq,bk,causal", [
+        (2, 128, 4, 2, 32, 32, 64, True),
+        (1, 256, 8, 8, 64, 64, 128, True),
+        (2, 128, 4, 1, 32, 64, 32, False),
+        (1, 64, 2, 2, 16, 16, 16, True),
+        (2, 96, 4, 4, 32, 32, 32, True),   # non-pow2 seq, blk divides
+    ])
+    def test_matches_reference(self, b, s, h, kv, d, bq, bk, causal):
+        rng = np.random.default_rng(s * h)
+        q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+        got = flash_attention(q, k, v, causal=causal, blk_q=bq, blk_k=bk,
+                              interpret=True)
+        want = ref_attn(q, k, v, causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=2e-5)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.bfloat16)
+        got = flash_attention(q, k, v, blk_q=32, blk_k=64, interpret=True)
+        want = ref_attn(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                                   rtol=0.05, atol=0.05)
+
+
+class TestPackedPath:
+    def test_gather_extraction(self):
+        rng = np.random.default_rng(0)
+        n = 1000
+        s = rng.integers(0, 4, size=n).astype(np.uint8)
+        words = kref.pack_string_2bit(jnp.asarray(s))
+        offs = rng.integers(0, n - 200, size=23).astype(np.int32)
+        w = 64
+        packed = np.asarray(kref.packed_gather_ref(words, jnp.asarray(offs), w))
+        for i, off in enumerate(offs):
+            got = [(int(word) >> (30 - 2 * k)) & 3
+                   for word in packed[i] for k in range(16)]
+            assert got == s[off:off + w].tolist()
+
+    def test_lcp_matches_symbols(self):
+        rng = np.random.default_rng(1)
+        n = 600
+        s = rng.integers(0, 4, size=n).astype(np.uint8)
+        words = kref.pack_string_2bit(jnp.asarray(s))
+        a_off = rng.integers(0, n - 100, size=31).astype(np.int32)
+        b_off = rng.integers(0, n - 100, size=31).astype(np.int32)
+        w = 32
+        A = kref.packed_gather_ref(words, jnp.asarray(a_off), w)
+        B = kref.packed_gather_ref(words, jnp.asarray(b_off), w)
+        lcp, c1, c2 = (np.asarray(x) for x in kref.lcp_pairs_packed_ref(A, B, w))
+        for i in range(31):
+            sa, sb = s[a_off[i]:a_off[i] + w], s[b_off[i]:b_off[i] + w]
+            l = 0
+            while l < w and sa[l] == sb[l]:
+                l += 1
+            assert lcp[i] == l
+            if l < w:
+                assert (c1[i], c2[i]) == (sa[l], sb[l])
+
+    def test_packed_key_order_is_lexicographic(self):
+        rng = np.random.default_rng(2)
+        n = 500
+        s = rng.integers(0, 4, size=n).astype(np.uint8)
+        words = kref.pack_string_2bit(jnp.asarray(s))
+        offs = rng.integers(0, n - 80, size=40).astype(np.int32)
+        keys = np.asarray(kref.packed_gather_ref(words, jnp.asarray(offs), 32),
+                          dtype=np.uint32)
+        for i in range(39):
+            sa = tuple(s[offs[i]:offs[i] + 32])
+            sb = tuple(s[offs[i + 1]:offs[i + 1] + 32])
+            ka, kb = tuple(keys[i]), tuple(keys[i + 1])
+            assert (sa < sb) == (ka < kb) or sa == sb

@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles, interpret=True, shape/dtype sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.kmer_histogram import kmer_histogram
+from repro.kernels.lcp import lcp_pairs
+from repro.kernels.range_gather import range_gather_pack
+
+
+class TestRangeGatherPack:
+    @pytest.mark.parametrize("n,f,w,tile", [
+        (100, 7, 4, 32), (1000, 33, 16, 64), (5000, 128, 64, 256),
+        (300, 5, 32, 32), (257, 64, 8, 128), (4096, 256, 128, 512),
+    ])
+    def test_matches_ref(self, n, f, w, tile):
+        rng = np.random.default_rng(n + f)
+        s = rng.integers(0, 5, size=n).astype(np.uint8)
+        s[-1] = 4
+        offs = rng.integers(0, n, size=f).astype(np.int32)
+        got = range_gather_pack(jnp.asarray(s), jnp.asarray(offs), w,
+                                tile=tile, interpret=True)
+        want = kref.range_gather_pack_ref(jnp.asarray(s), jnp.asarray(offs), w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("dtype", [np.uint8, np.int32])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(0)
+        s = rng.integers(0, 21, size=500).astype(dtype)
+        s[-1] = 20
+        offs = rng.integers(0, 480, size=17).astype(np.int32)
+        got = range_gather_pack(jnp.asarray(s), jnp.asarray(offs), 16,
+                                tile=64, interpret=True)
+        want = kref.range_gather_pack_ref(jnp.asarray(s), jnp.asarray(offs), 16)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_tile_boundary_straddle(self):
+        """Reads crossing the tile boundary must see both tiles."""
+        tile = 32
+        s = np.arange(128, dtype=np.int32) % 27
+        offs = np.array([tile - 1, tile - 3, 2 * tile - 2], np.int32)
+        got = range_gather_pack(jnp.asarray(s), jnp.asarray(offs), 8,
+                                tile=tile, interpret=True)
+        want = kref.range_gather_pack_ref(jnp.asarray(s), jnp.asarray(offs), 8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestKmerHistogram:
+    @pytest.mark.parametrize("n,k,base,tile", [
+        (100, 1, 5, 32), (1000, 2, 5, 64), (4000, 3, 5, 128),
+        (900, 2, 21, 64), (333, 1, 27, 32), (2048, 4, 5, 256),
+    ])
+    def test_matches_ref(self, n, k, base, tile):
+        rng = np.random.default_rng(n * k)
+        s = rng.integers(0, base - 1, size=n).astype(np.uint8)
+        s[-1] = base - 1
+        sp = np.concatenate([s, np.full(k + 2, base - 1, np.uint8)])
+        got = kmer_histogram(jnp.asarray(sp), n, k, base, tile=tile, interpret=True)
+        want = kref.kmer_histogram_ref(jnp.asarray(sp), n, k, base)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_total_count_equals_windows(self):
+        n, k, base = 777, 2, 5
+        rng = np.random.default_rng(5)
+        sp = np.concatenate([rng.integers(0, 4, size=n).astype(np.uint8),
+                             np.full(k + 2, 4, np.uint8)])
+        got = kmer_histogram(jnp.asarray(sp), n, k, base, tile=64, interpret=True)
+        assert int(np.asarray(got).sum()) == n
+
+
+class TestLcpPairs:
+    @pytest.mark.parametrize("f,w,blk", [(7, 4, 32), (50, 16, 32), (333, 32, 64),
+                                          (128, 64, 128)])
+    def test_matches_ref(self, f, w, blk):
+        rng = np.random.default_rng(f * w)
+        a = rng.integers(0, 2**25, size=(f, w // 4)).astype(np.int32)
+        b = np.where(rng.random((f, w // 4)) < 0.5,
+                     rng.integers(0, 2**25, size=(f, w // 4)).astype(np.int32), a)
+        got = lcp_pairs(jnp.asarray(a), jnp.asarray(b), w, blk=blk, interpret=True)
+        want = kref.lcp_pairs_ref(jnp.asarray(a), jnp.asarray(b), w)
+        for g, x in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
+
+    def test_identical_rows(self):
+        a = np.full((9, 4), 12345, np.int32)
+        lcp, c1, c2 = lcp_pairs(jnp.asarray(a), jnp.asarray(a), 16, blk=16,
+                                interpret=True)
+        assert (np.asarray(lcp) == 16).all()
+        assert (np.asarray(c1) == 0).all() and (np.asarray(c2) == 0).all()
+
+
+class TestPipelineWithKernels:
+    def test_era_identical_under_pallas(self, monkeypatch):
+        """The full ERA pipeline must be bit-identical with Pallas kernels."""
+        monkeypatch.setenv("REPRO_KERNELS", "jnp")
+        from repro.core.alphabet import DNA
+        from repro.core.api import EraConfig, EraIndexer
+
+        s = DNA.random_string(300, seed=21)
+        cfg = EraConfig(memory_bytes=2048, r_bytes=128, build_impl="none")
+        a = EraIndexer(DNA, cfg).build(s)
+        monkeypatch.setenv("REPRO_KERNELS", "pallas")
+        b = EraIndexer(DNA, cfg).build(s)
+        assert set(a.subtrees) == set(b.subtrees)
+        for p in a.subtrees:
+            np.testing.assert_array_equal(a.subtrees[p].ell, b.subtrees[p].ell)
+            np.testing.assert_array_equal(a.subtrees[p].b_off, b.subtrees[p].b_off)

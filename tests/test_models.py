@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train / prefill / decode step on CPU, shape + NaN assertions, and
+prefill→decode vs full-forward consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import steps as step_lib
+from repro.models import transformer as T
+from repro.models.config import SHAPES, ShapeConfig, smoke_config
+from repro.models.registry import (
+    ARCHS, cell_is_runnable, concrete_inputs, get_config, input_specs)
+from repro.optim import adamw
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", "train", 16, 2)
+SMOKE_PRE = ShapeConfig("smoke_pre", "prefill", 16, 2)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestArchSmoke:
+    def test_forward_train(self, arch, rng):
+        cfg = smoke_config(get_config(arch))
+        params = T.init_params(rng, cfg, jnp.float32)
+        batch = concrete_inputs(cfg, SMOKE_TRAIN, dtype=jnp.float32)
+        logits, aux = jax.jit(lambda p, b: T.forward_train(p, b, cfg))(params, batch)
+        assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+        assert not bool(jnp.isnan(logits).any())
+        assert not bool(jnp.isnan(aux).any())
+
+    def test_train_step_updates_params(self, arch, rng):
+        cfg = smoke_config(get_config(arch))
+        params = T.init_params(rng, cfg, jnp.float32)
+        opt = adamw.init(params)
+        batch = concrete_inputs(cfg, SMOKE_TRAIN, dtype=jnp.float32)
+        step = jax.jit(step_lib.make_train_step(cfg, adamw.AdamWConfig(lr=1e-3)))
+        new_params, new_opt, metrics = step(params, opt, batch)
+        assert float(metrics["loss"]) > 0 and np.isfinite(float(metrics["loss"]))
+        # at least one leaf must actually change
+        changed = jax.tree.reduce(
+            lambda a, b: a or b,
+            jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, new_params))
+        assert changed
+        assert int(new_opt.step) == 1
+
+    def test_prefill_then_decode(self, arch, rng):
+        cfg = smoke_config(get_config(arch))
+        params = T.init_params(rng, cfg, jnp.float32)
+        cache = T.init_cache(cfg, 2, 32, dtype=jnp.float32)
+        pre = concrete_inputs(cfg, SMOKE_PRE, dtype=jnp.float32)
+        logits, cache = jax.jit(lambda p, b, c: T.forward_prefill(p, b, cfg, c))(
+            params, pre, cache)
+        assert not bool(jnp.isnan(logits).any())
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        logits2, cache = jax.jit(lambda p, t, c: T.forward_decode(p, t, cfg, c))(
+            params, tok, cache)
+        assert logits2.shape == (2, 1, cfg.vocab)
+        assert not bool(jnp.isnan(logits2).any())
+        assert int(cache["pos"]) == 17
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "falcon-mamba-7b", "gemma3-4b",
+                                  "deepseek-v2-236b", "zamba2-2.7b"])
+def test_decode_consistent_with_full_forward(arch):
+    """Prefill(t0..t14) + decode(t15) must equal train logits at pos 15."""
+    cfg = smoke_config(get_config(arch))
+    params = T.init_params(jax.random.PRNGKey(1), cfg, jnp.float32)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 16), dtype=np.int32))
+
+    full, _ = T.forward_train(params, {"tokens": toks}, cfg, remat=False)
+
+    cache = T.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    _, cache = T.forward_prefill(params, {"tokens": toks[:, :15]}, cfg, cache)
+    dec, _ = T.forward_decode(params, toks[:, 15:16], cfg, cache)
+
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0]), np.asarray(full[:, 15]), rtol=2e-4, atol=2e-4)
+
+
+def test_cell_matrix_covers_40():
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if cell_is_runnable(get_config(c[0]), SHAPES[c[1]])[0]]
+    skipped = [c for c in cells if c not in runnable]
+    # long_500k runs only for ssm/hybrid per DESIGN.md
+    assert {a for a, s in skipped if s == "long_500k"} == {
+        "qwen3-1.7b", "qwen1.5-32b", "gemma3-4b", "qwen3-14b",
+        "seamless-m4t-medium", "phi3.5-moe-42b-a6.6b", "deepseek-v2-236b",
+        "internvl2-2b"}
+    assert len(runnable) == 32
+
+
+def test_input_specs_all_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if not cell_is_runnable(cfg, shape)[0]:
+                continue
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs
+            for v in specs.values():
+                assert all(d > 0 for d in v.shape)
+
+
+def test_param_counts_sane():
+    """Rough N sanity vs the published sizes (within 2x)."""
+    expect = {"qwen3-1.7b": 1.7e9, "qwen1.5-32b": 32e9, "gemma3-4b": 4e9,
+              "qwen3-14b": 14e9, "falcon-mamba-7b": 7e9, "zamba2-2.7b": 2.7e9,
+              "phi3.5-moe-42b-a6.6b": 42e9, "deepseek-v2-236b": 236e9,
+              "internvl2-2b": 2e9}
+    for arch, want in expect.items():
+        n = get_config(arch).param_count()
+        assert want / 2.2 < n < want * 2.2, (arch, n, want)
+    # MoE active < total
+    ds = get_config("deepseek-v2-236b")
+    assert ds.active_param_count() < 0.2 * ds.param_count()

@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref
+from repro.core.alphabet import DNA, PROTEIN
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.prepare import pack_words
+from repro.kernels.ref import pack_words_ref
+from repro.runtime.scheduler import WorkQueue
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def dna_strings(draw, min_n=4, max_n=120):
+    n = draw(st.integers(min_n, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return DNA.random_string(n, seed=seed)
+
+
+class TestSuffixTreeInvariants:
+    @given(s=dna_strings())
+    @settings(**SETTINGS)
+    def test_every_suffix_is_a_leaf_exactly_once(self, s):
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=512, r_bytes=64,
+                                        build_impl="none")).build(s)
+        leaves = np.concatenate([st_.ell for st_ in idx.subtrees.values()])
+        assert sorted(leaves.tolist()) == list(range(len(s)))
+
+    @given(s=dna_strings())
+    @settings(**SETTINGS)
+    def test_leaves_lexicographically_sorted(self, s):
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=512, r_bytes=64,
+                                        build_impl="none")).build(s)
+        for st_ in idx.subtrees.values():
+            suf = [tuple(int(c) for c in s[i:]) for i in st_.ell]
+            assert suf == sorted(suf)
+
+    @given(s=dna_strings())
+    @settings(**SETTINGS)
+    def test_b_offsets_at_least_prefix_len(self, s):
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=512, r_bytes=64,
+                                        build_impl="none")).build(s)
+        for p, st_ in idx.subtrees.items():
+            for i in range(1, st_.freq):
+                assert st_.b_off[i] >= len(p)
+
+    @given(s=dna_strings(min_n=8), data=st.data())
+    @settings(**SETTINGS)
+    def test_find_matches_bruteforce(self, s, data):
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=1024, r_bytes=64)).build(s)
+        m = data.draw(st.integers(1, 5))
+        i = data.draw(st.integers(0, len(s) - 1 - m))
+        pat = s[i : i + m]
+        want = ref.occurrences(s, pat)
+        assert np.array_equal(idx.find(pat), want)
+        assert np.array_equal(idx.find_walk(pat), want)
+
+
+class TestPackingOrder:
+    @given(st.data())
+    @settings(**SETTINGS)
+    def test_packed_int_order_is_lexicographic(self, data):
+        """The whole sort correctness rests on this isomorphism."""
+        w = data.draw(st.sampled_from([4, 8, 16]))
+        a = np.array(data.draw(st.lists(st.integers(0, 27), min_size=w, max_size=w)),
+                     np.uint8)
+        b = np.array(data.draw(st.lists(st.integers(0, 27), min_size=w, max_size=w)),
+                     np.uint8)
+        pa = np.asarray(pack_words(jnp.asarray(a[None]))).tolist()[0]
+        pb = np.asarray(pack_words(jnp.asarray(b[None]))).tolist()[0]
+        assert (tuple(a) < tuple(b)) == (pa < pb)
+        assert (tuple(a) == tuple(b)) == (pa == pb)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**SETTINGS)
+    def test_pack_impls_agree(self, seed):
+        rng = np.random.default_rng(seed)
+        sym = rng.integers(0, 27, size=(5, 16)).astype(np.uint8)
+        np.testing.assert_array_equal(
+            np.asarray(pack_words(jnp.asarray(sym))),
+            np.asarray(pack_words_ref(jnp.asarray(sym))))
+
+
+class TestSchedulerInvariants:
+    @given(costs=st.lists(st.integers(1, 100), min_size=1, max_size=40),
+           fail_at=st.integers(0, 5), seed=st.integers(0, 1000))
+    @settings(**SETTINGS)
+    def test_all_tasks_complete_despite_failures(self, costs, fail_at, seed):
+        rng = np.random.default_rng(seed)
+        q = WorkQueue()
+        q.add_tasks(costs)
+        workers = ["a", "b", "c"]
+        dead = set()
+        pulls = 0
+        while not q.drained:
+            alive = [w for w in workers if w not in dead] or ["z"]
+            w = alive[int(rng.integers(0, len(alive)))]
+            t = q.pull(w)
+            if t is None:
+                for d in list(dead):
+                    q.mark_failed(d)
+                continue
+            pulls += 1
+            if pulls == fail_at and len(dead) < 2:
+                dead.add(w)
+                q.mark_failed(w)
+                continue
+            q.complete(t.task_id, worker=w, elapsed_s=0.01 * t.cost)
+        st_ = q.stats()
+        assert st_["done"] == len(costs)
+
+    @given(costs=st.lists(st.integers(1, 50), min_size=2, max_size=30))
+    @settings(**SETTINGS)
+    def test_largest_first_dispatch(self, costs):
+        q = WorkQueue()
+        q.add_tasks(costs)
+        seen = []
+        while True:
+            t = q.pull("w")
+            if t is None:
+                break
+            seen.append(t.cost)
+            q.complete(t.task_id, worker="w")
+        assert seen == sorted(costs, reverse=True)

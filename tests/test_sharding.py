@@ -1,0 +1,105 @@
+"""Sharding rules + tiny-mesh lowering checks (1 device; the 512-device
+pass is the dry-run deliverable, run via repro.launch.dryrun)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.launch import steps as step_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.models.config import ShapeConfig, smoke_config
+from repro.models.registry import concrete_inputs, get_config
+from repro.optim import adamw
+
+
+def fake_mesh(shape=(4, 8), axes=("data", "model")):
+    """An abstract mesh for rule checks (no devices needed for specs)."""
+    import types
+    m = types.SimpleNamespace()
+    m.axis_names = axes
+    m.shape = dict(zip(axes, shape))
+    m.size = int(np.prod(shape))
+    return m
+
+
+class TestRules:
+    def test_divisible_dims_shard(self):
+        m = fake_mesh()
+        assert shd.spec_for((1024, 16, 128), ("embed", "heads", "head"), m) == P(None, "model", None)
+        assert shd.spec_for((151936, 2048), ("vocab", "embed"), m) == P("model", None)
+
+    def test_indivisible_dims_replicate(self):
+        m = fake_mesh((4, 16))
+        # 8 kv heads on a 16-way model axis: replicate
+        assert shd.spec_for((1024, 8, 128), ("embed", "kv_heads", "head"), m) == P(None, None, None)
+
+    def test_no_duplicate_mesh_axes(self):
+        m = fake_mesh()
+        spec = shd.spec_for((16, 1024, 6400), ("experts", "embed", "mlp"), m)
+        used = [s for s in spec if s is not None]
+        assert len(used) == len(set(used))
+        assert spec[0] == "model"  # EP wins over TP for expert stacks
+
+    def test_param_shardings_cover_tree(self):
+        cfg = get_config("phi3.5-moe-42b-a6.6b")
+        m = fake_mesh((16, 16))
+        specs = T.model_specs(cfg)
+        from repro.models.nn import Spec
+        leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, Spec))
+        assert len(leaves) > 10
+        for s in leaves:
+            p = shd.spec_for(s.shape, s.axes, m)
+            assert len(p) == len(s.shape)
+
+
+class TestHostMeshLowering:
+    """End-to-end lowering on the 1-device host mesh (structure checks)."""
+
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "phi3.5-moe-42b-a6.6b",
+                                      "falcon-mamba-7b"])
+    def test_train_step_lowers_with_shardings(self, arch):
+        cfg = smoke_config(get_config(arch))
+        mesh = make_host_mesh()
+        specs = T.model_specs(cfg)
+        p_sh = shd.param_shardings(specs, mesh)
+        params = T.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+        opt = adamw.init(params)
+        batch = concrete_inputs(cfg, ShapeConfig("s", "train", 16, 2), dtype=jnp.float32)
+        step = step_lib.make_train_step(cfg, adamw.AdamWConfig())
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(p_sh, None, None)).lower(params, opt, batch)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            assert cost.get("flops", 0) > 0
+
+    def test_decode_step_lowers_with_cache_shardings(self):
+        cfg = smoke_config(get_config("qwen3-1.7b"))
+        mesh = make_host_mesh()
+        cache = T.init_cache(cfg, 2, 32, dtype=jnp.float32)
+        c_sh = shd.cache_shardings(cfg, mesh, cache)
+        params = T.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+        step = step_lib.make_decode_step(cfg)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(None, None, c_sh)).lower(params, tok, cache)
+            lowered.compile()
+
+
+class TestCacheShardings:
+    def test_kv_cache_rules(self):
+        cfg = get_config("qwen3-14b")
+        m = fake_mesh((16, 16))
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 1024))
+
+        # emulate NamedSharding via spec_for logic by calling cache_shardings
+        # with a real 1-device mesh is covered above; here check decode dims
+        # divisibility logic stays sound for B=128 over 16 and kv=8 over 16.
+        dp = 16
+        assert 128 % dp == 0      # batch shards
+        assert 8 % 16 != 0        # kv heads replicate
