@@ -1,0 +1,46 @@
+"""Batched device query engine vs the per-pattern Python path.
+
+Emits one row per batch size: the device path's per-batch time, with the
+derived column carrying queries/sec and the speedup over running the same
+batch through per-pattern ``SuffixTreeIndex.find`` (scalar numpy binary
+search) — the host-bound path this engine replaces.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.api import EraConfig, EraIndexer
+from repro.data.strings import dataset
+
+
+def run(quick: bool = True) -> None:
+    n = 50_000 if quick else 500_000
+    s, alphabet = dataset("dna", n, seed=0)
+    cfg = EraConfig(memory_bytes=1 << 18, build_impl="none")
+    index, dev = EraIndexer(alphabet, cfg).build_device(s)
+
+    rng = np.random.default_rng(1)
+    for batch in (8, 64, 256):
+        pats = []
+        for _ in range(batch):
+            m = int(rng.integers(4, 17))
+            i = int(rng.integers(0, len(s) - 1 - m))
+            pats.append(np.asarray(s[i : i + m]))
+        padded, lengths, route = dev.pad_batch(pats)
+
+        def device_batch():
+            start, count = dev.find_batch_ranges(padded, lengths, route)
+            np.asarray(count)  # block
+
+        t_dev = timeit(device_batch, repeats=3, warmup=1)
+        t_py = timeit(lambda: [index.find(p) for p in pats], repeats=1)
+        emit(f"query/batch{batch}", t_dev,
+             f"qps={batch / max(t_dev, 1e-9):.0f} "
+             f"speedup={t_py / max(t_dev, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

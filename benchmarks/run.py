@@ -9,6 +9,7 @@
   fig11  bench_alphabet     alphabet sensitivity
   tbl3   bench_scaling      strong/weak scaling (scheduler busy-time model)
   roofl  bench_roofline     dry-run roofline table (reads experiments/dryrun.json)
+  query  bench_query        batched device query engine vs per-pattern Python
 
 ``python -m benchmarks.run``            — quick pass over everything
 ``python -m benchmarks.run --full``     — paper-scale (slower) settings
@@ -33,6 +34,7 @@ def main() -> None:
         bench_baselines,
         bench_elastic,
         bench_horizontal,
+        bench_query,
         bench_roofline,
         bench_rtuning,
         bench_scaling,
@@ -48,6 +50,7 @@ def main() -> None:
         "fig11": bench_alphabet.run,
         "tbl3": bench_scaling.run,
         "roofline": bench_roofline.run,
+        "query": bench_query.run,
     }
     print("name,us_per_call,derived")
     for key, fn in suites.items():

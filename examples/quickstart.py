@@ -48,6 +48,14 @@ def main():
     assert np.array_equal(hits, hits2)
     print("tree-walk search agrees ✓")
 
+    # 5. batched device path: a whole list of patterns resolves with one
+    #    routing gather + vectorized binary search (repro.core.query)
+    batch = [s[i : i + 8] for i in (100, 2_000, 30_000)] + [pattern]
+    batch_hits = idx.find_batch(batch)
+    assert np.array_equal(batch_hits[-1], hits)
+    print(f"batched device search agrees ✓ "
+          f"({[len(h) for h in batch_hits]} hits per pattern)")
+
 
 if __name__ == "__main__":
     main()

@@ -80,5 +80,9 @@ class Alphabet:
 DNA = Alphabet("dna", "ACGT")
 PROTEIN = Alphabet("protein", "ACDEFGHIKLMNPQRSTVWY")
 ENGLISH = Alphabet("english", "abcdefghijklmnopqrstuvwxyz")
+# Raw bytes 0..254 (terminal = 255): indexes arbitrary binary data.  Codes
+# above 127 reach the sign bit of packed int32 words, which is why every
+# packed-word sort/comparison runs unsigned (see repro.core.packing).
+BYTE = Alphabet("byte", "".join(chr(i) for i in range(255)))
 
-ALPHABETS = {a.name: a for a in (DNA, PROTEIN, ENGLISH)}
+ALPHABETS = {a.name: a for a in (DNA, PROTEIN, ENGLISH, BYTE)}

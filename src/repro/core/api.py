@@ -5,7 +5,10 @@ BuildSubTree → assembled :class:`SuffixTreeIndex`.
 
 The parallel drivers (shared-memory / shared-nothing analogues) live in
 :mod:`repro.launch.era_run`; they reuse exactly these stages, distributing
-groups over devices/workers.
+groups over devices/workers.  The serving-side counterpart is
+:meth:`EraIndexer.build_device` / :meth:`SuffixTreeIndex.to_device`, which
+flatten the finished index into the device-resident batched query engine
+(:mod:`repro.core.query`) driven by :mod:`repro.launch.query_serve`.
 """
 
 from __future__ import annotations
@@ -162,3 +165,11 @@ class EraIndexer:
         report.t_build = time.perf_counter() - t0
 
         return SuffixTreeIndex(s=np.asarray(s), alphabet=self.alphabet, subtrees=subtrees)
+
+    def build_device(self, s: np.ndarray, report: BuildReport | None = None,
+                     **device_kwargs):
+        """Build + flatten in one step: returns ``(index, device_index)``
+        where the second element is the batched query engine
+        (:class:`repro.core.query.DeviceIndex`)."""
+        index = self.build(s, report)
+        return index, index.to_device(**device_kwargs)

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import clz32 as _clz32_arr
+
 
 class SubTreeNodes(NamedTuple):
     parent: np.ndarray | jax.Array  # int32[2F] (slot F+F-1 may be unused)
@@ -194,15 +196,6 @@ def _range_min(vals, lo: jax.Array, hi: jax.Array):
     left = stacked[k, lo]
     right = stacked[k, jnp.maximum(hi - (1 << k) + 1, lo)]
     return jnp.minimum(left, right)
-
-
-def _clz32_arr(x: jax.Array) -> jax.Array:
-    x = x | (x >> 1)
-    x = x | (x >> 2)
-    x = x | (x >> 4)
-    x = x | (x >> 8)
-    x = x | (x >> 16)
-    return 32 - jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)
 
 
 def build_parallel(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNodes:

@@ -1,0 +1,76 @@
+"""Shared packed-word machinery for construction AND querying.
+
+One byte per symbol code, packed big-endian 4-symbols/int32 so that the
+UNSIGNED integer order of the packed words equals the lexicographic order
+of the symbol sequence.  This module is the single implementation behind
+
+* :mod:`repro.core.prepare`  — elastic-range sort keys (SubTreePrepare),
+* :mod:`repro.core.build`    — clz-based log2 in the parallel builder,
+* :mod:`repro.core.query`    — batched pattern/suffix comparisons,
+* :mod:`repro.kernels.ref`   — the pure-jnp kernel oracles.
+
+Signedness: codes up to 127 keep every packed word non-negative, so signed
+int32 comparisons coincide with lexicographic order (the original DNA /
+protein assumption).  The byte alphabet (codes up to 255) sets the int32
+sign bit via the top byte; every sort or comparison on packed words must
+therefore run on the uint32 bit pattern — use :func:`as_u32` (bitcast) or
+:func:`flip_sign` (order-preserving int32 remap) at the comparison site.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK_WEIGHTS = (1 << 24, 1 << 16, 1 << 8, 1)
+
+_SIGN = jnp.int32(-(1 << 31))
+
+
+def pack_words(sym: jax.Array) -> jax.Array:
+    """(…, w) symbol codes → (…, w//4) int32 big-endian packed words."""
+    *lead, w = sym.shape
+    assert w % 4 == 0, "pack width must be a multiple of 4"
+    grp = sym.astype(jnp.int32).reshape(*lead, w // 4, 4)
+    weights = jnp.asarray(PACK_WEIGHTS, jnp.int32)
+    return jnp.sum(grp * weights, axis=-1)
+
+
+def gather_pack(s_padded: jax.Array, offs: jax.Array, w: int) -> jax.Array:
+    """Gather ``w`` symbols at each offset and pack; pure-jnp fallback path.
+
+    The TPU path is ``repro.kernels.range_gather`` (scalar-prefetch paged
+    gather); this fallback is used on CPU and as the kernel oracle.
+    """
+    idx = offs[:, None].astype(jnp.int32) + jnp.arange(w, dtype=jnp.int32)[None, :]
+    # S must be pre-padded with the terminal code (Alphabet.pad_string);
+    # clip is only a safety net for the final over-reads of resolved areas.
+    idx = jnp.minimum(idx, s_padded.shape[0] - 1)
+    sym = jnp.take(s_padded, idx, axis=0)
+    return pack_words(sym)
+
+
+def as_u32(words: jax.Array) -> jax.Array:
+    """Bitcast packed int32 words to uint32 (unsigned sort/compare keys)."""
+    if words.dtype == jnp.uint32:
+        return words
+    return jax.lax.bitcast_convert_type(words.astype(jnp.int32), jnp.uint32)
+
+
+def flip_sign(words: jax.Array) -> jax.Array:
+    """XOR the sign bit: signed int32 order of the result == unsigned
+    order of the input.  Usable inside Pallas kernels (no bitcast)."""
+    return words ^ _SIGN
+
+
+def clz32(x: jax.Array) -> jax.Array:
+    """Count leading zeros of int32 via bit smear + popcount.
+
+    Arithmetic right shifts only over-smear below the highest set bit, so
+    the result is exact for negative inputs too (clz == 0)."""
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return 32 - jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)

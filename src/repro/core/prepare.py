@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import as_u32, clz32 as _clz32, gather_pack, pack_words  # noqa: F401  (re-exported; shared with build/query)
 from repro.core.vertical import VirtualTree
 from repro.kernels import ops as kops
 
@@ -103,43 +104,9 @@ def init_state(group: VirtualTree, capacity: int) -> PrepareState:
 
 
 # ---------------------------------------------------------------------------
-# Packed-key helpers (shared with kernels.ref)
+# Packed-key helpers — one shared implementation in core.packing, re-exported
+# here (``pack_words`` / ``gather_pack``) for existing importers.
 # ---------------------------------------------------------------------------
-
-_PACK_WEIGHTS = (1 << 24, 1 << 16, 1 << 8, 1)
-
-
-def pack_words(sym: jax.Array) -> jax.Array:
-    """(… , w) uint8 symbols → (…, w//4) int32 big-endian packed words."""
-    *lead, w = sym.shape
-    assert w % 4 == 0, "range must be a multiple of 4"
-    grp = sym.astype(jnp.int32).reshape(*lead, w // 4, 4)
-    weights = jnp.asarray(_PACK_WEIGHTS, jnp.int32)
-    return jnp.sum(grp * weights, axis=-1)
-
-
-def gather_pack(s_padded: jax.Array, offs: jax.Array, w: int) -> jax.Array:
-    """Gather ``w`` symbols at each offset and pack; pure-jnp fallback path.
-
-    The TPU path is ``repro.kernels.range_gather`` (scalar-prefetch paged
-    gather); this fallback is used on CPU and as the kernel oracle.
-    """
-    idx = offs[:, None] + jnp.arange(w, dtype=offs.dtype)[None, :]
-    # S must be pre-padded with the terminal code (Alphabet.pad_string);
-    # clip is only a safety net for the final over-reads of resolved areas.
-    idx = jnp.minimum(idx, s_padded.shape[0] - 1)
-    sym = jnp.take(s_padded, idx, axis=0)
-    return pack_words(sym)
-
-
-def _clz32(x: jax.Array) -> jax.Array:
-    """Count leading zeros of nonneg int32 via bit smear + popcount."""
-    x = x | (x >> 1)
-    x = x | (x >> 2)
-    x = x | (x >> 4)
-    x = x | (x >> 8)
-    x = x | (x >> 16)
-    return 32 - jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)
 
 
 def lcp_adjacent(keys: jax.Array, w: int) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -214,9 +181,12 @@ def prepare_step(s_padded: jax.Array, state: PrepareState, *, w: int,
 
     # 2. segmented stable sort (paper lines 13-15): major key = area id;
     #    done elements get singleton majors (their index) so they stay put.
+    #    Minor keys compare as uint32: byte-alphabet codes >= 128 set the
+    #    int32 sign bit of the top packed byte, so signed order would break.
     major = jnp.where(active, state.area, iota)
+    sort_keys = as_u32(keys) if keys.dtype == jnp.int32 else keys
     n_words = keys.shape[1]
-    minor_keys = tuple(keys[:, j] for j in range(n_words - 1, -1, -1))
+    minor_keys = tuple(sort_keys[:, j] for j in range(n_words - 1, -1, -1))
     order = jnp.lexsort(minor_keys + (major,))
     L = state.L[order]
     start = state.start[order]

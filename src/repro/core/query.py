@@ -1,0 +1,250 @@
+"""Device-resident batched query engine (the read side of the ERA index).
+
+The assembled index (:class:`repro.core.suffix_tree.SuffixTreeIndex`) stores
+each sub-tree's leaf array ``L`` as the suffix array restricted to its
+prefix.  Because the vertical-partition prefixes are prefix-free and cover
+every suffix, concatenating the ``L`` arrays in lexicographic prefix order
+yields the full suffix array of ``S`` — so a substring query is a routing
+step (which contiguous slice of the concatenation can contain matches?)
+plus a bounded lower/upper-bound binary search (paper §2, §4).
+
+:class:`DeviceIndex` flattens the whole index into device arrays:
+
+* ``ell``              — the concatenated leaf arrays (int32[total]);
+* ``sub_off/sub_freq`` + padded ``sub_prefix`` — per-subtree tables;
+* ``win_lo/win_hi``    — a dense top-trie routing table keyed on packed
+  base-|Σ|+1 prefix codes at depth ``k_route`` (capped so the table stays
+  small): cell ``c`` maps to the slice of ``ell`` owned by sub-trees whose
+  code range touches ``c``.
+
+``find_batch`` then resolves a whole ``(B, m)`` batch of padded patterns
+with ONE routing gather and a fixed-trip vectorized binary search whose
+inner probe-gather-compare step is the :func:`repro.kernels.ops.pattern_probe`
+kernel (Pallas on TPU, pure-jnp oracle elsewhere).  Comparisons run on the
+packed big-endian words of :mod:`repro.core.packing` — the same machinery
+the construction path sorts with — under unsigned order, so results are
+exact for every alphabet including the byte alphabet.
+
+The per-pattern numpy path (``SuffixTreeIndex.find``) remains the oracle;
+``tests/test_query.py`` cross-checks the two on randomized workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas"))
+def _find_batch_ranges(s_padded, ell, win_lo, win_hi, pows, spans,
+                       patterns, lengths, route_syms,
+                       *, k_route: int, n_iter: int, use_pallas: bool):
+    """Route + vectorized lower/upper-bound binary search for one batch.
+
+    patterns: (B, m_pad) int32, zero-padded; lengths: (B,) int32 >= 1;
+    route_syms: (B, k_route) int32 (first symbols, zero-padded).
+    Returns (start, count): int32[B] slices into ``ell``.
+    """
+    b, m_pad = patterns.shape
+    total = ell.shape[0]
+    probe = kops.pattern_probe_impl(use_pallas)
+
+    # pattern packing: zero symbols past each length in both the pattern and
+    # the 0xFF-byte mask, so masked suffix words compare against exactly the
+    # first ``m`` symbols (prefix match == equality).
+    in_pat = jnp.arange(m_pad, dtype=jnp.int32)[None, :] < lengths[:, None]
+    pat_words = packing.pack_words(jnp.where(in_pat, patterns, 0))
+    mask_words = packing.pack_words(jnp.where(in_pat, 0xFF, 0))
+
+    # routing: the pattern's depth-k_route code interval [c_lo, c_hi] covers
+    # every suffix that can match; one gather into the dense table bounds
+    # the binary search to the owning sub-tree slice of ``ell``.
+    k = jnp.minimum(lengths, k_route)
+    in_route = jnp.arange(k_route, dtype=jnp.int32)[None, :] < k[:, None]
+    c_lo = jnp.sum(jnp.where(in_route, route_syms, 0) * pows[None, :], axis=1)
+    c_hi = c_lo + spans[k]
+    lo0 = win_lo[c_lo]
+    hi0 = jnp.maximum(win_hi[c_hi], lo0)
+
+    # fixed-trip binary search; lower and upper bound run fused as one
+    # 2B-row probe per iteration (the probe kernel is the only gather).
+    pat2 = jnp.concatenate([pat_words, pat_words], axis=0)
+    mask2 = jnp.concatenate([mask_words, mask_words], axis=0)
+
+    def body(_, st):
+        llo, lhi, ulo, uhi = st
+        lmid = (llo + lhi) // 2
+        umid = (ulo + uhi) // 2
+        mids = jnp.concatenate([lmid, umid])
+        pos = ell[jnp.clip(mids, 0, total - 1)]
+        cmp = probe(s_padded, pos, pat2, mask2)
+        lcmp, ucmp = cmp[:b], cmp[b:]
+        lact = llo < lhi
+        uact = ulo < uhi
+        # lower bound: first suffix >= pattern (prefix match counts as >=)
+        llo = jnp.where(lact & (lcmp < 0), lmid + 1, llo)
+        lhi = jnp.where(lact & (lcmp >= 0), lmid, lhi)
+        # upper bound: first suffix > pattern
+        ulo = jnp.where(uact & (ucmp <= 0), umid + 1, ulo)
+        uhi = jnp.where(uact & (ucmp > 0), umid, uhi)
+        return llo, lhi, ulo, uhi
+
+    llo, _, ulo, _ = jax.lax.fori_loop(0, n_iter, body, (lo0, hi0, lo0, hi0))
+    return llo, jnp.maximum(ulo - llo, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceIndex:
+    """Flattened, device-resident form of a :class:`SuffixTreeIndex`."""
+
+    base: int                 # |Σ| + 1 including the terminal
+    k_route: int              # routing-trie depth (base**k_route cells)
+    n_iter: int               # binary-search trip count (covers ``total``)
+    max_pattern_len: int      # padding guarantee baked into ``s_padded``
+    s_padded: jax.Array       # uint8[n + pad] terminal-padded string
+    ell: jax.Array            # int32[total] concatenated leaf arrays (= SA)
+    ell_host: np.ndarray      # host copy of ell (result materialization)
+    sub_off: jax.Array        # int32[T] slice start of sub-tree t in ell
+    sub_freq: jax.Array       # int32[T]
+    sub_prefix: jax.Array     # int32[T, max_plen] prefix symbols, -1 pad
+    sub_plen: jax.Array       # int32[T]
+    win_lo: jax.Array         # int32[base**k_route] routing slice starts
+    win_hi: jax.Array         # int32[base**k_route] routing slice ends
+    pows: jax.Array           # int32[k_route] base**(k_route-1-j)
+    spans: jax.Array          # int32[k_route+1] base**(k_route-k) - 1
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.ell.shape[0])
+
+    @property
+    def n_subtrees(self) -> int:
+        return int(self.sub_off.shape[0])
+
+    # ---- construction -----------------------------------------------------
+
+    @classmethod
+    def from_index(cls, index, *, route_cap: int = 1 << 18,
+                   max_pattern_len: int = 512) -> "DeviceIndex":
+        """Flatten ``index`` (a SuffixTreeIndex) into device arrays.
+
+        ``route_cap`` bounds the dense routing table (cells <= route_cap);
+        ``max_pattern_len`` fixes how far past |S| gathers may read.
+        """
+        base = index.alphabet.base
+        prefixes = sorted(index.subtrees)
+        if not prefixes:
+            raise ValueError("cannot flatten an empty index")
+        subs = [index.subtrees[p] for p in prefixes]
+        freqs = np.array([st.freq for st in subs], np.int32)
+        offs = np.concatenate([[0], np.cumsum(freqs)[:-1]]).astype(np.int32)
+        total = int(freqs.sum())
+        ell = np.concatenate([np.asarray(st.ell, np.int32) for st in subs])
+
+        max_plen = max(len(p) for p in prefixes)
+        plen = np.array([len(p) for p in prefixes], np.int32)
+        pref = np.full((len(prefixes), max_plen), -1, np.int32)
+        for t, p in enumerate(prefixes):
+            pref[t, : len(p)] = p
+
+        k_route = 1
+        while base ** (k_route + 1) <= route_cap and k_route < max_plen:
+            k_route += 1
+        n_cells = base**k_route
+
+        # each sub-tree owns the depth-k_route code interval [clo, chi] of
+        # its (truncated) prefix; prefix-freeness makes the intervals sorted
+        # and non-overlapping (equal only for sub-trees deeper than k_route).
+        clo = np.zeros(len(prefixes), np.int64)
+        chi = np.zeros(len(prefixes), np.int64)
+        for t, p in enumerate(prefixes):
+            kk = min(len(p), k_route)
+            c = 0
+            for j in range(kk):
+                c = c * base + p[j]
+            clo[t] = c * base ** (k_route - kk)
+            chi[t] = clo[t] + base ** (k_route - kk) - 1
+        codes = np.arange(n_cells, dtype=np.int64)
+        off_ext = np.concatenate([offs, [total]]).astype(np.int32)
+        win_lo = off_ext[np.searchsorted(chi, codes, side="left")]
+        t_last = np.searchsorted(clo, codes, side="right") - 1
+        win_hi = np.where(t_last >= 0, offs[np.maximum(t_last, 0)]
+                          + freqs[np.maximum(t_last, 0)], 0).astype(np.int32)
+
+        n_iter = int(np.ceil(np.log2(total + 1))) + 1
+        pows = (base ** np.arange(k_route - 1, -1, -1)).astype(np.int32)
+        spans = (base ** (k_route - np.arange(k_route + 1)) - 1).astype(np.int32)
+        s_padded = index.alphabet.pad_string(np.asarray(index.s),
+                                             extra=max_pattern_len + 8)
+        return cls(
+            base=base,
+            k_route=k_route,
+            n_iter=n_iter,
+            max_pattern_len=max_pattern_len,
+            s_padded=jnp.asarray(s_padded),
+            ell=jnp.asarray(ell),
+            ell_host=ell,
+            sub_off=jnp.asarray(offs),
+            sub_freq=jnp.asarray(freqs),
+            sub_prefix=jnp.asarray(pref),
+            sub_plen=jnp.asarray(plen),
+            win_lo=jnp.asarray(win_lo),
+            win_hi=jnp.asarray(win_hi),
+            pows=jnp.asarray(pows),
+            spans=jnp.asarray(spans),
+        )
+
+    # ---- queries ----------------------------------------------------------
+
+    def pad_batch(self, patterns) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Pad a list of 1-D code arrays to (B, m_pad) + lengths + route rows."""
+        if not len(patterns):
+            raise ValueError("empty batch")
+        lengths = np.array([len(p) for p in patterns], np.int32)
+        if (lengths < 1).any():
+            raise ValueError("patterns must have length >= 1")
+        m_max = int(lengths.max())
+        m_pad = -(-m_max // 4) * 4
+        if m_pad > self.max_pattern_len:
+            raise ValueError(
+                f"pattern length {m_max} exceeds max_pattern_len="
+                f"{self.max_pattern_len}; rebuild with to_device(max_pattern_len=...)")
+        padded = np.zeros((len(patterns), m_pad), np.int32)
+        route = np.zeros((len(patterns), self.k_route), np.int32)
+        for i, p in enumerate(patterns):
+            arr = np.asarray(p, np.int32)
+            if arr.size and (arr.min() < 0 or arr.max() >= self.base):
+                raise ValueError(f"pattern {i} has codes outside [0, {self.base})")
+            padded[i, : len(arr)] = arr
+            route[i, : min(len(arr), self.k_route)] = arr[: self.k_route]
+        return padded, lengths, route
+
+    def find_batch_ranges(self, patterns, lengths, route_syms):
+        """Jitted core: (B, m_pad)/(B,)/(B, k_route) → (start, count) slices
+        of ``ell`` (device arrays; matches are ``ell[start:start+count]``)."""
+        return _find_batch_ranges(
+            self.s_padded, self.ell, self.win_lo, self.win_hi,
+            self.pows, self.spans,
+            jnp.asarray(patterns, jnp.int32), jnp.asarray(lengths, jnp.int32),
+            jnp.asarray(route_syms, jnp.int32),
+            k_route=self.k_route, n_iter=self.n_iter,
+            use_pallas=kops._use_pallas(),
+        )
+
+    def find_batch(self, patterns) -> list[np.ndarray]:
+        """All occurrence positions for each pattern (sorted, int64) —
+        the batched device analogue of ``SuffixTreeIndex.find``."""
+        padded, lengths, route = self.pad_batch(patterns)
+        start, count = self.find_batch_ranges(padded, lengths, route)
+        start = np.asarray(start)
+        count = np.asarray(count)
+        ell = self.ell_host  # avoid a full device->host copy per batch
+        return [np.sort(ell[s : s + c].astype(np.int64))
+                for s, c in zip(start, count)]

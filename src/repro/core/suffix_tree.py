@@ -6,6 +6,15 @@ structure-of-arrays form (``build.SubTreeNodes``) together with the leaf
 array ``L`` — which is precisely the suffix array restricted to the prefix,
 so substring queries can run either as tree walks or as binary searches
 over ``L``.  Both are implemented; they are cross-checked in tests.
+
+Three query paths, slowest to fastest:
+
+* ``find``       — per-pattern numpy binary search (the reference oracle);
+* ``find_walk``  — per-pattern tree walk (validates the built topology);
+* ``find_batch`` — device-resident batched engine (:mod:`repro.core.query`):
+  the index is flattened once via :meth:`SuffixTreeIndex.to_device` and a
+  whole batch resolves with one routing gather plus a vectorized binary
+  search over packed words (Pallas ``pattern_probe`` kernel on TPU).
 """
 
 from __future__ import annotations
@@ -52,6 +61,7 @@ class SuffixTreeIndex:
     s: np.ndarray            # the indexed string (codes incl. terminal)
     alphabet: Alphabet
     subtrees: dict[tuple[int, ...], SubTree]
+    _device: object = dataclasses.field(default=None, repr=False, compare=False)
 
     # ---- top trie ---------------------------------------------------------
 
@@ -174,6 +184,25 @@ class SuffixTreeIndex:
             v = nxt
         return int(lo[v]), int(hi[v]) + 1
 
+    # ---- batched device fast path -----------------------------------------
+
+    def to_device(self, **kwargs):
+        """Flatten into a :class:`repro.core.query.DeviceIndex` (kwargs:
+        ``route_cap``, ``max_pattern_len``).  The result is immutable and
+        independent of this object."""
+        from repro.core.query import DeviceIndex  # local: avoid import cycle
+
+        return DeviceIndex.from_index(self, **kwargs)
+
+    def find_batch(self, patterns) -> list[np.ndarray]:
+        """Batched ``find``: one device round-trip for a whole list of
+        patterns.  Results exactly match per-pattern ``find`` (sorted
+        int64 occurrence positions); the flattened device form is built
+        lazily on first use and cached."""
+        if self._device is None:
+            self._device = self.to_device()
+        return self._device.find_batch(patterns)
+
     # ---- stats / io -------------------------------------------------------
 
     @property
@@ -196,6 +225,13 @@ class SuffixTreeIndex:
             blobs[f"p{i}_boff"] = np.asarray(st.b_off)
             blobs[f"p{i}_bc1"] = np.asarray(st.b_c1)
             blobs[f"p{i}_bc2"] = np.asarray(st.b_c2)
+            if st.nodes is not None:
+                # persist built node arrays so a loaded index can find_walk
+                blobs[f"p{i}_nparent"] = np.asarray(st.nodes.parent)
+                blobs[f"p{i}_ndepth"] = np.asarray(st.nodes.depth)
+                blobs[f"p{i}_nwitness"] = np.asarray(st.nodes.witness)
+                blobs[f"p{i}_ncounts"] = np.array(
+                    [int(st.nodes.n_nodes), int(st.nodes.n_leaves)], np.int64)
         np.savez_compressed(path, **blobs)
 
     @classmethod
@@ -205,12 +241,23 @@ class SuffixTreeIndex:
         i = 0
         while f"p{i}_prefix" in data:
             p = tuple(int(x) for x in data[f"p{i}_prefix"])
+            nodes = None
+            if f"p{i}_nparent" in data:
+                counts = data[f"p{i}_ncounts"]
+                nodes = SubTreeNodes(
+                    parent=data[f"p{i}_nparent"],
+                    depth=data[f"p{i}_ndepth"],
+                    witness=data[f"p{i}_nwitness"],
+                    n_nodes=int(counts[0]),
+                    n_leaves=int(counts[1]),
+                )
             subtrees[p] = SubTree(
                 prefix=p,
                 ell=data[f"p{i}_ell"],
                 b_off=data[f"p{i}_boff"],
                 b_c1=data[f"p{i}_bc1"],
                 b_c2=data[f"p{i}_bc2"],
+                nodes=nodes,
             )
             i += 1
         return cls(s=data["s"], alphabet=alphabet, subtrees=subtrees)

@@ -106,7 +106,10 @@ def dataset(name: str, n: int, seed: int = 0) -> tuple[np.ndarray, Alphabet]:
         a = ALPHABETS["protein"]
     elif name == "english":
         a = ALPHABETS["english"]
+    elif name == "byte":
+        a = ALPHABETS["byte"]
     else:
         raise KeyError(name)
-    rep = {"dna": 0.30, "genome": 0.45, "protein": 0.15, "english": 0.20}[name]
+    rep = {"dna": 0.30, "genome": 0.45, "protein": 0.15, "english": 0.20,
+           "byte": 0.10}[name]
     return synthetic_string(a, n, seed=seed, repeat_fraction=rep), a

@@ -19,6 +19,7 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.kmer_histogram import kmer_histogram as _kmer_pallas
 from repro.kernels.lcp import lcp_pairs as _lcp_pallas
+from repro.kernels.pattern_probe import pattern_probe as _probe_pallas
 from repro.kernels.range_gather import range_gather_pack as _gather_pallas
 
 
@@ -51,3 +52,17 @@ def lcp_pairs(a, b, w: int):
     if _use_pallas():
         return _lcp_pallas(a, b, w, interpret=not _on_tpu())
     return _ref.lcp_pairs_ref(a, b, w)
+
+
+def pattern_probe_impl(use_pallas: bool):
+    """Probe implementation for a STATIC ``use_pallas`` — jitted callers
+    (repro.core.query) resolve the env var once outside the trace so
+    flipping REPRO_KERNELS between calls cannot hit a stale trace."""
+    if use_pallas:
+        return lambda s, p, pw, mw: _probe_pallas(s, p, pw, mw,
+                                                  interpret=not _on_tpu())
+    return _ref.pattern_probe_ref
+
+
+def pattern_probe(s_padded, pos, pat_words, mask_words):
+    return pattern_probe_impl(_use_pallas())(s_padded, pos, pat_words, mask_words)

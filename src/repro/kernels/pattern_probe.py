@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: batched probe-gather-compare (ERA substring queries).
+
+The device-resident query engine (:mod:`repro.core.query`) resolves a batch
+of patterns by vectorized lower/upper-bound binary search over the leaf
+array ``L`` (= the suffix array restricted to each sub-tree's prefix).  The
+inner step of that search is this kernel: for each probe position, gather
+``w`` symbols of the suffix from S, pack them big-endian into int32 words,
+mask past the pattern length, and emit the sign of the comparison with the
+pre-packed pattern row.
+
+Layout mirrors :mod:`repro.kernels.range_gather`: probe positions are
+scalar-prefetched (paged-gather block-table style), each grid step DMAs the
+``(2, tile)`` HBM window containing the read plus the pattern/mask rows,
+and writes one ``(1, 1)`` comparison verdict.  Comparisons run on the
+sign-flipped words so signed int32 order equals unsigned (lexicographic)
+order — required for the byte alphabet whose codes reach the top bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, s_lo_ref, s_hi_ref, pat_ref, mask_ref, out_ref,
+            *, tile: int, w: int):
+    i = pl.program_id(0)
+    off = pos_ref[i]
+    local = off - (off // tile) * tile  # offset within the 2-tile window
+    flat = jnp.concatenate([s_lo_ref[...], s_hi_ref[...]], axis=1).reshape(2 * tile)
+    sym = jax.lax.dynamic_slice(flat, (local,), (w,))
+    grp = sym.reshape(w // 4, 4).astype(jnp.int32)
+    # unrolled big-endian pack (pallas kernels cannot capture array consts)
+    words = (grp[:, 0] * (1 << 24) + grp[:, 1] * (1 << 16)
+             + grp[:, 2] * (1 << 8) + grp[:, 3])
+    pat = pat_ref[0, :]
+    sw = words & mask_ref[0, :]
+    neq = sw != pat
+    n_words = w // 4
+    iota = jax.lax.iota(jnp.int32, n_words)
+    first = jnp.min(jnp.where(neq, iota, n_words))
+    sel = iota == first
+    sign = jnp.int32(-(1 << 31))
+    a = jnp.sum(jnp.where(sel, sw, 0)) ^ sign
+    b = jnp.sum(jnp.where(sel, pat, 0)) ^ sign
+    cmp = jnp.where(jnp.any(neq), jnp.where(a < b, -1, 1), 0)
+    out_ref[0, 0] = cmp
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def pattern_probe(
+    s_padded: jax.Array,
+    pos: jax.Array,
+    pat_words: jax.Array,
+    mask_words: jax.Array,
+    *,
+    tile: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compare the suffix at each probe position against its pattern row.
+
+    s_padded: (n,) integer codes (terminal-padded past every read);
+    pos: (B,) int32; pat_words/mask_words: (B, W) int32 packed+masked.
+    Returns int32[B] in {-1, 0, +1} (0 == suffix starts with pattern).
+    """
+    b, n_words = pat_words.shape
+    w = n_words * 4
+    assert mask_words.shape == (b, n_words) and pos.shape == (b,)
+    tile = max(tile, w)  # long patterns (to_device(max_pattern_len=...)) grow the window
+    n = s_padded.shape[0]
+    n_tiles = -(-n // tile) + 1  # +1 halo row so (row, row+1) always exists
+    pad_val = s_padded[-1]  # terminal padding continues the last element
+    s_rows = jnp.full((n_tiles * tile,), pad_val, s_padded.dtype)
+    s_rows = jax.lax.dynamic_update_slice(s_rows, s_padded, (0,))
+    s_rows = s_rows.reshape(n_tiles, tile).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            # the read window may straddle one tile boundary: fetch tiles
+            # r and r+1 as two (1, tile) blocks (halo row exists by padding)
+            pl.BlockSpec((1, tile), lambda i, pos_ref: (pos_ref[i] // tile, 0)),
+            pl.BlockSpec((1, tile), lambda i, pos_ref: (pos_ref[i] // tile + 1, 0)),
+            pl.BlockSpec((1, n_words), lambda i, pos_ref: (i, 0)),
+            pl.BlockSpec((1, n_words), lambda i, pos_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, pos_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, tile=tile, w=w),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), s_rows, s_rows, pat_words, mask_words)
+    return out[:, 0]

@@ -10,22 +10,33 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-PACK_WEIGHTS = (1 << 24, 1 << 16, 1 << 8, 1)
+from repro.core.packing import (  # noqa: F401  (canonical shared impls)
+    PACK_WEIGHTS,
+    flip_sign,
+    gather_pack as range_gather_pack_ref,
+    pack_words as pack_words_ref,
+)
 
 
-def pack_words_ref(sym: jax.Array) -> jax.Array:
-    """(…, w) symbol codes → (…, w//4) int32 big-endian packed words."""
-    *lead, w = sym.shape
-    assert w % 4 == 0
-    grp = sym.astype(jnp.int32).reshape(*lead, w // 4, 4)
-    return jnp.sum(grp * jnp.asarray(PACK_WEIGHTS, jnp.int32), axis=-1)
+def pattern_probe_ref(s_padded: jax.Array, pos: jax.Array,
+                      pat_words: jax.Array, mask_words: jax.Array) -> jax.Array:
+    """Batched masked suffix-vs-pattern comparison (query binary-search probe).
 
-
-def range_gather_pack_ref(s_padded: jax.Array, offs: jax.Array, w: int) -> jax.Array:
-    """Gather ``w`` symbols at each offset from S and pack into int32 words."""
-    idx = offs[:, None].astype(jnp.int32) + jnp.arange(w, dtype=jnp.int32)[None, :]
-    idx = jnp.minimum(idx, s_padded.shape[0] - 1)
-    return pack_words_ref(jnp.take(s_padded, idx, axis=0))
+    pos: (B,) int32 suffix positions; pat_words/mask_words: (B, W) int32 —
+    the pattern packed big-endian with symbols beyond its length zeroed, and
+    the matching 0xFF-byte mask.  Returns int32[B] in {-1, 0, +1}: the sign
+    of ``S[pos:pos+m]`` vs the pattern under unsigned lexicographic order
+    (0 == the suffix starts with the pattern).
+    """
+    w = pat_words.shape[1] * 4
+    sw = range_gather_pack_ref(s_padded, pos, w) & mask_words
+    neq = sw != pat_words
+    any_neq = jnp.any(neq, axis=1)
+    first = jnp.argmax(neq, axis=1)
+    a = jnp.take_along_axis(sw, first[:, None], axis=1)[:, 0]
+    b = jnp.take_along_axis(pat_words, first[:, None], axis=1)[:, 0]
+    lt = flip_sign(a) < flip_sign(b)  # unsigned compare (byte alphabet safe)
+    return jnp.where(any_neq, jnp.where(lt, -1, 1), 0).astype(jnp.int32)
 
 
 def kmer_histogram_ref(s: jax.Array, n: int, k: int, base: int) -> jax.Array:

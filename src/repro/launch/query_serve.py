@@ -1,0 +1,120 @@
+"""Sustained batched query serving driver (read-side analogue of serve.py).
+
+Builds an ERA index over a dataset, flattens it to the device-resident
+:class:`repro.core.query.DeviceIndex`, then drives a sustained loop of
+padded pattern batches through ``find_batch_ranges`` and reports
+queries/sec plus per-batch latency — the serving-shaped measurement the
+ROADMAP's heavy-traffic north star asks for.
+
+CPU example:
+  PYTHONPATH=src python -m repro.launch.query_serve --dataset dna \
+      --n 100000 --batch 256 --iters 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.api import EraConfig, EraIndexer
+from repro.data.strings import dataset
+
+
+def make_workload(s: np.ndarray, rng: np.random.Generator, *, batch: int,
+                  min_len: int, max_len: int, planted_frac: float,
+                  n_symbols: int) -> list[np.ndarray]:
+    """A batch mixing planted substrings (guaranteed hits) with random
+    patterns (mostly misses) across a uniform length mix."""
+    pats = []
+    for _ in range(batch):
+        m = int(rng.integers(min_len, max_len + 1))
+        if rng.random() < planted_frac:
+            i = int(rng.integers(0, len(s) - 1 - m))
+            pats.append(np.asarray(s[i : i + m]))
+        else:
+            pats.append(rng.integers(0, n_symbols, size=m).astype(np.uint8))
+    return pats
+
+
+def serve_queries(dataset_name: str = "dna", *, n: int = 100_000,
+                  batch: int = 256, iters: int = 20, min_len: int = 4,
+                  max_len: int = 24, planted_frac: float = 0.7,
+                  memory_bytes: int = 1 << 20, seed: int = 0):
+    if not 1 <= min_len <= max_len:
+        raise ValueError(f"need 1 <= min_len <= max_len, got [{min_len}, {max_len}]")
+    if max_len >= n:
+        raise ValueError(f"max_len {max_len} must be < string length {n}")
+    if iters < 1 or batch < 1:
+        raise ValueError(f"need iters >= 1 and batch >= 1, got {iters}, {batch}")
+    s, alphabet = dataset(dataset_name, n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+
+    t0 = time.perf_counter()
+    cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
+    index, dev = EraIndexer(alphabet, cfg).build_device(
+        s, max_pattern_len=max(64, max_len))
+    t_build = time.perf_counter() - t0
+
+    # pre-pad every batch so the timed loop measures routing + search only
+    batches = []
+    for _ in range(iters):
+        pats = make_workload(s, rng, batch=batch, min_len=min_len,
+                             max_len=max_len, planted_frac=planted_frac,
+                             n_symbols=len(alphabet.symbols))
+        batches.append(dev.pad_batch(pats))
+
+    # warmup: one compile per padded width in the mix
+    for padded, lengths, route in batches:
+        start, count = dev.find_batch_ranges(padded, lengths, route)
+    jax.block_until_ready((start, count))
+
+    lat = []
+    hits = 0
+    t0 = time.perf_counter()
+    for padded, lengths, route in batches:
+        t1 = time.perf_counter()
+        start, count = dev.find_batch_ranges(padded, lengths, route)
+        jax.block_until_ready((start, count))
+        lat.append(time.perf_counter() - t1)
+        hits += int(np.asarray(count).sum())
+    t_serve = time.perf_counter() - t0
+
+    lat = np.array(lat)
+    return {
+        "dataset": dataset_name,
+        "n_symbols": len(s),
+        "n_subtrees": dev.n_subtrees,
+        "k_route": dev.k_route,
+        "t_build_s": round(t_build, 3),
+        "batches": iters,
+        "batch": batch,
+        "queries": iters * batch,
+        "hits": hits,
+        "qps": round(iters * batch / max(t_serve, 1e-9), 1),
+        "batch_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "batch_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="dna")
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--min-len", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=24)
+    ap.add_argument("--planted-frac", type=float, default=0.7)
+    args = ap.parse_args()
+    stats = serve_queries(args.dataset, n=args.n, batch=args.batch,
+                          iters=args.iters, min_len=args.min_len,
+                          max_len=args.max_len,
+                          planted_frac=args.planted_frac)
+    print(stats)
+
+
+if __name__ == "__main__":
+    main()

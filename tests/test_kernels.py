@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ref as kref
 from repro.kernels.kmer_histogram import kmer_histogram
 from repro.kernels.lcp import lcp_pairs
+from repro.kernels.pattern_probe import pattern_probe
 from repro.kernels.range_gather import range_gather_pack
 
 
@@ -89,6 +90,43 @@ class TestLcpPairs:
                                 interpret=True)
         assert (np.asarray(lcp) == 16).all()
         assert (np.asarray(c1) == 0).all() and (np.asarray(c2) == 0).all()
+
+
+class TestPatternProbe:
+    @pytest.mark.parametrize("n,b,m,tile,codes", [
+        (300, 7, 4, 32, 5), (1000, 33, 8, 64, 21), (2000, 64, 16, 256, 27),
+        (500, 16, 12, 128, 256),  # byte alphabet: top bit of packed words set
+    ])
+    def test_matches_ref(self, n, b, m, tile, codes):
+        rng = np.random.default_rng(n + b)
+        s = rng.integers(0, codes, size=n).astype(np.uint8)
+        s[-1] = codes - 1
+        pos = rng.integers(0, n - 1, size=b).astype(np.int32)
+        m_pad = -(-m // 4) * 4
+        lengths = rng.integers(1, m + 1, size=b)
+        sym = rng.integers(0, codes, size=(b, m_pad)).astype(np.int32)
+        valid = np.arange(m_pad)[None, :] < lengths[:, None]
+        pat = np.asarray(kref.pack_words_ref(jnp.asarray(np.where(valid, sym, 0))))
+        mask = np.asarray(kref.pack_words_ref(jnp.asarray(np.where(valid, 0xFF, 0))))
+        got = pattern_probe(jnp.asarray(s), jnp.asarray(pos), jnp.asarray(pat),
+                            jnp.asarray(mask), tile=tile, interpret=True)
+        want = kref.pattern_probe_ref(jnp.asarray(s), jnp.asarray(pos),
+                                      jnp.asarray(pat), jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_prefix_match_is_zero(self):
+        s = np.array([0, 1, 2, 3, 0, 1, 2, 4], np.uint8)
+        # pattern "1 2" at pos 1 and 5: prefix match -> 0; at pos 0: S bigger?
+        pat_sym = np.zeros((3, 4), np.int32)
+        pat_sym[:, :2] = [1, 2]
+        valid = np.broadcast_to(np.arange(4)[None, :] < 2, (3, 4))
+        pat = np.asarray(kref.pack_words_ref(jnp.asarray(np.where(valid, pat_sym, 0))))
+        mask = np.asarray(kref.pack_words_ref(jnp.asarray(np.where(valid, 0xFF, 0))))
+        pos = np.array([1, 5, 0], np.int32)
+        got = np.asarray(pattern_probe(jnp.asarray(s), jnp.asarray(pos),
+                                       jnp.asarray(pat), jnp.asarray(mask),
+                                       tile=32, interpret=True))
+        np.testing.assert_array_equal(got, [0, 0, -1])
 
 
 class TestPipelineWithKernels:

@@ -1,0 +1,165 @@
+"""Device-resident batched query engine vs the numpy oracle paths."""
+
+import numpy as np
+import pytest
+
+from repro.core import ref
+from repro.core.alphabet import BYTE, DNA, PROTEIN
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.query import DeviceIndex
+from repro.core.suffix_tree import SuffixTreeIndex
+
+
+def build(alpha, n, *, memory_bytes, seed, build_impl="none"):
+    s = alpha.random_string(n, seed=seed)
+    idx = EraIndexer(alpha, EraConfig(memory_bytes=memory_bytes, r_bytes=128,
+                                      build_impl=build_impl)).build(s)
+    return s, idx
+
+
+def random_patterns(s, rng, count, max_len=12):
+    """Planted substrings (hits) across lengths 1..max_len."""
+    pats = []
+    for _ in range(count):
+        m = int(rng.integers(1, max_len + 1))
+        i = int(rng.integers(0, len(s) - 1 - m))
+        pats.append(np.asarray(s[i : i + m]))
+    return pats
+
+
+class TestFindBatchMatchesOracle:
+    @pytest.mark.parametrize("alpha,n,mem", [
+        (DNA, 800, 512),        # tight budget: deep prefixes, many sub-trees
+        (DNA, 1500, 8192),
+        (PROTEIN, 700, 4096),
+        (BYTE, 600, 4096),      # codes >= 128: unsigned packed-word order
+    ])
+    def test_randomized_cross_check(self, alpha, n, mem):
+        s, idx = build(alpha, n, memory_bytes=mem, seed=n + mem)
+        dev = idx.to_device()
+        rng = np.random.default_rng(n)
+        pats = random_patterns(s, rng, 30)
+        # random patterns over the alphabet: mostly absent for big alphabets
+        for _ in range(10):
+            m = int(rng.integers(1, 10))
+            pats.append(rng.integers(0, len(alpha.symbols), size=m).astype(np.uint8))
+        got = dev.find_batch(pats)
+        for p, g in zip(pats, got):
+            want = idx.find(p)
+            np.testing.assert_array_equal(g, want)
+            np.testing.assert_array_equal(g, ref.occurrences(s, p))
+
+    def test_empty_hits_and_absent_patterns(self):
+        s, idx = build(DNA, 500, memory_bytes=2048, seed=5)
+        dev = idx.to_device()
+        # a pattern of 16 A's is (almost surely) absent from random DNA
+        pats = [np.zeros(16, np.uint8), np.asarray(s[10:14])]
+        got = dev.find_batch(pats)
+        np.testing.assert_array_equal(got[0], ref.occurrences(s, pats[0]))
+        np.testing.assert_array_equal(got[1], idx.find(pats[1]))
+
+    def test_pattern_longer_than_any_suffix(self):
+        s, idx = build(DNA, 300, memory_bytes=2048, seed=9)
+        dev = idx.to_device(max_pattern_len=1024)
+        long_pat = DNA.random_string(len(s) + 7, seed=42)[:-1]
+        (got,) = dev.find_batch([long_pat])
+        assert got.size == 0
+
+    def test_pattern_shorter_than_vertical_prefix(self):
+        # memory_bytes=512 -> f_max ~ 9: prefixes go several symbols deep,
+        # so length-1/2 patterns route to MANY whole sub-trees at once
+        s, idx = build(DNA, 900, memory_bytes=512, seed=17)
+        assert max(len(p) for p in idx.subtrees) >= 3
+        dev = idx.to_device()
+        pats = [np.array([c], np.uint8) for c in range(4)]
+        pats += [np.array([c1, c2], np.uint8) for c1 in range(4) for c2 in range(2)]
+        got = dev.find_batch(pats)
+        for p, g in zip(pats, got):
+            np.testing.assert_array_equal(g, idx.find(p))
+
+    def test_mixed_length_batch_single_call(self):
+        s, idx = build(DNA, 600, memory_bytes=1024, seed=3)
+        dev = idx.to_device()
+        pats = [s[0:1], s[5:13], s[20:52], np.zeros(9, np.uint8)]
+        got = dev.find_batch(pats)
+        for p, g in zip(pats, got):
+            np.testing.assert_array_equal(g, idx.find(p))
+
+    def test_index_fast_path_caches_device(self):
+        s, idx = build(DNA, 400, memory_bytes=2048, seed=1)
+        pats = random_patterns(s, np.random.default_rng(0), 5)
+        got = idx.find_batch(pats)
+        assert idx._device is not None
+        for p, g in zip(pats, got):
+            np.testing.assert_array_equal(g, idx.find(p))
+
+    def test_validation(self):
+        s, idx = build(DNA, 300, memory_bytes=2048, seed=2)
+        dev = idx.to_device()
+        with pytest.raises(ValueError):
+            dev.find_batch([])
+        with pytest.raises(ValueError):
+            dev.find_batch([np.empty(0, np.uint8)])
+        with pytest.raises(ValueError):
+            dev.find_batch([np.array([99], np.uint8)])  # code out of range
+        with pytest.raises(ValueError):
+            dev.find_batch([np.zeros(dev.max_pattern_len + 5, np.uint8)])
+
+
+class TestDeviceIndexStructure:
+    def test_concatenated_ell_is_the_suffix_array(self):
+        """Prefix-free + covering ⇒ the flattened leaf arrays ARE the SA."""
+        s, idx = build(DNA, 400, memory_bytes=1024, seed=11)
+        dev = idx.to_device()
+        np.testing.assert_array_equal(np.asarray(dev.ell),
+                                      ref.suffix_array(s).astype(np.int32))
+
+    def test_routing_table_windows_cover_subtree_slices(self):
+        s, idx = build(DNA, 500, memory_bytes=1024, seed=13)
+        dev = idx.to_device()
+        win_lo = np.asarray(dev.win_lo)
+        win_hi = np.asarray(dev.win_hi)
+        offs = np.asarray(dev.sub_off)
+        freqs = np.asarray(dev.sub_freq)
+        total = int(freqs.sum())
+        assert dev.n_leaves == total == len(s)
+        assert (win_lo >= 0).all() and (win_hi <= total).all()
+        # every sub-tree's own routing cell window contains its slice
+        pref = np.asarray(dev.sub_prefix)
+        plen = np.asarray(dev.sub_plen)
+        base = dev.base
+        for t in range(dev.n_subtrees):
+            kk = min(int(plen[t]), dev.k_route)
+            c = 0
+            for j in range(kk):
+                c = c * base + int(pref[t, j])
+            c *= base ** (dev.k_route - kk)
+            assert win_lo[c] <= offs[t]
+            assert win_hi[c + base ** (dev.k_route - kk) - 1] >= offs[t] + freqs[t]
+
+
+class TestSaveLoadRoundTrip:
+    def test_nodes_survive_save_load_find_walk(self, tmp_path):
+        """Built SubTreeNodes used to be dropped on save, so a loaded index
+        raised in find_walk; they are persisted now."""
+        s, idx = build(DNA, 300, memory_bytes=2048, seed=21,
+                       build_impl="numpy")
+        p = str(tmp_path / "index.npz")
+        idx.save(p)
+        idx2 = SuffixTreeIndex.load(p, DNA)
+        assert set(idx2.subtrees) == set(idx.subtrees)
+        rng = np.random.default_rng(4)
+        for pat in random_patterns(s, rng, 8, max_len=6):
+            want = idx.find(pat)
+            np.testing.assert_array_equal(idx2.find_walk(pat), want)
+            np.testing.assert_array_equal(idx2.find(pat), want)
+
+    def test_loaded_index_serves_batched_queries(self, tmp_path):
+        s, idx = build(DNA, 300, memory_bytes=2048, seed=23)
+        p = str(tmp_path / "index.npz")
+        idx.save(p)
+        idx2 = SuffixTreeIndex.load(p, DNA)
+        dev = DeviceIndex.from_index(idx2)
+        pats = random_patterns(s, np.random.default_rng(6), 6)
+        for pat, g in zip(pats, dev.find_batch(pats)):
+            np.testing.assert_array_equal(g, idx.find(pat))
