@@ -1,0 +1,92 @@
+"""Device-resident analytics engine vs per-position host Python loops.
+
+Rows: batched matching statistics at several batch sizes (the derived
+column carries positions/sec and the speedup over a per-position Python
+binary-search loop on the host suffix array — the loop the fused
+probe-kernel pass replaces), plus one-shot rows for LCP construction,
+top-k repeat mining, distinct-substring counting and the k-mer spectrum.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.api import EraConfig, EraIndexer
+from repro.data.strings import dataset
+from repro.launch.analytics_serve import make_query
+
+
+def matching_stats_python(s: np.ndarray, sa: np.ndarray, q: np.ndarray):
+    """Per-position host loop: for every query position, a Python binary
+    search over the suffix array plus neighbor LCP scans — the host-bound
+    baseline the batched device pass replaces.  Returns (ms, witness)
+    like ``AnalyticsEngine.matching_stats``."""
+    n = len(s)
+    ms = np.zeros(len(q), np.int64)
+    wit = np.full(len(q), -1, np.int64)
+    for i in range(len(q)):
+        pat = q[i:]
+        lo, hi = 0, n
+        while lo < hi:
+            mid = (lo + hi) // 2
+            suf = s[sa[mid] : sa[mid] + len(pat)]
+            c = -1 if tuple(suf) < tuple(pat) else 1
+            if len(suf) >= len(pat) and np.array_equal(suf, pat):
+                c = 0
+            if c < 0:
+                lo = mid + 1
+            else:
+                hi = mid
+        for row in (lo - 1, lo):
+            if 0 <= row < n:
+                j = sa[row]
+                h = 0
+                while i + h < len(q) and j + h < n and q[i + h] == s[j + h]:
+                    h += 1
+                if h > ms[i]:
+                    ms[i] = h
+                    wit[i] = j
+    return ms, wit
+
+
+def run(quick: bool = True) -> None:
+    n = 30_000 if quick else 200_000
+    s, alphabet = dataset("dna", n, seed=0)
+    cfg = EraConfig(memory_bytes=1 << 18, build_impl="none")
+    indexer = EraIndexer(alphabet, cfg)
+
+    index = indexer.build(s)
+    t_lcp = timeit(lambda: index.analytics(), repeats=1)
+    eng = index.analytics()
+    emit("analytics/lcp_build", t_lcp, f"n={eng.total}")
+
+    sa = eng.dev.ell_host
+    rng = np.random.default_rng(1)
+    for batch in (64, 256, 1024):
+        # the serving driver's workload shape, all-planted (long matches)
+        q = make_query(s, rng, batch=batch, planted_frac=1.0,
+                       n_symbols=len(alphabet.symbols))
+
+        def device_batch():
+            ms, wit = eng.matching_stats(q, window=64)
+
+        t_dev = timeit(device_batch, repeats=5, warmup=2)
+        t_py = timeit(lambda: matching_stats_python(s, sa, q), repeats=1)
+        emit(f"analytics/ms_batch{batch}", t_dev,
+             f"pos_per_s={batch / max(t_dev, 1e-9):.0f} "
+             f"speedup={t_py / max(t_dev, 1e-9):.1f}x")
+
+    t_rep = timeit(lambda: eng.top_repeats(10), repeats=3, warmup=1)
+    emit("analytics/top10_repeats", t_rep,
+         f"longest={eng.longest_repeat()['length']}")
+    t_distinct = timeit(lambda: eng.distinct_substrings(), repeats=3)
+    emit("analytics/distinct", t_distinct, f"count={eng.distinct_substrings()}")
+    t_kmer = timeit(lambda: eng.top_kmers(8, topk=10), repeats=3, warmup=1)
+    emit("analytics/top_kmers_k8", t_kmer,
+         f"max_count={eng.top_kmers(8, topk=1)[0]['count']}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

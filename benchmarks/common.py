@@ -1,12 +1,18 @@
-"""Shared benchmark plumbing: timing + CSV emission.
+"""Shared benchmark plumbing: timing + CSV emission + JSON recording.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (derived carries
 the figure-specific metric: modeled I/O bytes, iterations, speedup, …).
+Rows are also accumulated in :data:`RESULTS` so the harness
+(``benchmarks.run --json``) can persist the run — CI uploads that file as
+a build artifact to record the perf trajectory per PR.
 """
 
 from __future__ import annotations
 
 import time
+
+# rows accumulated across suites for --json; reset by the harness
+RESULTS: list[dict] = []
 
 
 def timeit(fn, *, repeats: int = 1, warmup: int = 0):
@@ -21,4 +27,6 @@ def timeit(fn, *, repeats: int = 1, warmup: int = 0):
 
 
 def emit(name: str, seconds: float, derived: str = ""):
+    RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": derived})
     print(f"{name},{seconds * 1e6:.1f},{derived}")

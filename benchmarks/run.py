@@ -9,28 +9,41 @@
   fig11  bench_alphabet     alphabet sensitivity
   tbl3   bench_scaling      strong/weak scaling (scheduler busy-time model)
   roofl  bench_roofline     dry-run roofline table (reads experiments/dryrun.json)
-  query  bench_query        batched device query engine vs per-pattern Python
+  query      bench_query      batched device query engine vs per-pattern Python
+  analytics  bench_analytics  LCP analytics engine vs per-position Python
 
 ``python -m benchmarks.run``            — quick pass over everything
 ``python -m benchmarks.run --full``     — paper-scale (slower) settings
+``python -m benchmarks.run --smoke``    — CI mode: quick settings, errors
+                                          fatal at exit, intended with --json
+``python -m benchmarks.run --json results.json``  — persist rows as JSON
 ``python -m benchmarks.run --only fig9b``
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import platform
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke pass: quick settings, nonzero exit if any "
+                         "suite errored")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all emitted rows to PATH as JSON")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
-    quick = not args.full
+    quick = not args.full or args.smoke
 
     from benchmarks import (
         bench_alphabet,
+        bench_analytics,
         bench_baselines,
         bench_elastic,
         bench_horizontal,
@@ -39,6 +52,7 @@ def main() -> None:
         bench_rtuning,
         bench_scaling,
         bench_vertical,
+        common,
     )
 
     suites = {
@@ -51,17 +65,39 @@ def main() -> None:
         "tbl3": bench_scaling.run,
         "roofline": bench_roofline.run,
         "query": bench_query.run,
+        "analytics": bench_analytics.run,
     }
+    if args.only and args.only not in suites:
+        ap.error(f"unknown suite {args.only!r}; choose from {sorted(suites)}")
+    common.RESULTS.clear()  # in-process reruns must not accumulate rows
     print("name,us_per_call,derived")
+    errors: list[str] = []
     for key, fn in suites.items():
         if args.only and key != args.only:
             continue
         try:
-            fn(quick=quick)
-        except TypeError:
-            fn()
+            if "quick" in inspect.signature(fn).parameters:
+                fn(quick=quick)
+            else:
+                fn()
         except Exception as e:  # report, keep the suite going
+            errors.append(f"{key}: {type(e).__name__}: {e}")
             print(f"{key}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
+
+    if args.json:
+        payload = {
+            "mode": "smoke" if args.smoke else ("full" if args.full else "quick"),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "rows": common.RESULTS,
+            "errors": errors,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(common.RESULTS)} rows to {args.json}", file=sys.stderr)
+
+    if args.smoke and errors:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -56,6 +56,32 @@ def main():
     print(f"batched device search agrees ✓ "
           f"({[len(h) for h in batch_hits]} hits per pattern)")
 
+    # 6. analytics: the global LCP array over the flattened index unlocks
+    #    substring analytics beyond exact search (repro.core.analytics)
+    eng = idx.analytics()
+    rep = eng.longest_repeat()
+    motif = alphabet.decode(s[rep["witness"] : rep["witness"] + rep["length"]])
+    print(f"longest repeated substring: {rep['length']} symbols × "
+          f"{rep['count']} occurrences ({motif[:32]!r}…)")
+    print(f"distinct substrings: {eng.distinct_substrings():,}")
+
+    # matching statistics: per-position longest match of a query vs the
+    # index — a planted slice matches deep, a random tail matches shallow
+    rng = np.random.default_rng(1)
+    query = np.concatenate([
+        s[5_000:5_040],
+        rng.integers(0, 4, size=40).astype(np.uint8),
+    ])
+    ms, witness = eng.matching_stats(query)
+    assert ms[0] >= 40  # the planted slice matches at least itself
+    assert 5_000 in (witness[0], *ref_positions(idx, query[:ms[0]]))
+    print(f"matching statistics: planted head matches {ms[0]} symbols, "
+          f"random tail averages {ms[40:].mean():.1f}")
+
+
+def ref_positions(idx, pattern):
+    return idx.find(np.asarray(pattern)).tolist()
+
 
 if __name__ == "__main__":
     main()

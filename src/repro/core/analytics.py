@@ -1,0 +1,378 @@
+"""Device-resident LCP + analytics engine over the flattened ERA index.
+
+The ERA paper motivates suffix trees by their applications (bioinformatics,
+time-series mining, compression); exact-occurrence lookup is only the first
+of them.  This module turns the flattened index (:class:`DeviceIndex`, whose
+concatenated leaf array IS the suffix array of S) into the classic SA + LCP
+analytics stack, entirely device-resident:
+
+* **Global LCP array** — ``lcp[i] = LCP(suffix ell[i-1], suffix ell[i])``.
+  Intra-subtree entries are free: they are exactly the ``b_off`` divergence
+  depths SubTreePrepare already computed (paper lines 16-23).  Only the
+  T-1 cross-subtree boundary entries are missing, and because the vertical
+  partition prefixes are prefix-free, each boundary LCP is strictly smaller
+  than the shorter prefix — one bounded-width pass of the
+  :func:`repro.kernels.ops.suffix_lcp_pairs` kernel fills them all.
+* **Sparse-table RMQ** (:mod:`repro.core.rmq`, shared with the parallel
+  tree builder) — O(1) LCP-interval queries ``LCP(ell[i], ell[j]) =
+  min(lcp[i+1..j])`` and O(log n) maximal-interval expansion.
+
+Four batched workloads ride on top, each cross-checked against naive numpy
+oracles in ``tests/test_analytics.py``:
+
+* :meth:`AnalyticsEngine.matching_stats` — per-position longest-match
+  length + witness of a query string vs the index, one fused lower-bound
+  binary-search/probe pass reusing the ``pattern_probe`` kernel;
+* :meth:`AnalyticsEngine.top_repeats` / :meth:`longest_repeat` — maximal
+  repeated substrings via top-k over the LCP array + interval expansion;
+* :meth:`AnalyticsEngine.distinct_substrings` — n(n+1)/2 − ΣLCP;
+* :meth:`AnalyticsEngine.kmer_spectrum` / :meth:`top_kmers` — k-mer
+  frequencies as an LCP<k boundary sweep (cross-checked against the
+  ``kmer_histogram`` kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, rmq
+from repro.core import query as query_mod
+from repro.core.query import DeviceIndex
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+_MS_BATCH_PAD = 64  # query positions round up to this (bounds recompiles)
+
+
+# ---------------------------------------------------------------------------
+# jitted cores (module-level so tracing caches across engine instances)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas", "w"))
+def _matching_stats(s_padded, ell, win_lo, win_hi, pows, q_ext, n_q,
+                    *, k_route: int, n_iter: int, use_pallas: bool, w: int):
+    """Matching statistics of query positions 0..B-1 vs the suffix array.
+
+    q_ext: (B + w,) int32 query codes, terminal-padded past ``n_q``.  Each
+    position's window ``q[i:i+w]`` is routed and lower-bounded exactly like
+    a ``find_batch`` pattern (the probe kernel is the only gather in the
+    search); the max-LCP suffix is then one of the two lexicographic
+    neighbors of the insertion point.  Returns (ms, witness): int32[B].
+    """
+    b = q_ext.shape[0] - w
+    total = ell.shape[0]
+    probe = kops.pattern_probe_impl(use_pallas)
+
+    idx = jnp.arange(b, dtype=jnp.int32)
+    windows = q_ext[idx[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]]
+    pat_words = packing.pack_words(windows)
+    mask_words = jnp.full_like(pat_words, -1)  # full-width comparison
+
+    # routing: the window is always k_route symbols deep (terminal-padded),
+    # so its depth-k_route code owns exactly one cell.
+    c = jnp.sum(windows[:, :k_route] * pows[None, :], axis=1)
+    lo0 = win_lo[c]
+    hi0 = jnp.maximum(win_hi[c], lo0)
+
+    def body(_, st):
+        lo, hi = st
+        mid = (lo + hi) // 2
+        pos = ell[jnp.clip(mid, 0, total - 1)]
+        cmp = probe(s_padded, pos, pat_words, mask_words)
+        act = lo < hi
+        lo = jnp.where(act & (cmp < 0), mid + 1, lo)
+        hi = jnp.where(act & (cmp >= 0), mid, hi)
+        return lo, hi
+
+    pos, _ = jax.lax.fori_loop(0, n_iter, body, (lo0, hi0))
+
+    # the suffix maximizing LCP with the window is a lex neighbor of the
+    # insertion point; compare both neighbors' packed reads with the window.
+    left_row = jnp.clip(pos - 1, 0, total - 1)
+    right_row = jnp.clip(pos, 0, total - 1)
+    lw = packing.gather_pack(s_padded, ell[left_row], w)
+    rw = packing.gather_pack(s_padded, ell[right_row], w)
+    lcp_l = jnp.where(pos > 0, kref.lcp_pairs_ref(lw, pat_words, w)[0], 0)
+    lcp_r = jnp.where(pos < total, kref.lcp_pairs_ref(rw, pat_words, w)[0], 0)
+    best = jnp.maximum(lcp_l, lcp_r)
+    # window symbols past the query end are terminal padding: clipping to
+    # the remaining query length makes the padded computation exact.
+    ms = jnp.clip(jnp.minimum(best, n_q - idx), 0)
+    wit_row = jnp.where(lcp_l >= lcp_r, left_row, right_row)
+    witness = jnp.where(ms > 0, ell[wit_row], -1)
+    return jnp.stack([ms, witness])  # one array -> one host sync
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _top_repeats(vals, vals_rev, lcp, ell, *, k: int):
+    """Top-k LCP entries expanded to maximal repeat intervals.
+
+    For row i with v = lcp[i] >= 1, the maximal run jl < i <= jn with
+    ``lcp[jl] < v``, ``lcp[jn] < v`` (walls exist: lcp[0] = 0) spans the
+    suffix rows jl..jn-1 that all share the length-v prefix — so the repeat
+    occurs exactly ``jn - jl`` times.  Returns (v, count, witness, jl, jn).
+    """
+    total = lcp.shape[0]
+    v, i = jax.lax.top_k(lcp, k)
+    target = jnp.maximum(v, 1)  # v == 0 rows are filtered by the caller
+    jl = rmq.prev_less(list(vals), i, target)
+    jn = total - rmq.prev_less(list(vals_rev), total - i, target)
+    return v, jn - jl, ell[i], jl, jn
+
+
+@functools.partial(jax.jit, static_argnames=("k", "topk"))
+def _kmer_spectrum(ell, lcp, *, k: int, topk: int):
+    """k-mer groups as maximal runs of lcp >= k; counts skip suffixes
+    shorter than k (they are always singleton groups: lcp <= length < k)."""
+    total = ell.shape[0]
+    rows = jnp.arange(total, dtype=jnp.int32)
+    valid = (ell + k) <= total  # suffix long enough to host a full k-mer
+    gid = jnp.cumsum((lcp < k).astype(jnp.int32)) - 1  # lcp[0]=0 -> gid[0]=0
+    counts = jnp.zeros(total, jnp.int32).at[gid].add(valid.astype(jnp.int32))
+    rep = jnp.full(total, total, jnp.int32).at[gid].min(
+        jnp.where(valid, rows, total))
+    top_c, top_g = jax.lax.top_k(counts, topk)
+    top_pos = ell[jnp.clip(rep[top_g], 0, total - 1)]
+    return counts, rep, top_c, top_pos
+
+
+@jax.jit
+def _lcp_rows(vals, lcp, ell, i, j):
+    """LCP of the suffixes at SA rows i and j (batched, i == j allowed)."""
+    total = lcp.shape[0]
+    lo = jnp.minimum(i, j)
+    hi = jnp.maximum(i, j)
+    pair = rmq.range_min(list(vals), jnp.minimum(lo + 1, total - 1), hi)
+    return jnp.where(lo == hi, total - ell[lo], pair)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsEngine:
+    """LCP array + RMQ + batched analytics over a :class:`DeviceIndex`."""
+
+    dev: DeviceIndex
+    lcp: jax.Array                      # int32[total]; lcp[0] == 0
+    lcp_host: np.ndarray
+    vals: tuple                         # forward range-min sparse table
+    vals_rev: tuple                     # table over [-1] + lcp[::-1] (NSV)
+
+    @property
+    def total(self) -> int:
+        return int(self.lcp_host.shape[0])
+
+    # ---- construction -----------------------------------------------------
+
+    @classmethod
+    def from_index(cls, index, dev: DeviceIndex | None = None,
+                   **device_kwargs) -> "AnalyticsEngine":
+        """Build from a :class:`SuffixTreeIndex`: seed intra-subtree LCPs
+        from the stored ``b_off`` divergence depths, fill the cross-subtree
+        boundaries with the batched suffix-LCP kernel."""
+        if dev is None:
+            dev = DeviceIndex.from_index(index, **device_kwargs)
+        prefixes = sorted(index.subtrees)
+        parts = []
+        for p in prefixes:
+            b = np.asarray(index.subtrees[p].b_off, np.int32).copy()
+            if len(b):
+                b[0] = 0
+            parts.append(b)
+        lcp = np.concatenate(parts).astype(np.int32)
+        if len(prefixes) > 1:
+            bnd = np.asarray(dev.sub_off)[1:].astype(np.int64)
+            ell = dev.ell_host
+            # prefix-freeness bounds every boundary LCP below the shorter
+            # prefix length; one fixed-width kernel pass covers them all.
+            max_plen = max(len(p) for p in prefixes)
+            w = -(-(max_plen + 1) // 4) * 4
+            if w <= dev.max_pattern_len:  # dev padding already covers w
+                s_pad = dev.s_padded
+            else:
+                s_pad = jnp.asarray(index.alphabet.pad_string(
+                    np.asarray(index.s), extra=w + 8))
+            cross = kops.suffix_lcp_pairs(
+                s_pad, jnp.asarray(ell[bnd - 1], jnp.int32),
+                jnp.asarray(ell[bnd], jnp.int32), w)
+            lcp[bnd] = np.asarray(cross)
+        return cls.from_device(dev, lcp)
+
+    @classmethod
+    def from_device(cls, dev: DeviceIndex, lcp) -> "AnalyticsEngine":
+        lcp_host = np.asarray(lcp, np.int32)
+        total = int(lcp_host.shape[0])
+        if total != dev.n_leaves:
+            raise ValueError(f"lcp length {total} != n_leaves {dev.n_leaves}")
+        h = jnp.asarray(lcp_host)
+        n_levels = rmq.log2_ceil(max(total, 2)) + 2
+        vals, _ = rmq.sparse_table(h, n_levels)
+        h_rev_ext = jnp.concatenate([jnp.array([-1], jnp.int32), h[::-1]])
+        vals_rev, _ = rmq.sparse_table(h_rev_ext, n_levels)
+        return cls(dev=dev, lcp=h, lcp_host=lcp_host,
+                   vals=tuple(vals), vals_rev=tuple(vals_rev))
+
+    # ---- persistence ------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """One npz holding the flattened index AND the LCP array, so
+        ``analytics_serve`` restarts skip both build and flatten."""
+        blobs = self.dev.to_blobs()
+        blobs["lcp"] = self.lcp_host
+        np.savez_compressed(query_mod.npz_path(path), **blobs)
+
+    @classmethod
+    def load(cls, path: str) -> "AnalyticsEngine":
+        with np.load(query_mod.npz_path(path)) as data:
+            if "lcp" not in data:
+                raise ValueError(
+                    f"{path} has no 'lcp' array — it is a DeviceIndex "
+                    f"(query_serve) cache, not an analytics cache; rebuild "
+                    f"with AnalyticsEngine.save")
+            dev = DeviceIndex.from_blobs(data)
+            lcp = np.asarray(data["lcp"])
+        return cls.from_device(dev, lcp)
+
+    # ---- LCP-interval queries --------------------------------------------
+
+    def lcp_rows(self, i, j) -> np.ndarray:
+        """Batched LCP of the suffixes at SA rows ``i`` and ``j`` (any
+        order; equal rows return the full suffix length)."""
+        i = jnp.asarray(i, jnp.int32)
+        j = jnp.asarray(j, jnp.int32)
+        return np.asarray(_lcp_rows(self.vals, self.lcp, self.dev.ell, i, j))
+
+    # ---- matching statistics ---------------------------------------------
+
+    def matching_stats(self, q, *, window: int | None = None):
+        """Per-position longest match of ``q`` against the indexed string.
+
+        Returns ``(ms, witness)``: for each i, ``ms[i]`` is the length of
+        the longest prefix of ``q[i:]`` occurring somewhere in S and
+        ``witness[i]`` one position where it occurs (-1 when ms == 0).
+        Lengths are capped at ``window`` (default: the index's
+        ``max_pattern_len``, the same cap ``find_batch`` has).
+        """
+        q = np.asarray(q)
+        if q.ndim != 1 or len(q) < 1:
+            raise ValueError("query must be a non-empty 1-D code array")
+        if q.min() < 0 or q.max() >= self.dev.base:
+            raise ValueError(f"query has codes outside [0, {self.dev.base})")
+        w_cap = (self.dev.max_pattern_len // 4) * 4  # stay within pad_batch's cap
+        w_req = int(window) if window is not None else w_cap
+        if w_req < 1:
+            raise ValueError("window must be >= 1")
+        w = -(-max(w_req, self.dev.k_route, 4) // 4) * 4  # packing granularity
+        if w > w_cap:
+            raise ValueError(
+                f"window {w} exceeds max_pattern_len={self.dev.max_pattern_len} "
+                f"(rounded to {w_cap})")
+        b_pad = -(-len(q) // _MS_BATCH_PAD) * _MS_BATCH_PAD
+        q_ext = np.full(b_pad + w, self.dev.base - 1, np.int32)
+        q_ext[: len(q)] = q
+        out = np.asarray(_matching_stats(
+            self.dev.s_padded, self.dev.ell, self.dev.win_lo, self.dev.win_hi,
+            self.dev.pows, q_ext, np.int32(len(q)),
+            k_route=self.dev.k_route, n_iter=self.dev.n_iter,
+            use_pallas=kops._use_pallas(), w=w))
+        # re-apply the caller's exact cap (w was rounded up to whole words;
+        # a witness matching >= ms symbols stays valid after clipping)
+        return np.minimum(out[0, : len(q)], w_req), out[1, : len(q)]
+
+    # ---- repeats ----------------------------------------------------------
+
+    def top_repeats(self, k: int = 10) -> list[dict]:
+        """Up to ``k`` deepest maximal repeat intervals, longest first.
+
+        Each entry: ``length`` (symbols), ``count`` (occurrences),
+        ``witness`` (one start position), ``rows`` (the SA row interval
+        [lo, hi) of all occurrences).  Ties on the same interval dedupe.
+        """
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        # a high-multiplicity repeat contributes MANY equal LCP rows that
+        # dedupe to one interval, so the candidate pool grows (recompiling
+        # _top_repeats at most a few times) until k distinct intervals are
+        # found or the LCP array is exhausted.
+        kk = min(self.total, 4 * k)
+        while True:
+            v, count, wit, jl, jn = _top_repeats(
+                self.vals, self.vals_rev, self.lcp, self.dev.ell, k=kk)
+            out, seen = [], set()
+            exhausted = False
+            for vi, ci, wi, li, ni in zip(
+                    np.asarray(v), np.asarray(count), np.asarray(wit),
+                    np.asarray(jl), np.asarray(jn)):
+                if vi <= 0:
+                    exhausted = True  # no repeats beyond this point
+                    break
+                key = (int(li), int(ni))
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append({"length": int(vi), "count": int(ci),
+                            "witness": int(wi), "rows": (int(li), int(ni))})
+                if len(out) == k:
+                    break
+            if len(out) == k or exhausted or kk == self.total:
+                return out
+            kk = min(self.total, 4 * kk)
+
+    def longest_repeat(self) -> dict | None:
+        """The longest substring occurring >= 2 times (None if all suffixes
+        diverge immediately, i.e. every LCP entry is zero)."""
+        top = self.top_repeats(1)
+        return top[0] if top else None
+
+    # ---- counting ---------------------------------------------------------
+
+    def distinct_substrings(self, *, include_terminal: bool = False) -> int:
+        """Number of distinct non-empty substrings: n(n+1)/2 − ΣLCP over the
+        n = |S| suffixes.  By default the n substrings containing the
+        terminal ``$`` (one per suffix ending) are excluded."""
+        n = self.total
+        full = n * (n + 1) // 2 - int(self.lcp_host.astype(np.int64).sum())
+        return full - n if not include_terminal else full
+
+    # ---- k-mer spectrum ---------------------------------------------------
+
+    def kmer_spectrum(self, k: int):
+        """All distinct k-mers of S as ``(starts, counts)``: one witness
+        start position and the occurrence count per k-mer (suffixes shorter
+        than ``k`` never contribute)."""
+        if not 1 <= k <= self.total:
+            raise ValueError(f"need 1 <= k <= {self.total}")
+        counts, rep, _, _ = _kmer_spectrum(self.dev.ell, self.lcp, k=k, topk=1)
+        counts = np.asarray(counts)
+        rep = np.asarray(rep)
+        mask = counts > 0
+        starts = self.dev.ell_host[rep[mask]].astype(np.int64)
+        return starts, counts[mask].astype(np.int64)
+
+    def top_kmers(self, k: int, topk: int = 10) -> list[dict]:
+        """The ``topk`` most frequent k-mers: ``kmer`` (code array),
+        ``count``, ``witness`` (one start position)."""
+        if not 1 <= k <= self.total:
+            raise ValueError(f"need 1 <= k <= {self.total}")
+        tk = min(int(topk), self.total)
+        _, _, top_c, top_pos = _kmer_spectrum(self.dev.ell, self.lcp,
+                                              k=k, topk=tk)
+        # gather the (topk, k) windows on device; transferring the whole
+        # string to read topk*k symbols would be an O(n) copy per call
+        wins = np.asarray(jnp.take(
+            self.dev.s_padded,
+            top_pos[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :],
+            axis=0))
+        out = []
+        for c, p, w in zip(np.asarray(top_c), np.asarray(top_pos), wins):
+            if c <= 0:
+                break
+            out.append({"kmer": w.copy(), "count": int(c), "witness": int(p)})
+        return out

@@ -173,3 +173,11 @@ class EraIndexer:
         (:class:`repro.core.query.DeviceIndex`)."""
         index = self.build(s, report)
         return index, index.to_device(**device_kwargs)
+
+    def build_analytics(self, s: np.ndarray, report: BuildReport | None = None,
+                        **device_kwargs):
+        """Build + flatten + LCP in one step: returns ``(index, engine)``
+        where the second element is the device-resident analytics engine
+        (:class:`repro.core.analytics.AnalyticsEngine`)."""
+        index = self.build(s, report)
+        return index, index.analytics(**device_kwargs)

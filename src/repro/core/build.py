@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import clz32 as _clz32_arr
+from repro.core import rmq
 
 
 class SubTreeNodes(NamedTuple):
@@ -161,41 +161,8 @@ def build_scan(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNodes:
 # ---------------------------------------------------------------------------
 # Beyond-paper: fully parallel Cartesian-tree builder (ANSV by doubling)
 # ---------------------------------------------------------------------------
-
-def _log2_ceil(x: int) -> int:
-    return max(1, int(np.ceil(np.log2(max(2, x)))))
-
-
-def _sparse_table(h: jax.Array, n_levels: int):
-    """Leftmost-argmin sparse table over ``h``. Returns (vals, args) lists."""
-    n = h.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    big = jnp.iinfo(jnp.int32).max
-    vals = [h]
-    args = [idx]
-    span = 1
-    for _ in range(n_levels):
-        src = jnp.minimum(idx + span, n - 1)
-        valid = (idx + span) < n
-        shifted_v = jnp.where(valid, vals[-1][src], big)
-        shifted_a = jnp.where(valid, args[-1][src], n)
-        take_left = vals[-1] <= shifted_v  # ties -> leftmost
-        vals.append(jnp.where(take_left, vals[-1], shifted_v))
-        args.append(jnp.where(take_left, args[-1], shifted_a))
-        span *= 2
-    return vals, args
-
-
-def _range_min(vals, lo: jax.Array, hi: jax.Array):
-    """min over h[lo..hi] inclusive, vectorized; requires lo <= hi."""
-    length = hi - lo + 1
-    k = jnp.maximum(0, 31 - _clz32_arr(length))  # floor(log2(length))
-    n_levels = len(vals) - 1
-    k = jnp.minimum(k, n_levels)
-    stacked = jnp.stack(vals)  # (levels+1, n)
-    left = stacked[k, lo]
-    right = stacked[k, jnp.maximum(hi - (1 << k) + 1, lo)]
-    return jnp.minimum(left, right)
+# The sparse-table RMQ machinery this builder runs on is shared with the
+# analytics engine and lives in :mod:`repro.core.rmq`.
 
 
 def build_parallel(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNodes:
@@ -215,51 +182,22 @@ def build_parallel(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNod
         return SubTreeNodes(parent, depth, witness, 2, 1)
 
     h = b_off.astype(jnp.int32).at[0].set(-1)  # sentinel left wall at 0
-    n_levels = _log2_ceil(f) + 2
-    vals, _args = _sparse_table(h, n_levels)
+    n_levels = rmq.log2_ceil(f) + 2
+    vals, args = rmq.sparse_table(h, n_levels)
     idx = jnp.arange(f, dtype=jnp.int32)
 
-    def _descend(tbl_vals, init_pos, target):
-        """largest j < init_pos with arr[j] < target, via block skipping.
-
-        Requires arr[0] < target for all queried targets (the wall)."""
-
-        def body(k, pos):
-            step = 1 << (n_levels - 1 - k)
-            cand = pos - step
-            lo = jnp.maximum(cand, 0)
-            blockmin = _range_min(tbl_vals, lo, jnp.maximum(pos - 1, lo))
-            jump = (cand >= 1) & (blockmin >= target) & (pos - 1 >= lo)
-            return jnp.where(jump, cand, pos)
-
-        pos = jax.lax.fori_loop(0, n_levels, body, init_pos)
-        return pos - 1
-
     # psv[i]: largest j < i with h[j] < h[i]  (exists: h[0] = -1 wall)
-    psv = _descend(vals, idx, h)
+    psv = rmq.prev_less(vals, idx, h)
 
     # nsv[i]: smallest j > i with h[j] < h[i]; == f if none.  Computed as a
     # PSV over [wall] + reversed(h): extended index r <-> original f - r.
     h_rev_ext = jnp.concatenate([jnp.array([-1], jnp.int32), h[::-1]])
-    vals_rev, _ = _sparse_table(h_rev_ext, n_levels)
-    psv_rev = _descend(vals_rev, f - idx, h)  # init f - i, target h[i]
+    vals_rev, _ = rmq.sparse_table(h_rev_ext, n_levels)
+    psv_rev = rmq.prev_less(vals_rev, f - idx, h)  # init f - i, target h[i]
     nsv = f - psv_rev
 
     # canonical representative: leftmost argmin of h in (psv[i], i]
-    _, args = _sparse_table(h, n_levels)
-
-    def _range_argmin(lo, hi):
-        length = hi - lo + 1
-        k = jnp.minimum(jnp.maximum(0, 31 - _clz32_arr(length)), n_levels)
-        sv = jnp.stack(vals)
-        sa = jnp.stack(args)
-        l_v, l_a = sv[k, lo], sa[k, lo]
-        hi2 = jnp.maximum(hi - (1 << k) + 1, lo)
-        r_v, r_a = sv[k, hi2], sa[k, hi2]
-        take_left = l_v <= r_v
-        return jnp.where(take_left, l_a, r_a)
-
-    rep = _range_argmin(psv + 1, idx)  # for event i (i>=1)
+    rep = rmq.range_argmin(vals, args, psv + 1, idx)  # for event i (i>=1)
     rep = rep.at[0].set(0)
 
     # parent event: the deeper of h[psv], h[nsv]; rep() of that event.
@@ -273,7 +211,8 @@ def build_parallel(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNod
     # node ids: internal node for canonical event j lives at id f + j
     # (j >= 1); the sub-tree root is the canonical event of the global min.
     is_rep = rep == idx
-    root_event = _range_argmin(jnp.ones((), jnp.int32), jnp.full((), f - 1, jnp.int32))
+    root_event = rmq.range_argmin(vals, args, jnp.ones((), jnp.int32),
+                                  jnp.full((), f - 1, jnp.int32))
     root_id = f + root_event
 
     cap = 2 * f

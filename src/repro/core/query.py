@@ -42,6 +42,13 @@ from repro.core import packing
 from repro.kernels import ops as kops
 
 
+def npz_path(path: str) -> str:
+    """The path ``np.savez_compressed`` actually writes (it appends
+    ``.npz`` when missing); every save/load here normalizes through this
+    so bare paths round-trip."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
 @functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas"))
 def _find_batch_ranges(s_padded, ell, win_lo, win_hi, pows, spans,
                        patterns, lengths, route_syms,
@@ -200,6 +207,39 @@ class DeviceIndex:
             pows=jnp.asarray(pows),
             spans=jnp.asarray(spans),
         )
+
+    # ---- persistence ------------------------------------------------------
+    # The flattened form round-trips through npz so serving drivers
+    # (query_serve / analytics_serve) can start without re-building and
+    # re-flattening the index.  AnalyticsEngine reuses the blob helpers to
+    # store its LCP array alongside the same fields in one file.
+
+    _BLOB_FIELDS = ("s_padded", "ell", "sub_off", "sub_freq", "sub_prefix",
+                    "sub_plen", "win_lo", "win_hi", "pows", "spans")
+
+    def to_blobs(self) -> dict[str, np.ndarray]:
+        blobs = {"meta": np.array([self.base, self.k_route, self.n_iter,
+                                   self.max_pattern_len], np.int64)}
+        for name in self._BLOB_FIELDS:
+            blobs[name] = np.asarray(getattr(self, name))
+        return blobs
+
+    @classmethod
+    def from_blobs(cls, data) -> "DeviceIndex":
+        meta = np.asarray(data["meta"])
+        ell = np.asarray(data["ell"], np.int32)
+        fields = {name: jnp.asarray(data[name]) for name in cls._BLOB_FIELDS}
+        return cls(base=int(meta[0]), k_route=int(meta[1]), n_iter=int(meta[2]),
+                   max_pattern_len=int(meta[3]), ell_host=ell, **fields)
+
+    def save(self, path: str) -> None:
+        """Persist the flattened index (npz); ``load`` restores it exactly."""
+        np.savez_compressed(npz_path(path), **self.to_blobs())
+
+    @classmethod
+    def load(cls, path: str) -> "DeviceIndex":
+        with np.load(npz_path(path)) as data:
+            return cls.from_blobs(data)
 
     # ---- queries ----------------------------------------------------------
 

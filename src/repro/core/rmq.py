@@ -1,0 +1,94 @@
+"""Shared sparse-table range-minimum machinery (device-resident, O(1) query).
+
+Originally private to :mod:`repro.core.build` (the parallel Cartesian-tree
+builder computes all-nearest-smaller-values with it); the analytics engine
+(:mod:`repro.core.analytics`) needs the same structure over the GLOBAL LCP
+array for LCP-interval queries and maximal-repeat expansion, so the table
+lives here and both import it.
+
+Layout: ``sparse_table(h, L)`` returns ``(vals, args)`` — lists of
+``L + 1`` arrays where ``vals[k][i] = min(h[i : i + 2**k])`` (clipped to the
+array end) and ``args[k][i]`` the LEFTMOST index attaining it.  All queries
+are closed intervals ``[lo, hi]`` and fully vectorized (no data-dependent
+shapes), so they trace cleanly under ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import clz32
+
+
+def log2_ceil(x: int) -> int:
+    return max(1, int(np.ceil(np.log2(max(2, x)))))
+
+
+def sparse_table(h: jax.Array, n_levels: int):
+    """Leftmost-argmin sparse table over ``h``. Returns (vals, args) lists."""
+    n = h.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    big = jnp.iinfo(jnp.int32).max
+    vals = [h]
+    args = [idx]
+    span = 1
+    for _ in range(n_levels):
+        src = jnp.minimum(idx + span, n - 1)
+        valid = (idx + span) < n
+        shifted_v = jnp.where(valid, vals[-1][src], big)
+        shifted_a = jnp.where(valid, args[-1][src], n)
+        take_left = vals[-1] <= shifted_v  # ties -> leftmost
+        vals.append(jnp.where(take_left, vals[-1], shifted_v))
+        args.append(jnp.where(take_left, args[-1], shifted_a))
+        span *= 2
+    return vals, args
+
+
+def _level_of(length: jax.Array, n_levels: int) -> jax.Array:
+    """floor(log2(length)) clipped into the table's level range."""
+    k = jnp.maximum(0, 31 - clz32(length))
+    return jnp.minimum(k, n_levels)
+
+
+def range_min(vals, lo: jax.Array, hi: jax.Array):
+    """min over h[lo..hi] inclusive, vectorized; requires lo <= hi."""
+    k = _level_of(hi - lo + 1, len(vals) - 1)
+    stacked = jnp.stack(vals)  # (levels+1, n)
+    left = stacked[k, lo]
+    right = stacked[k, jnp.maximum(hi - (1 << k) + 1, lo)]
+    return jnp.minimum(left, right)
+
+
+def range_argmin(vals, args, lo: jax.Array, hi: jax.Array):
+    """Leftmost argmin over h[lo..hi] inclusive; requires lo <= hi."""
+    k = _level_of(hi - lo + 1, len(vals) - 1)
+    sv = jnp.stack(vals)
+    sa = jnp.stack(args)
+    l_v, l_a = sv[k, lo], sa[k, lo]
+    hi2 = jnp.maximum(hi - (1 << k) + 1, lo)
+    r_v, r_a = sv[k, hi2], sa[k, hi2]
+    take_left = l_v <= r_v
+    return jnp.where(take_left, l_a, r_a)
+
+
+def prev_less(vals, init_pos: jax.Array, target: jax.Array) -> jax.Array:
+    """Largest ``j < init_pos`` with ``h[j] < target``, via block skipping.
+
+    Requires ``h[0] < target`` for every queried target (a sentinel wall),
+    so the result is always >= 0.  O(n_levels) fixed-trip loop, vectorized
+    over arbitrarily-shaped ``init_pos``/``target``.
+    """
+    n_levels = len(vals) - 1
+
+    def body(k, pos):
+        step = 1 << (n_levels - 1 - k)
+        cand = pos - step
+        lo = jnp.maximum(cand, 0)
+        blockmin = range_min(vals, lo, jnp.maximum(pos - 1, lo))
+        jump = (cand >= 1) & (blockmin >= target) & (pos - 1 >= lo)
+        return jnp.where(jump, cand, pos)
+
+    pos = jax.lax.fori_loop(0, n_levels, body, init_pos)
+    return pos - 1

@@ -62,6 +62,7 @@ class SuffixTreeIndex:
     alphabet: Alphabet
     subtrees: dict[tuple[int, ...], SubTree]
     _device: object = dataclasses.field(default=None, repr=False, compare=False)
+    _analytics: object = dataclasses.field(default=None, repr=False, compare=False)
 
     # ---- top trie ---------------------------------------------------------
 
@@ -202,6 +203,23 @@ class SuffixTreeIndex:
         if self._device is None:
             self._device = self.to_device()
         return self._device.find_batch(patterns)
+
+    def analytics(self, **kwargs):
+        """Build the LCP + analytics engine
+        (:class:`repro.core.analytics.AnalyticsEngine`) over this index:
+        matching statistics, maximal repeats, distinct-substring counts and
+        k-mer spectra.  Without flattening kwargs, the engine AND its
+        flattened device form are shared with ``find_batch`` (built
+        lazily, cached once)."""
+        from repro.core.analytics import AnalyticsEngine  # avoid import cycle
+
+        if kwargs:
+            return AnalyticsEngine.from_index(self, **kwargs)
+        if self._analytics is None:
+            if self._device is None:
+                self._device = self.to_device()
+            self._analytics = AnalyticsEngine.from_index(self, dev=self._device)
+        return self._analytics
 
     # ---- stats / io -------------------------------------------------------
 

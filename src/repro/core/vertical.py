@@ -10,16 +10,20 @@ Two counting strategies:
 * ``histogram`` (paper-faithful): iteration ``t`` makes one vectorized pass
   over S computing rolling base-``|Σ|+1`` codes of every length-``t`` window
   and histograms them against the working set.  This mirrors the paper's
-  "scan S once per iteration" I/O behaviour; on TPU the pass is the
-  ``kmer_histogram`` Pallas kernel.
+  "scan S once per iteration" I/O behaviour; when the Pallas kernels are
+  selected (``REPRO_KERNELS=pallas`` or a TPU backend — see
+  :mod:`repro.kernels.ops`) and ``base**t`` fits VMEM, the counting pass is
+  the ``kmer_histogram`` kernel and the host only materializes positions
+  for surviving prefixes (one stable argsort + group slicing per
+  iteration, not one O(n) scan per survivor).
 * ``positions`` (beyond-paper): once a prefix overflows, its occurrence list
   is materialized and children are counted by gathering ``S[pos + t]`` —
   O(f_p) work instead of an O(n) scan.  Also used automatically when
   ``base**t`` would overflow int64.
 
 Frequencies count *window occurrences* which equal suffix counts because the
-terminal ``$`` (code 0) makes every suffix distinct and windows are padded
-with 0 beyond the end of the string.
+terminal ``$`` (the LARGEST code, ``base - 1``) makes every suffix distinct
+and windows are padded with the terminal code beyond the end of the string.
 """
 
 from __future__ import annotations
@@ -71,6 +75,56 @@ def _window_codes(s_padded: np.ndarray, n: int, t: int, base: int,
     return prev * base + s_padded[t - 1 : t - 1 + n].astype(np.int64)
 
 
+_KERNEL_NBINS_MAX = 1 << 16  # kmer_histogram VMEM-residency bound
+
+
+def _candidate_counts(s_padded: np.ndarray, codes: np.ndarray, n: int,
+                      t: int, base: int,
+                      cand: np.ndarray) -> np.ndarray:
+    """Frequency of each candidate depth-``t`` prefix code.
+
+    Dispatches to the ``kmer_histogram`` Pallas kernel (full base**t
+    histogram in VMEM, indexed at the candidate codes) when the kernel path
+    is selected and the bin count fits; otherwise counts on the host via
+    searchsorted + bincount against the sorted candidate set.
+    """
+    from repro.kernels import ops as kops  # local: keep numpy path jax-free
+
+    if kops._use_pallas() and base**t <= _KERNEL_NBINS_MAX:
+        import jax.numpy as jnp
+
+        hist = np.asarray(kops.kmer_histogram(
+            jnp.asarray(s_padded[: n + max(t, 2)]), n, t, base))
+        return hist[cand].astype(np.int64)
+    order = np.argsort(cand)
+    cand_sorted = cand[order]
+    idx = np.searchsorted(cand_sorted, codes)
+    idx_clipped = np.minimum(idx, len(cand_sorted) - 1)
+    hit = cand_sorted[idx_clipped] == codes
+    counts = np.bincount(idx_clipped[hit], minlength=len(cand_sorted))
+    freq = np.zeros(len(cand), dtype=np.int64)
+    freq[order] = counts  # map sorted index back to candidate order
+    return freq
+
+
+class _PositionIndex:
+    """One stable argsort of the window codes, sliced per survivor.
+
+    Replaces the former ``np.nonzero(codes == code)`` per survivor —
+    O(n · #survivors) — with one O(n log n) grouping pass per iteration;
+    stable sort keeps each group's positions already ascending.
+    """
+
+    def __init__(self, codes: np.ndarray):
+        self.order = np.argsort(codes, kind="stable").astype(np.int64)
+        self.sorted_codes = codes[self.order]
+
+    def positions_of(self, code: int) -> np.ndarray:
+        lo = np.searchsorted(self.sorted_codes, code, side="left")
+        hi = np.searchsorted(self.sorted_codes, code, side="right")
+        return self.order[lo:hi].copy()
+
+
 def vertical_partition(
     s: np.ndarray,
     base: int,
@@ -111,23 +165,16 @@ def vertical_partition(
                 [sum(c * base ** (t - 1 - j) for j, c in enumerate(p)) for p in work],
                 dtype=np.int64,
             )
-            order = np.argsort(cand)
-            cand_sorted = cand[order]
-            idx = np.searchsorted(cand_sorted, codes)
-            idx_clipped = np.minimum(idx, len(cand_sorted) - 1)
-            hit = cand_sorted[idx_clipped] == codes
-            counts = np.bincount(idx_clipped[hit], minlength=len(cand_sorted))
+            freq_by_work = _candidate_counts(s_padded, codes, n, t, base, cand)
             nxt: list[tuple[int, ...]] = []
-            # map sorted index back to working-set order
-            freq_by_work = np.zeros(len(work), dtype=np.int64)
-            freq_by_work[order] = counts
+            pos_index: _PositionIndex | None = None
             for w_i, p in enumerate(work):
                 f = int(freq_by_work[w_i])
                 if 0 < f <= f_max:
+                    if pos_index is None:  # one grouping pass per iteration
+                        pos_index = _PositionIndex(codes)
                     survivors.append((p, f))
-                    code = int(cand[w_i])
-                    pos = np.nonzero(codes == code)[0].astype(np.int64)
-                    survivor_positions[p] = pos
+                    survivor_positions[p] = pos_index.positions_of(int(cand[w_i]))
                 elif f > f_max:
                     nxt.extend(p + (c,) for c in range(base))
             work = nxt

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import stage_tiles
+
 
 def _kernel(s_lo_ref, s_hi_ref, out_ref, *, tile: int, k: int, base: int, n: int, nbins: int):
     i = pl.program_id(0)
@@ -58,11 +60,7 @@ def kmer_histogram(
     nbins = base**k
     assert nbins <= (1 << 16), "histogram too wide for VMEM residency"
     assert k <= tile
-    n_tiles = -(-n // tile) + 1
-    pad_val = s_padded[-1]
-    s_rows = jnp.full((n_tiles * tile,), pad_val, s_padded.dtype)
-    s_rows = jax.lax.dynamic_update_slice(s_rows, s_padded, (0,))
-    s_rows = s_rows.reshape(n_tiles, tile).astype(jnp.int32)
+    s_rows, n_tiles = stage_tiles(s_padded, tile)
 
     return pl.pallas_call(
         functools.partial(_kernel, tile=tile, k=k, base=base, n=n, nbins=nbins),

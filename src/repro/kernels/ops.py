@@ -21,6 +21,7 @@ from repro.kernels.kmer_histogram import kmer_histogram as _kmer_pallas
 from repro.kernels.lcp import lcp_pairs as _lcp_pallas
 from repro.kernels.pattern_probe import pattern_probe as _probe_pallas
 from repro.kernels.range_gather import range_gather_pack as _gather_pallas
+from repro.kernels.suffix_lcp import suffix_lcp_pairs as _suffix_lcp_pallas
 
 
 def _on_tpu() -> bool:
@@ -46,6 +47,13 @@ def kmer_histogram(s_padded, n: int, k: int, base: int):
     if _use_pallas():
         return _kmer_pallas(s_padded, n, k, base, interpret=not _on_tpu())
     return _ref.kmer_histogram_ref(s_padded, n, k, base)
+
+
+def suffix_lcp_pairs(s_padded, pos_a, pos_b, w: int):
+    if _use_pallas():
+        return _suffix_lcp_pallas(s_padded, pos_a, pos_b, w,
+                                  interpret=not _on_tpu())
+    return _ref.suffix_lcp_pairs_ref(s_padded, pos_a, pos_b, w)
 
 
 def lcp_pairs(a, b, w: int):

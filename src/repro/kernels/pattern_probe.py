@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiles import stage_tiles
+
 
 def _kernel(pos_ref, s_lo_ref, s_hi_ref, pat_ref, mask_ref, out_ref,
             *, tile: int, w: int):
@@ -71,12 +73,7 @@ def pattern_probe(
     w = n_words * 4
     assert mask_words.shape == (b, n_words) and pos.shape == (b,)
     tile = max(tile, w)  # long patterns (to_device(max_pattern_len=...)) grow the window
-    n = s_padded.shape[0]
-    n_tiles = -(-n // tile) + 1  # +1 halo row so (row, row+1) always exists
-    pad_val = s_padded[-1]  # terminal padding continues the last element
-    s_rows = jnp.full((n_tiles * tile,), pad_val, s_padded.dtype)
-    s_rows = jax.lax.dynamic_update_slice(s_rows, s_padded, (0,))
-    s_rows = s_rows.reshape(n_tiles, tile).astype(jnp.int32)
+    s_rows, _ = stage_tiles(s_padded, tile)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

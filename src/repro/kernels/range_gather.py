@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import PACK_WEIGHTS
+from repro.kernels.tiles import stage_tiles
 
 
 def _kernel(offs_ref, s_lo_ref, s_hi_ref, out_ref, *, tile: int, w: int):
@@ -54,12 +55,7 @@ def range_gather_pack(
     """
     assert w % 4 == 0 and w <= tile, (w, tile)
     f = offs.shape[0]
-    n = s_padded.shape[0]
-    n_tiles = -(-n // tile) + 1  # +1 halo row so (row, row+1) always exists
-    pad_val = s_padded[-1]  # terminal padding continues the last element
-    s_rows = jnp.full((n_tiles * tile,), pad_val, s_padded.dtype)
-    s_rows = jax.lax.dynamic_update_slice(s_rows, s_padded, (0,))
-    s_rows = s_rows.reshape(n_tiles, tile).astype(jnp.int32)
+    s_rows, _ = stage_tiles(s_padded, tile)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

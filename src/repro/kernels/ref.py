@@ -51,6 +51,20 @@ def kmer_histogram_ref(s: jax.Array, n: int, k: int, base: int) -> jax.Array:
     return jnp.zeros(base**k, jnp.int32).at[codes].add(1)
 
 
+def suffix_lcp_pairs_ref(s_padded: jax.Array, pos_a: jax.Array,
+                         pos_b: jax.Array, w: int) -> jax.Array:
+    """Batched suffix-pair LCP in symbols, capped at ``w``.
+
+    The oracle runs on the shared packed-word machinery: gather + pack both
+    reads, then take the per-row first-divergent-byte of the word rows —
+    byte order inside a big-endian packed word IS symbol order, so the
+    result equals a symbol-by-symbol scan.
+    """
+    a = range_gather_pack_ref(s_padded, pos_a, w)
+    b = range_gather_pack_ref(s_padded, pos_b, w)
+    return lcp_pairs_ref(a, b, w)[0]
+
+
 # ---------------------------------------------------------------------------
 # 2-bit packed path (paper §6.1: DNA symbols encoded in 2 bits).  The string
 # is stored as uint32 words of 16 big-endian 2-bit symbols; gathers shift-

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: batched suffix-pair LCP (global LCP array assembly).
+
+The analytics engine builds the GLOBAL LCP array over the flattened leaf
+array (= the suffix array): intra-subtree entries are already known — they
+are the ``b_off`` divergence depths SubTreePrepare emitted — so only the
+T-1 cross-subtree boundary entries remain.  Those pairs come from DIFFERENT
+prefix-free vertical-partition prefixes, so their LCP is strictly less than
+the shorter prefix length: a single bounded-width comparison suffices, no
+iterative deepening.
+
+Layout mirrors :mod:`repro.kernels.pattern_probe`: both position arrays are
+scalar-prefetched, each grid step DMAs the two ``(2, tile)`` HBM windows
+containing the reads (a read may straddle one tile boundary) and writes one
+``(1, 1)`` LCP value.  The kernel compares raw symbols (an iota-min over
+the first unequal position) — symbol equality needs no packing, and the
+result is identical to the packed-word reference oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiles import stage_tiles
+
+
+def _kernel(pa_ref, pb_ref, a_lo_ref, a_hi_ref, b_lo_ref, b_hi_ref, out_ref,
+            *, tile: int, w: int):
+    i = pl.program_id(0)
+    oa = pa_ref[i]
+    ob = pb_ref[i]
+    flat_a = jnp.concatenate([a_lo_ref[...], a_hi_ref[...]], axis=1).reshape(2 * tile)
+    flat_b = jnp.concatenate([b_lo_ref[...], b_hi_ref[...]], axis=1).reshape(2 * tile)
+    sym_a = jax.lax.dynamic_slice(flat_a, (oa - (oa // tile) * tile,), (w,))
+    sym_b = jax.lax.dynamic_slice(flat_b, (ob - (ob // tile) * tile,), (w,))
+    neq = sym_a != sym_b
+    iota = jax.lax.iota(jnp.int32, w)
+    out_ref[0, 0] = jnp.min(jnp.where(neq, iota, w))
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile", "interpret"))
+def suffix_lcp_pairs(
+    s_padded: jax.Array,
+    pos_a: jax.Array,
+    pos_b: jax.Array,
+    w: int,
+    *,
+    tile: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """LCP in symbols of the suffixes at ``pos_a[i]`` and ``pos_b[i]``.
+
+    s_padded: (n,) integer codes (terminal-padded so ``pos + w`` reads stay
+    in meaningful padding); pos_a, pos_b: (B,) int32.  Returns int32[B],
+    capped at ``w`` (pairs equal through ``w`` symbols report exactly ``w``).
+    """
+    b = pos_a.shape[0]
+    assert pos_b.shape == (b,)
+    assert w % 4 == 0
+    tile = max(tile, w)
+    s_rows, _ = stage_tiles(s_padded, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, pa, pb: (pa[i] // tile, 0)),
+            pl.BlockSpec((1, tile), lambda i, pa, pb: (pa[i] // tile + 1, 0)),
+            pl.BlockSpec((1, tile), lambda i, pa, pb: (pb[i] // tile, 0)),
+            pl.BlockSpec((1, tile), lambda i, pa, pb: (pb[i] // tile + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, pa, pb: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, tile=tile, w=w),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+    )(pos_a.astype(jnp.int32), pos_b.astype(jnp.int32),
+      s_rows, s_rows, s_rows, s_rows)
+    return out[:, 0]

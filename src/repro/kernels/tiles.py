@@ -1,0 +1,28 @@
+"""Shared HBM tile staging for the gather-style Pallas kernels.
+
+Every kernel that walks S through ``(1, tile)`` BlockSpec windows
+(``range_gather``, ``pattern_probe``, ``suffix_lcp``, ``kmer_histogram``)
+stages the string the same way: pad to a whole number of tiles PLUS one
+halo row — so a read straddling a tile boundary can always fetch rows
+``(r, r + 1)`` — filling with the last element (the terminal code, which
+by convention continues past the end of S) and reshaping to
+``(n_tiles, tile)`` int32 rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stage_tiles(s_padded: jax.Array, tile: int) -> tuple[jax.Array, int]:
+    """Reshape S into ``(n_tiles, tile)`` int32 rows with one halo row.
+
+    Returns ``(s_rows, n_tiles)``; ``n_tiles`` includes the halo row.
+    """
+    n = s_padded.shape[0]
+    n_tiles = -(-n // tile) + 1  # +1 halo row so (row, row+1) always exists
+    pad_val = s_padded[-1]  # terminal padding continues the last element
+    s_rows = jnp.full((n_tiles * tile,), pad_val, s_padded.dtype)
+    s_rows = jax.lax.dynamic_update_slice(s_rows, s_padded, (0,))
+    return s_rows.reshape(n_tiles, tile).astype(jnp.int32), n_tiles

@@ -20,7 +20,8 @@ import jax
 import numpy as np
 
 from repro.core.api import EraConfig, EraIndexer
-from repro.data.strings import dataset
+from repro.core.query import DeviceIndex
+from repro.launch.warmstart import load_or_build, will_load
 
 
 def make_workload(s: np.ndarray, rng: np.random.Generator, *, batch: int,
@@ -42,21 +43,37 @@ def make_workload(s: np.ndarray, rng: np.random.Generator, *, batch: int,
 def serve_queries(dataset_name: str = "dna", *, n: int = 100_000,
                   batch: int = 256, iters: int = 20, min_len: int = 4,
                   max_len: int = 24, planted_frac: float = 0.7,
-                  memory_bytes: int = 1 << 20, seed: int = 0):
+                  memory_bytes: int = 1 << 20, seed: int = 0,
+                  index_path: str | None = None):
     if not 1 <= min_len <= max_len:
         raise ValueError(f"need 1 <= min_len <= max_len, got [{min_len}, {max_len}]")
-    if max_len >= n:
-        raise ValueError(f"max_len {max_len} must be < string length {n}")
     if iters < 1 or batch < 1:
         raise ValueError(f"need iters >= 1 and batch >= 1, got {iters}, {batch}")
-    s, alphabet = dataset(dataset_name, n, seed=seed)
     rng = np.random.default_rng(seed + 1)
 
-    t0 = time.perf_counter()
-    cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
-    index, dev = EraIndexer(alphabet, cfg).build_device(
-        s, max_pattern_len=max(64, max_len))
-    t_build = time.perf_counter() - t0
+    max_len4 = -(-max_len // 4) * 4  # pad_batch rounds to whole packed words
+    if not will_load(index_path) and max_len >= n:
+        # cold-path fast precondition: fail before paying the build
+        # (make_workload needs at least one valid start per planted length)
+        raise ValueError(f"max_len {max_len} must be < --n {n}")
+
+    def build(s, alphabet):
+        cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
+        return EraIndexer(alphabet, cfg).build_device(
+            s, max_pattern_len=max(64, max_len4))[1]
+
+    # warm start: the npz round-trip skips build + flatten entirely
+    dev, s, alphabet, t_build = load_or_build(
+        index_path, dataset_name, n, seed,
+        load=DeviceIndex.load, build=build)
+    if max_len >= len(s) - 1:  # need a valid start for every planted length
+        raise ValueError(
+            f"max_len {max_len} must be < indexed string length - 1 = {len(s) - 1}")
+    if max_len4 > dev.max_pattern_len:
+        raise ValueError(
+            f"--max-len {max_len} exceeds the cached index's "
+            f"max_pattern_len={dev.max_pattern_len}; delete the cache at "
+            f"--index-path or rebuild cold with a larger --max-len")
 
     # pre-pad every batch so the timed loop measures routing + search only
     batches = []
@@ -108,11 +125,15 @@ def main():
     ap.add_argument("--min-len", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=24)
     ap.add_argument("--planted-frac", type=float, default=0.7)
+    ap.add_argument("--index-path", default=None,
+                    help="npz cache: load the flattened index if the file "
+                         "exists, else build once and save it there")
     args = ap.parse_args()
     stats = serve_queries(args.dataset, n=args.n, batch=args.batch,
                           iters=args.iters, min_len=args.min_len,
                           max_len=args.max_len,
-                          planted_frac=args.planted_frac)
+                          planted_frac=args.planted_frac,
+                          index_path=args.index_path)
     print(stats)
 
 

@@ -1,0 +1,69 @@
+"""Shared npz warm-start logic for the serving drivers.
+
+``query_serve`` caches a :class:`repro.core.query.DeviceIndex`,
+``analytics_serve`` an :class:`repro.core.analytics.AnalyticsEngine`; both
+follow the same discipline: normalize the cache path (``np.savez``
+silently appends ``.npz``, so the existence check must too), load +
+validate against the requested dataset if the file exists, otherwise
+build once and save.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.query import npz_path
+from repro.data.strings import dataset
+
+
+def normalize_npz(path: str | None) -> str | None:
+    """The path ``np.savez_compressed`` will actually write."""
+    return None if path is None else npz_path(path)
+
+
+def will_load(index_path: str | None) -> bool:
+    """True when :func:`load_or_build` would take the cache path — lets
+    drivers run cold-path preconditions before paying the build."""
+    path = normalize_npz(index_path)
+    return path is not None and os.path.exists(path)
+
+
+def load_or_build(index_path: str | None, dataset_name: str, n: int,
+                  seed: int, *, load: Callable, build: Callable,
+                  dev_of: Callable = lambda obj: obj):
+    """Load ``load(path)`` from the npz cache, else ``build(s, alphabet)``
+    and save.  ``dev_of`` extracts the underlying DeviceIndex (identity for
+    query_serve, ``eng.dev`` for analytics_serve) for validation and string
+    recovery.  Returns ``(obj, s, alphabet, t_seconds)``.
+
+    A cache hit serves WHATEVER string the npz was built from — the
+    alphabet base must match and an ``n`` mismatch prints a notice, but
+    ``seed`` is deliberately not validated: the cache's purpose is reusing
+    one built index across runs, and the served string is always recovered
+    from the npz itself, so results stay self-consistent.
+    """
+    path = normalize_npz(index_path)
+    t0 = time.perf_counter()
+    if path and os.path.exists(path):
+        obj = load(path)
+        dev = dev_of(obj)
+        s = np.asarray(dev.s_padded)[: dev.n_leaves]  # n_leaves == |S|
+        alphabet = dataset(dataset_name, 1, seed=seed)[1]
+        if alphabet.base != dev.base:
+            raise ValueError(
+                f"dataset {dataset_name!r} (base {alphabet.base}) does not "
+                f"match the cached index at {path} (base {dev.base})")
+        if len(s) != n + 1:  # dataset() appends the terminal: n -> n+1 codes
+            print(f"warmstart: cached index at {path} holds {len(s)} symbols, "
+                  f"ignoring requested --n {n}", file=sys.stderr)
+    else:
+        s, alphabet = dataset(dataset_name, n, seed=seed)
+        obj = build(s, alphabet)
+        if path:
+            obj.save(path)
+    return obj, s, alphabet, time.perf_counter() - t0

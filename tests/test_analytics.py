@@ -1,0 +1,305 @@
+"""Analytics engine vs naive numpy oracles (LCP, matching stats, repeats,
+distinct substrings, k-mer spectrum) across all three alphabets."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ref
+from repro.core.alphabet import BYTE, DNA, PROTEIN
+from repro.core.analytics import AnalyticsEngine
+from repro.core.api import EraConfig, EraIndexer
+from repro.kernels import ref as kref
+
+
+def build_engine(alpha, n, *, memory_bytes, seed):
+    s = alpha.random_string(n, seed=seed)
+    idx = EraIndexer(alpha, EraConfig(memory_bytes=memory_bytes, r_bytes=128,
+                                      build_impl="none")).build(s)
+    return s, idx, idx.analytics()
+
+
+def naive_matching_stats(s: np.ndarray, q: np.ndarray):
+    """O(|q| * |s| * ms) scan: longest match of each query suffix prefix."""
+    sn = np.asarray(s, np.int64)
+    qn = np.asarray(q, np.int64)
+    ms = np.zeros(len(q), np.int64)
+    for i in range(len(q)):
+        best = 0
+        for j in range(len(s)):
+            h = 0
+            while i + h < len(q) and j + h < len(s) and qn[i + h] == sn[j + h]:
+                h += 1
+            best = max(best, h)
+        ms[i] = best
+    return ms
+
+
+# deliberately tight budgets: deep prefixes, many sub-trees, so the LCP
+# array crosses MANY sub-tree boundaries (incl. frequency-1 prefixes)
+CASES = [
+    (DNA, 700, 512),
+    (DNA, 1200, 8192),
+    (PROTEIN, 600, 4096),
+    (BYTE, 500, 4096),   # codes >= 128: unsigned packed-word order
+]
+
+
+class TestGlobalLcpArray:
+    @pytest.mark.parametrize("alpha,n,mem", CASES)
+    def test_matches_kasai(self, alpha, n, mem):
+        s, idx, eng = build_engine(alpha, n, memory_bytes=mem, seed=n + mem)
+        sa = ref.suffix_array(s)
+        want = ref.lcp_array(s, sa)
+        np.testing.assert_array_equal(eng.lcp_host, want.astype(np.int32))
+
+    def test_boundary_entries_filled(self):
+        """Cross-subtree boundary entries come from the suffix_lcp kernel
+        path, not from b_off — check them against the direct oracle."""
+        s, idx, eng = build_engine(DNA, 900, memory_bytes=512, seed=7)
+        assert eng.dev.n_subtrees > 4  # the partition really is split
+        offs = np.asarray(eng.dev.sub_off)
+        freqs = np.asarray(eng.dev.sub_freq)
+        assert (freqs == 1).any()  # frequency-1 prefixes present
+        ell = eng.dev.ell_host
+        for b in offs[1:]:
+            want = ref.suffix_lcp(s, int(ell[b - 1]), int(ell[b]))
+            assert eng.lcp_host[b] == want
+
+    def test_lcp_rows_random_pairs(self):
+        s, idx, eng = build_engine(DNA, 800, memory_bytes=1024, seed=3)
+        sa = ref.suffix_array(s)
+        rng = np.random.default_rng(0)
+        i = rng.integers(0, len(s), size=64)
+        j = rng.integers(0, len(s), size=64)
+        got = eng.lcp_rows(i, j)
+        for a, b, g in zip(i, j, got):
+            assert g == ref.suffix_lcp(s, int(sa[a]), int(sa[b]))
+
+
+class TestMatchingStats:
+    @pytest.mark.parametrize("alpha,n,mem", CASES)
+    def test_randomized_cross_check(self, alpha, n, mem):
+        s, idx, eng = build_engine(alpha, n, memory_bytes=mem, seed=n * 3)
+        rng = np.random.default_rng(n)
+        # half planted slice of S (long matches), half random symbols
+        # (mostly-absent for big alphabets -> ms == 0 rows + witness == -1)
+        i0 = int(rng.integers(0, n // 2))
+        q = np.concatenate([
+            np.asarray(s[i0 : i0 + 40]),
+            rng.integers(0, len(alpha.symbols), size=40).astype(np.uint8),
+        ])
+        ms, wit = eng.matching_stats(q)
+        want = naive_matching_stats(s, q)
+        np.testing.assert_array_equal(ms, want)
+        sn = np.asarray(s, np.int64)
+        for i in range(len(q)):
+            if ms[i] > 0:
+                w = int(wit[i])
+                assert 0 <= w < len(s)
+                np.testing.assert_array_equal(sn[w : w + ms[i]],
+                                              np.asarray(q[i : i + ms[i]], np.int64))
+            else:
+                assert wit[i] == -1
+
+    def test_window_caps_lengths(self):
+        s, idx, eng = build_engine(DNA, 600, memory_bytes=2048, seed=11)
+        q = np.asarray(s[50:150])  # a planted exact slice: deep matches
+        full, _ = eng.matching_stats(q)
+        capped, _ = eng.matching_stats(q, window=8)
+        np.testing.assert_array_equal(capped, np.minimum(full, 8))
+        # non-multiple-of-4 windows cap at the REQUESTED value, not the
+        # word-rounded one
+        capped7, wit7 = eng.matching_stats(q, window=7)
+        np.testing.assert_array_equal(capped7, np.minimum(full, 7))
+        sn = np.asarray(s, np.int64)
+        for i in np.nonzero(capped7 > 0)[0][:10]:
+            w = int(wit7[i])
+            np.testing.assert_array_equal(
+                sn[w : w + capped7[i]], np.asarray(q[i : i + capped7[i]], np.int64))
+
+    def test_whole_string_as_query(self):
+        s, idx, eng = build_engine(DNA, 400, memory_bytes=2048, seed=13)
+        ms, wit = eng.matching_stats(np.asarray(s))
+        # every suffix of S occurs in S: ms[i] == |S| - i (up to the cap)
+        want = np.minimum(len(s) - np.arange(len(s)),
+                          eng.dev.max_pattern_len)
+        np.testing.assert_array_equal(ms, want)
+
+    def test_default_window_works_for_unaligned_max_pattern_len(self):
+        """The default window must not round up PAST max_pattern_len when
+        the index was flattened with a non-multiple-of-4 cap."""
+        alpha = DNA
+        s = alpha.random_string(300, seed=41)
+        idx = EraIndexer(alpha, EraConfig(memory_bytes=2048, r_bytes=128,
+                                          build_impl="none")).build(s)
+        eng = idx.analytics(max_pattern_len=66)
+        ms, _ = eng.matching_stats(np.asarray(s[10:30]))  # must not raise
+        assert ms[0] == 20
+
+    def test_validation(self):
+        s, idx, eng = build_engine(DNA, 300, memory_bytes=2048, seed=17)
+        with pytest.raises(ValueError):
+            eng.matching_stats(np.empty(0, np.uint8))
+        with pytest.raises(ValueError):
+            eng.matching_stats(np.array([99], np.uint8))
+        with pytest.raises(ValueError):
+            eng.matching_stats(np.zeros(8, np.uint8),
+                               window=eng.dev.max_pattern_len + 64)
+
+
+class TestRepeats:
+    @pytest.mark.parametrize("alpha,n,mem", CASES)
+    def test_longest_repeat_matches_lcp_max(self, alpha, n, mem):
+        s, idx, eng = build_engine(alpha, n, memory_bytes=mem, seed=n + 1)
+        sa = ref.suffix_array(s)
+        want = int(ref.lcp_array(s, sa).max())
+        rep = eng.longest_repeat()
+        assert rep["length"] == want
+        sub = np.asarray(s[rep["witness"] : rep["witness"] + rep["length"]])
+        occ = ref.occurrences(s, sub)
+        assert len(occ) == rep["count"] >= 2
+        assert rep["witness"] in occ
+
+    def test_top_repeats_counts_exact(self):
+        s, idx, eng = build_engine(DNA, 800, memory_bytes=1024, seed=29)
+        reps = eng.top_repeats(8)
+        assert reps == sorted(reps, key=lambda r: -r["length"])
+        assert len({r["rows"] for r in reps}) == len(reps)  # deduped
+        for r in reps:
+            sub = np.asarray(s[r["witness"] : r["witness"] + r["length"]])
+            assert len(ref.occurrences(s, sub)) == r["count"]
+
+    def test_high_multiplicity_repeat_does_not_flood_topk(self):
+        """A motif occurring many times floods the initial top-k candidate
+        pool with rows that dedupe to ONE interval; the pool must grow so
+        the shorter repeats still surface."""
+        rng = np.random.default_rng(37)
+        motif = rng.integers(0, 4, size=12).astype(np.uint8)
+        parts = []
+        for _ in range(50):
+            parts.append(motif)
+            parts.append(rng.integers(0, 4, size=3).astype(np.uint8))
+        s = np.concatenate(parts + [np.array([DNA.terminal_code], np.uint8)])
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=8192, r_bytes=128,
+                                        build_impl="none")).build(s)
+        eng = idx.analytics()
+        reps = eng.top_repeats(10)
+        assert len(reps) == 10
+        for r in reps:
+            sub = np.asarray(s[r["witness"] : r["witness"] + r["length"]])
+            assert len(ref.occurrences(s, sub)) == r["count"]
+
+    def test_no_repeats(self):
+        """A string of all-distinct symbols has an all-zero LCP array."""
+        alpha = BYTE
+        s = np.concatenate([np.arange(40, dtype=np.uint8),
+                            np.array([alpha.terminal_code], np.uint8)])
+        idx = EraIndexer(alpha, EraConfig(memory_bytes=4096, r_bytes=128,
+                                          build_impl="none")).build(s)
+        eng = idx.analytics()
+        assert eng.longest_repeat() is None
+        assert eng.top_repeats(5) == []
+
+
+class TestDistinctSubstrings:
+    @pytest.mark.parametrize("alpha,n,mem", [(DNA, 250, 1024),
+                                             (PROTEIN, 200, 4096),
+                                             (BYTE, 150, 4096)])
+    def test_matches_bruteforce_set(self, alpha, n, mem):
+        s, idx, eng = build_engine(alpha, n, memory_bytes=mem, seed=n)
+        sb = bytes(np.asarray(s, np.uint8))
+        subs = {sb[i:j] for i in range(len(sb))
+                for j in range(i + 1, len(sb) + 1)}
+        term = alpha.terminal_code
+        no_term = sum(1 for x in subs if term not in x)
+        assert eng.distinct_substrings(include_terminal=True) == len(subs)
+        assert eng.distinct_substrings() == no_term
+
+
+class TestKmerSpectrum:
+    @pytest.mark.parametrize("alpha,n,mem,k", [
+        (DNA, 700, 1024, 3), (DNA, 700, 1024, 8),
+        (PROTEIN, 400, 4096, 2), (BYTE, 300, 4096, 2),
+    ])
+    def test_matches_bruteforce_counter(self, alpha, n, mem, k):
+        from collections import Counter
+
+        s, idx, eng = build_engine(alpha, n, memory_bytes=mem, seed=n * k)
+        starts, counts = eng.kmer_spectrum(k)
+        ns = len(s)
+        want = Counter(bytes(np.asarray(s[i : i + k], np.uint8))
+                       for i in range(ns - k + 1))
+        assert int(counts.sum()) == ns - k + 1
+        got = {bytes(np.asarray(s[p : p + k], np.uint8)): int(c)
+               for p, c in zip(starts, counts)}
+        assert got == dict(want)
+
+    def test_cross_check_vs_kmer_histogram_kernel(self):
+        """Spectrum counts must agree bin-by-bin with the kmer_histogram
+        oracle for every k-mer fully inside S."""
+        k = 4
+        s, idx, eng = build_engine(DNA, 900, memory_bytes=1024, seed=5)
+        base = idx.alphabet.base
+        sp = idx.alphabet.pad_string(s, extra=k + 2)
+        hist = np.asarray(kref.kmer_histogram_ref(jnp.asarray(sp), len(s), k, base))
+        starts, counts = eng.kmer_spectrum(k)
+        for p, c in zip(starts, counts):
+            code = 0
+            for d in range(k):
+                code = code * base + int(s[p + d])
+            assert hist[code] == c
+
+    def test_top_kmers_match_counter(self):
+        from collections import Counter
+
+        s, idx, eng = build_engine(DNA, 600, memory_bytes=2048, seed=9)
+        k = 5
+        want = Counter(bytes(np.asarray(s[i : i + k], np.uint8))
+                       for i in range(len(s) - k + 1))
+        top = eng.top_kmers(k, topk=6)
+        assert [t["count"] for t in top] == [c for _, c in want.most_common(6)]
+        for t in top:
+            assert want[bytes(np.asarray(t["kmer"], np.uint8))] == t["count"]
+
+
+class TestEnginePersistence:
+    def test_save_load_round_trip(self, tmp_path):
+        s, idx, eng = build_engine(DNA, 500, memory_bytes=1024, seed=19)
+        p = str(tmp_path / "analytics.npz")
+        eng.save(p)
+        eng2 = AnalyticsEngine.load(p)
+        np.testing.assert_array_equal(eng2.lcp_host, eng.lcp_host)
+        q = np.asarray(s[40:120])
+        for a, b in zip(eng2.matching_stats(q), eng.matching_stats(q)):
+            np.testing.assert_array_equal(a, b)
+        assert eng2.distinct_substrings() == eng.distinct_substrings()
+        assert eng2.longest_repeat() == eng.longest_repeat()
+
+    def test_build_analytics_entry_point(self):
+        alpha = DNA
+        s = alpha.random_string(400, seed=23)
+        cfg = EraConfig(memory_bytes=2048, r_bytes=128, build_impl="none")
+        index, eng = EraIndexer(alpha, cfg).build_analytics(s)
+        sa = ref.suffix_array(s)
+        np.testing.assert_array_equal(
+            eng.lcp_host, ref.lcp_array(s, sa).astype(np.int32))
+
+    def test_index_analytics_reuses_cached_device(self):
+        s, idx, _ = build_engine(DNA, 300, memory_bytes=2048, seed=25)
+        idx.find_batch([np.asarray(s[3:9])])  # populate the device cache
+        eng = idx.analytics()
+        assert eng.dev is idx._device
+
+    def test_index_analytics_populates_device_cache(self):
+        """analytics() before any find_batch must flatten once and share:
+        the later find_batch reuses the same DeviceIndex."""
+        alpha = DNA
+        s = alpha.random_string(300, seed=27)
+        idx = EraIndexer(alpha, EraConfig(memory_bytes=2048, r_bytes=128,
+                                          build_impl="none")).build(s)
+        eng = idx.analytics()
+        assert idx._device is eng.dev
+        got = idx.find_batch([np.asarray(s[3:9])])
+        np.testing.assert_array_equal(got[0], idx.find(np.asarray(s[3:9])))
+        assert idx._device is eng.dev  # not rebuilt

@@ -95,6 +95,23 @@ class TestVerticalPartitioning:
         b = {p.symbols: p.freq for p in vertical_partition(s, ENGLISH.base, 15, strategy="positions")}
         assert a == b
 
+    @pytest.mark.parametrize("alpha,n,fmax", [(DNA, 400, 18), (PROTEIN, 350, 25)])
+    def test_histogram_kernel_path_identical(self, monkeypatch, alpha, n, fmax):
+        """The kmer_histogram kernel counting pass must produce the exact
+        same partition (prefixes, frequencies AND positions) as the host
+        searchsorted path."""
+        s = alpha.random_string(n, seed=n)
+        monkeypatch.setenv("REPRO_KERNELS", "jnp")
+        host = vertical_partition(s, alpha.base, fmax, strategy="histogram")
+        monkeypatch.setenv("REPRO_KERNELS", "pallas")
+        kern = vertical_partition(s, alpha.base, fmax, strategy="histogram")
+        assert [(p.symbols, p.freq) for p in host] \
+            == [(p.symbols, p.freq) for p in kern]
+        for a, b in zip(host, kern):
+            np.testing.assert_array_equal(a.positions, b.positions)
+            np.testing.assert_array_equal(
+                a.positions, ref.prefix_positions(s, np.array(a.symbols, np.uint8)))
+
 
 class TestPrepare:
     @pytest.mark.parametrize("alpha,n,fmax,r", [

@@ -9,6 +9,7 @@ from repro.kernels.kmer_histogram import kmer_histogram
 from repro.kernels.lcp import lcp_pairs
 from repro.kernels.pattern_probe import pattern_probe
 from repro.kernels.range_gather import range_gather_pack
+from repro.kernels.suffix_lcp import suffix_lcp_pairs
 
 
 class TestRangeGatherPack:
@@ -90,6 +91,56 @@ class TestLcpPairs:
                                 interpret=True)
         assert (np.asarray(lcp) == 16).all()
         assert (np.asarray(c1) == 0).all() and (np.asarray(c2) == 0).all()
+
+
+class TestSuffixLcpPairs:
+    @pytest.mark.parametrize("n,b,w,tile,codes", [
+        (300, 7, 4, 32, 5), (1000, 33, 16, 64, 21), (2000, 64, 32, 256, 27),
+        (500, 16, 8, 128, 256),  # byte alphabet
+    ])
+    def test_matches_ref(self, n, b, w, tile, codes):
+        rng = np.random.default_rng(n * b + w)
+        s = rng.integers(0, codes, size=n).astype(np.uint8)
+        s[-1] = codes - 1
+        sp = np.concatenate([s, np.full(w + 8, codes - 1, np.uint8)])
+        pos_a = rng.integers(0, n, size=b).astype(np.int32)
+        # mix of random pairs and near-identical pairs (deep LCPs)
+        pos_b = np.where(rng.random(b) < 0.5, pos_a,
+                         rng.integers(0, n, size=b)).astype(np.int32)
+        got = suffix_lcp_pairs(jnp.asarray(sp), jnp.asarray(pos_a),
+                               jnp.asarray(pos_b), w, tile=tile, interpret=True)
+        want = kref.suffix_lcp_pairs_ref(jnp.asarray(sp), jnp.asarray(pos_a),
+                                         jnp.asarray(pos_b), w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ref_matches_symbol_scan(self):
+        """The packed-word oracle equals a direct symbol-by-symbol scan."""
+        rng = np.random.default_rng(7)
+        n, w = 400, 16
+        s = rng.integers(0, 4, size=n).astype(np.uint8)
+        s[-1] = 4
+        sp = np.concatenate([s, np.full(w + 8, 4, np.uint8)])
+        pos_a = rng.integers(0, n, size=25).astype(np.int32)
+        pos_b = rng.integers(0, n, size=25).astype(np.int32)
+        got = np.asarray(kref.suffix_lcp_pairs_ref(
+            jnp.asarray(sp), jnp.asarray(pos_a), jnp.asarray(pos_b), w))
+        for a, b, g in zip(pos_a, pos_b, got):
+            h = 0
+            while h < w and sp[a + h] == sp[b + h]:
+                h += 1
+            assert g == h
+
+    def test_tile_boundary_straddle(self):
+        tile = 32
+        s = (np.arange(160) % 3).astype(np.uint8)
+        s[-1] = 3
+        pos_a = np.array([tile - 2, tile - 1, 2 * tile - 3], np.int32)
+        pos_b = np.array([2 * tile - 2, tile - 1, 5], np.int32)
+        got = suffix_lcp_pairs(jnp.asarray(s), jnp.asarray(pos_a),
+                               jnp.asarray(pos_b), 8, tile=tile, interpret=True)
+        want = kref.suffix_lcp_pairs_ref(jnp.asarray(s), jnp.asarray(pos_a),
+                                         jnp.asarray(pos_b), 8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 class TestPatternProbe:

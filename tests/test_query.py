@@ -163,3 +163,21 @@ class TestSaveLoadRoundTrip:
         pats = random_patterns(s, np.random.default_rng(6), 6)
         for pat, g in zip(pats, dev.find_batch(pats)):
             np.testing.assert_array_equal(g, idx.find(pat))
+
+    def test_device_index_npz_round_trip(self, tmp_path):
+        """DeviceIndex.save/load restores every field and serves identical
+        results, so serve drivers can warm-start without re-flattening."""
+        s, idx = build(BYTE, 400, memory_bytes=4096, seed=31)
+        dev = idx.to_device()
+        p = str(tmp_path / "dev.npz")
+        dev.save(p)
+        dev2 = DeviceIndex.load(p)
+        assert (dev2.base, dev2.k_route, dev2.n_iter, dev2.max_pattern_len) \
+            == (dev.base, dev.k_route, dev.n_iter, dev.max_pattern_len)
+        for name in DeviceIndex._BLOB_FIELDS:
+            np.testing.assert_array_equal(np.asarray(getattr(dev2, name)),
+                                          np.asarray(getattr(dev, name)))
+        assert dev2.s_padded.dtype == dev.s_padded.dtype
+        pats = random_patterns(s, np.random.default_rng(8), 10)
+        for pat, g in zip(pats, dev2.find_batch(pats)):
+            np.testing.assert_array_equal(g, idx.find(pat))
