@@ -12,7 +12,9 @@ from repro.data.strings import dataset
 def run(n=12_000, quick=False):
     for name, r in (("dna", 256), ("protein", 2048), ("english", 2048)):
         s, alpha = dataset(name, n, seed=12)
-        cfg = EraConfig(memory_bytes=8_192, r_bytes=r, build_impl="none")
+        # serial engine: per-group iteration accounting (paper units)
+        cfg = EraConfig(memory_bytes=8_192, r_bytes=r, build_impl="none",
+                        construction="serial")
         rep = BuildReport(VerticalStats(), PrepareStats())
         t = timeit(lambda: EraIndexer(alpha, cfg).build(s, rep))
         emit(f"fig11/{name}", t,

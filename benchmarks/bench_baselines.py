@@ -22,7 +22,9 @@ from repro.data.strings import dataset
 
 
 def _era(s, alpha, mem):
-    EraIndexer(alpha, EraConfig(memory_bytes=mem, r_bytes=max(256, mem // 64))).build(s)
+    # serial engine: fig10 compares the paper's serial ERA against baselines
+    EraIndexer(alpha, EraConfig(memory_bytes=mem, r_bytes=max(256, mem // 64),
+                                construction="serial")).build(s)
 
 
 def _wavefront(s, alpha, mem):

@@ -1,0 +1,57 @@
+"""Construction throughput: batched (G, F) engine vs the serial per-group loop.
+
+One row per engine at each input size, derived carrying groups, leaves/sec
+and the batched-over-serial speedup — the construction-side counterpart of
+bench_query.  Also times ``EraIndexer.build_device`` (string → DeviceIndex
+with no intermediate SubTree dict) against serial build + flatten.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.api import BuildReport, EraConfig, EraIndexer
+from repro.core.prepare import PrepareStats
+from repro.core.vertical import VerticalStats
+from repro.data.strings import dataset
+
+
+def _cfg(construction: str, memory_bytes: int) -> EraConfig:
+    return EraConfig(memory_bytes=memory_bytes, r_bytes=4096,
+                     build_impl="none", construction=construction)
+
+
+def run(quick: bool = True) -> None:
+    sizes = (60_000,) if quick else (150_000, 400_000)
+    for n in sizes:
+        s, alphabet = dataset("dna", n, seed=0)
+        # tight budget -> many virtual trees, so the group axis is real work
+        memory_bytes = 1 << 15
+
+        last_rep = {}
+
+        def build(construction):
+            rep = BuildReport(VerticalStats(), PrepareStats())
+            EraIndexer(alphabet, _cfg(construction, memory_bytes)).build(s, rep)
+            last_rep[construction] = rep  # report of the last timed run
+
+        t_ser = timeit(lambda: build("serial"), repeats=2, warmup=1)
+        t_bat = timeit(lambda: build("batched"), repeats=2, warmup=1)
+        rep_ser, rep_bat = last_rep["serial"], last_rep["batched"]
+        g = rep_bat.n_groups
+        prep_speedup = rep_ser.t_prepare / max(rep_bat.t_prepare, 1e-9)
+        emit(f"build/serial/n={n}", t_ser, f"groups={g}")
+        emit(f"build/batched/n={n}", t_bat,
+             f"groups={g} leaves_per_s={n / max(t_bat, 1e-9):.0f} "
+             f"speedup={t_ser / max(t_bat, 1e-9):.2f}x "
+             f"prepare_speedup={prep_speedup:.2f}x")
+
+        t_dev = timeit(
+            lambda: EraIndexer(alphabet, _cfg("batched", memory_bytes)).build_device(s),
+            repeats=2, warmup=1)
+        emit(f"build/device_direct/n={n}", t_dev,
+             f"vs_serial={t_ser / max(t_dev, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

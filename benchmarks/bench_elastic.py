@@ -20,8 +20,9 @@ def run(n=16_000, quick=False):
     variants = [("elastic", True, 0), ("static-16", False, 16), ("static-32", False, 32)]
     results = {}
     for name, elastic, w in variants:
+        # serial engine: per-group iteration/fetch accounting (paper units)
         cfg = EraConfig(memory_bytes=8_192, r_bytes=512, elastic=elastic,
-                        static_w=w, build_impl="none")
+                        static_w=w, build_impl="none", construction="serial")
         rep = BuildReport(VerticalStats(), PrepareStats())
         t = timeit(lambda: EraIndexer(DNA, cfg).build(s, rep), warmup=1)
         results[name] = t

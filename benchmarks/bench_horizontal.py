@@ -23,7 +23,9 @@ def _era_str(s, f_max: int):
 
 
 def _era_str_mem(s, f_max: int):
-    cfg = EraConfig(memory_bytes=f_max * 32, r_bytes=4096, build_impl="numpy")
+    # serial engine: this arm IS the paper's §4 pipeline (fig7 comparability)
+    cfg = EraConfig(memory_bytes=f_max * 32, r_bytes=4096, build_impl="numpy",
+                    construction="serial")
     EraIndexer(DNA, cfg).build(s)
 
 

@@ -19,7 +19,8 @@ def run(quick: bool = True) -> None:
     n = 50_000 if quick else 500_000
     s, alphabet = dataset("dna", n, seed=0)
     cfg = EraConfig(memory_bytes=1 << 18, build_impl="none")
-    index, dev = EraIndexer(alphabet, cfg).build_device(s)
+    index = EraIndexer(alphabet, cfg).build(s)
+    dev = index.to_device()
 
     rng = np.random.default_rng(1)
     for batch in (8, 64, 256):

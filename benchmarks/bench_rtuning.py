@@ -13,7 +13,10 @@ def run(n=16_000, r_sizes=(64, 256, 1024, 4096), quick=False):
     for name in ("dna", "protein"):
         s, alpha = dataset(name, n, seed=8)
         for r in r_sizes:
-            cfg = EraConfig(memory_bytes=16_384, r_bytes=r, build_impl="none")
+            # serial engine: |R| drives each group's own elastic range as
+            # in the paper (batched keys the range to the busiest group)
+            cfg = EraConfig(memory_bytes=16_384, r_bytes=r, build_impl="none",
+                            construction="serial")
             t = timeit(lambda: EraIndexer(alpha, cfg).build(s))
             emit(f"fig8/{name}/R={r}", t, f"r_bytes={r}")
 

@@ -22,13 +22,16 @@ def run(n=24_000, workers=(1, 2, 4, 8), quick=False):
         workers = workers[:3]
     s, alpha = dataset("dna", n, seed=13)
     cfg = EraConfig(memory_bytes=4_096, r_bytes=512, build_impl="none")
+    # one group per pull: tbl3's busy-time accounting is per TASK (chunked
+    # pulls would average elapsed_s over the chunk and coarsen max-busy)
+    pull = dict(groups_per_pull=1)
 
     # warm the jit caches so worker busy-times measure steady-state work
-    build_distributed(s, alpha, cfg, n_workers=1)
+    build_distributed(s, alpha, cfg, n_workers=1, **pull)
 
     serial = None
     for k in workers:
-        _, qstats, per_worker = build_distributed(s, alpha, cfg, n_workers=k)
+        _, qstats, per_worker = build_distributed(s, alpha, cfg, n_workers=k, **pull)
         busy = [w.seconds for w in per_worker]
         t_parallel = max(busy) if busy else 0.0
         total = sum(busy)
@@ -43,7 +46,8 @@ def run(n=24_000, workers=(1, 2, 4, 8), quick=False):
     base = 4_000
     for k in workers:
         s_k, _ = dataset("dna", base * k, seed=14)
-        _, qstats, per_worker = build_distributed(s_k, alpha, cfg, n_workers=k)
+        _, qstats, per_worker = build_distributed(s_k, alpha, cfg, n_workers=k,
+                                                  **pull)
         t_parallel = max((w.seconds for w in per_worker), default=0.0)
         emit(f"fig13/weak/k={k}", t_parallel,
              f"n={base * k};groups={qstats['total']}")

@@ -13,8 +13,11 @@ from repro.data.strings import dataset
 def run(n=16_000, quick=False):
     s, alpha = dataset("dna", n, seed=9)
     for group in (True, False):
+        # serial engine: the figure's accounting (iterations = string
+        # passes PER UNIT) is the paper's per-group loop, not the joint
+        # batched rounds
         cfg = EraConfig(memory_bytes=8_192, r_bytes=1024, group=group,
-                        build_impl="none")
+                        build_impl="none", construction="serial")
         rep = BuildReport(VerticalStats(), PrepareStats())
         t = timeit(lambda: EraIndexer(alpha, cfg).build(s, rep))
         scans = rep.prepare.iterations  # each iteration = one string pass/unit

@@ -9,6 +9,7 @@
   fig11  bench_alphabet     alphabet sensitivity
   tbl3   bench_scaling      strong/weak scaling (scheduler busy-time model)
   roofl  bench_roofline     dry-run roofline table (reads experiments/dryrun.json)
+  build      bench_build      batched (G,F) construction engine vs serial loop
   query      bench_query      batched device query engine vs per-pattern Python
   analytics  bench_analytics  LCP analytics engine vs per-position Python
 
@@ -45,6 +46,7 @@ def main() -> None:
         bench_alphabet,
         bench_analytics,
         bench_baselines,
+        bench_build,
         bench_elastic,
         bench_horizontal,
         bench_query,
@@ -64,6 +66,7 @@ def main() -> None:
         "fig11": bench_alphabet.run,
         "tbl3": bench_scaling.run,
         "roofline": bench_roofline.run,
+        "build": bench_build.run,
         "query": bench_query.run,
         "analytics": bench_analytics.run,
     }

@@ -18,11 +18,16 @@ def main():
     print(f"string: {len(s):,} symbols over Σ={alphabet.symbols!r}+'$'")
 
     # 2. build the index under a deliberately tight memory budget so the
-    #    vertical partitioner has real work to do
+    #    vertical partitioner has real work to do.  construction="batched"
+    #    (the default) stacks ALL virtual trees into one (G, F) state and
+    #    drives a single vmapped elastic-range loop on device, then builds
+    #    every sub-tree's nodes in one vmapped Cartesian-tree call;
+    #    construction="serial" is the paper-faithful per-group reference —
+    #    results are identical array-for-array, batched is just faster.
     cfg = EraConfig(
         memory_bytes=64 << 10,   # 64KB "RAM" -> many virtual trees
         r_bytes=4 << 10,         # |R| elastic-range read buffer
-        build_impl="numpy",      # batch BuildSubTree (paper Alg. 4)
+        construction="batched",  # one elastic loop for all groups (default)
     )
     report = BuildReport(VerticalStats(), PrepareStats())
     idx = EraIndexer(alphabet, cfg).build(s, report)
@@ -55,6 +60,15 @@ def main():
     assert np.array_equal(batch_hits[-1], hits)
     print(f"batched device search agrees ✓ "
           f"({[len(h) for h in batch_hits]} hits per pattern)")
+
+    # 5b. serving-only deployments: EraIndexer.build_device goes string ->
+    #     DeviceIndex directly — the leaf arrays are gathered into suffix-
+    #     array order on device, and the per-prefix numpy SubTree dict is
+    #     never materialized.  Use build() (as above) when you also need
+    #     the walkable per-sub-tree form (find_walk, save/load, analytics).
+    dev = EraIndexer(alphabet, cfg).build_device(s)
+    assert np.array_equal(dev.find_batch([pattern])[0], hits)
+    print("direct string -> DeviceIndex pipeline agrees ✓")
 
     # 6. analytics: the global LCP array over the flattened index unlocks
     #    substring analytics beyond exact search (repro.core.analytics)

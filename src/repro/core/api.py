@@ -1,14 +1,27 @@
-"""EraIndexer — the end-to-end serial ERA pipeline (paper §4).
+"""EraIndexer — the end-to-end ERA pipeline (paper §4 + §5).
 
-vertical partitioning → grouping → per-group elastic-range SubTreePrepare →
+vertical partitioning → grouping → elastic-range SubTreePrepare →
 BuildSubTree → assembled :class:`SuffixTreeIndex`.
 
+Two construction engines share every stage (``EraConfig.construction``):
+
+* ``batched`` (default) — ALL virtual trees stacked into one padded (G, F)
+  state, driven by a single jitted vmapped elastic-range loop with donated
+  buffers (:func:`repro.core.prepare.subtree_prepare_batch`); the node sets
+  of every sub-tree are then built in ONE vmapped Cartesian-tree call
+  (:func:`repro.core.build.build_parallel_batch`).  This is the paper's §5
+  parallelism made the real path — ``shard_map`` over G distributes it.
+* ``serial`` — the paper-faithful §4 reference: one group at a time through
+  :func:`repro.core.prepare.subtree_prepare`, per-prefix host builders.
+  Results are identical array-for-array; tier-1 tests cross-check.
+
 The parallel drivers (shared-memory / shared-nothing analogues) live in
-:mod:`repro.launch.era_run`; they reuse exactly these stages, distributing
-groups over devices/workers.  The serving-side counterpart is
-:meth:`EraIndexer.build_device` / :meth:`SuffixTreeIndex.to_device`, which
-flatten the finished index into the device-resident batched query engine
-(:mod:`repro.core.query`) driven by :mod:`repro.launch.query_serve`.
+:mod:`repro.launch.era_run`; workers consume the same batched engine.  The
+serving-side counterpart is :meth:`EraIndexer.build_device`, which goes
+string → :class:`repro.core.query.DeviceIndex` directly — the leaf arrays
+are gathered into suffix-array order on device and the per-prefix numpy
+``SubTree`` dict is never materialized (use :meth:`build` when you need the
+walkable per-sub-tree form).
 """
 
 from __future__ import annotations
@@ -26,6 +39,7 @@ from repro.core.prepare import (
     PrepareStats,
     segments_of,
     subtree_prepare,
+    subtree_prepare_batch,
 )
 from repro.core.suffix_tree import SubTree, SuffixTreeIndex
 from repro.core.vertical import VerticalStats, vertical_partition_grouped
@@ -45,7 +59,11 @@ class EraConfig:
     static_w: int = 16             # used when elastic=False (Fig. 9b ablation)
     group: bool = True             # virtual trees on/off (Fig. 9a ablation)
     vertical_strategy: str = "histogram"  # or "positions" (beyond-paper)
-    build_impl: str = "numpy"      # numpy | scan | parallel | none
+    build_impl: str = "numpy"      # numpy | scan | parallel | none; selects the
+    #                                serial engine's per-prefix builder — the
+    #                                batched engine always uses the vmapped
+    #                                parallel builder unless "none" (skip nodes)
+    construction: str = "batched"  # batched (one (G,F) loop) | serial (per group)
 
     @property
     def mts_bytes(self) -> int:
@@ -59,6 +77,15 @@ class EraConfig:
     @property
     def r_symbols(self) -> int:
         return self.r_bytes  # 1 byte per symbol code in this implementation
+
+    def elastic_config(self) -> ElasticConfig:
+        return ElasticConfig(
+            r_budget_symbols=self.r_symbols,
+            w_min=self.w_min,
+            w_max=self.w_max,
+            elastic=self.elastic,
+            static_w=self.static_w,
+        )
 
 
 @dataclasses.dataclass
@@ -84,10 +111,41 @@ _BUILDERS = {
 }
 
 
+def _sorted_segments(groups):
+    """(prefix, group_index, offset, freq) per sub-tree, sorted by prefix.
+
+    Prefix-freeness makes sorted tuple order the lexicographic suffix
+    order, so concatenating the leaf segments in this order yields the
+    suffix array (the DeviceIndex layout).
+    """
+    entries = []
+    for g_i, g in enumerate(groups):
+        for (off, freq), p in zip(segments_of(g), g.prefixes):
+            entries.append((p.symbols, g_i, off, freq))
+    entries.sort(key=lambda e: e[0])
+    return entries
+
+
+def _entry_flat_idx(entry, f_cap: int) -> np.ndarray:
+    """Indices of one sub-tree's leaf segment in the flattened (G, F) state."""
+    _, g_i, off, freq = entry
+    return g_i * f_cap + off + np.arange(freq, dtype=np.int64)
+
+
 class EraIndexer:
     def __init__(self, alphabet: Alphabet, config: EraConfig = EraConfig()):
         self.alphabet = alphabet
         self.config = config
+        if config.construction not in ("serial", "batched"):
+            raise ValueError(
+                f"unknown construction engine {config.construction!r}; "
+                "choose 'serial' or 'batched'")
+        if config.build_impl not in (*_BUILDERS, "none"):
+            # fail fast: the batched engine always uses the vmapped parallel
+            # builder (unless "none"), so a typo would otherwise pass silently
+            raise ValueError(
+                f"unknown build_impl {config.build_impl!r}; "
+                f"choose one of {sorted((*_BUILDERS, 'none'))}")
 
     def partition(self, s: np.ndarray, report: BuildReport | None = None):
         """Vertical partitioning + grouping (the master-node phase)."""
@@ -109,50 +167,74 @@ class EraIndexer:
             report.f_max = cfg.f_max
         return groups
 
+    def _capacity(self, groups) -> int:
+        return min(self.config.f_max,
+                   max((g.total_freq for g in groups), default=2))
+
+    def _pad(self, s: np.ndarray) -> jnp.ndarray:
+        # pad so gathers past the end stay in-bounds (terminal padding)
+        return jnp.asarray(self.alphabet.pad_string(s, extra=2 * self.config.w_max + 8))
+
+    # ---- worker units ------------------------------------------------------
+
     def process_group(self, s_padded, group, capacity: int,
-                      pstats: PrepareStats | None = None) -> list[SubTree]:
-        """SubTreePrepare + BuildSubTree for one virtual tree (worker unit)."""
-        cfg = self.config
-        ecfg = ElasticConfig(
-            r_budget_symbols=cfg.r_symbols,
-            w_min=cfg.w_min,
-            w_max=cfg.w_max,
-            elastic=cfg.elastic,
-            static_w=cfg.static_w,
-        )
-        state = subtree_prepare(s_padded, group, capacity, ecfg, pstats)
+                      pstats: PrepareStats | None = None,
+                      group_index: int | None = None) -> list[SubTree]:
+        """SubTreePrepare + slicing for ONE virtual tree (serial reference)."""
+        state = subtree_prepare(s_padded, group, capacity,
+                                self.config.elastic_config(), pstats,
+                                group_index=group_index)
+        return self._slice_subtrees(state, group)
+
+    def process_groups(self, s_padded, groups, capacity: int,
+                       pstats: PrepareStats | None = None) -> list[list[SubTree]]:
+        """SubTreePrepare + slicing for MANY virtual trees through the
+        shared batched (G, F) engine — one elastic loop for the whole set.
+        Returns one ``list[SubTree]`` per input group."""
+        states = subtree_prepare_batch(s_padded, groups, capacity,
+                                       self.config.elastic_config(), pstats)
+        host = _HostState(states)
+        return [self._slice_subtrees(host.group(g_i), g)
+                for g_i, g in enumerate(groups)]
+
+    @staticmethod
+    def _slice_subtrees(state, group) -> list[SubTree]:
         ell = np.asarray(state.L)
         b_off = np.asarray(state.b_off)
         b_c1 = np.asarray(state.b_c1)
         b_c2 = np.asarray(state.b_c2)
         out = []
-        n_total = None
         for (off, f), p in zip(segments_of(group), group.prefixes):
             seg_b = b_off[off : off + f].copy()
             seg_b[0] = 0
-            st = SubTree(
+            out.append(SubTree(
                 prefix=p.symbols,
                 ell=ell[off : off + f].copy(),
                 b_off=seg_b,
                 b_c1=b_c1[off : off + f].copy(),
                 b_c2=b_c2[off : off + f].copy(),
-            )
-            out.append(st)
+            ))
         return out
 
-    def build(self, s: np.ndarray, report: BuildReport | None = None) -> SuffixTreeIndex:
-        cfg = self.config
-        report = report if report is not None else BuildReport(VerticalStats(), PrepareStats())
-        groups = self.partition(s, report)
+    # ---- full builds -------------------------------------------------------
 
-        capacity = min(cfg.f_max, max((g.total_freq for g in groups), default=2))
-        # pad so gathers past the end stay in-bounds (terminal padding)
-        s_padded = jnp.asarray(self.alphabet.pad_string(s, extra=2 * cfg.w_max + 8))
+    def build(self, s: np.ndarray, report: BuildReport | None = None) -> SuffixTreeIndex:
+        report = report if report is not None else BuildReport(VerticalStats(), PrepareStats())
+        if self.config.construction == "batched":
+            return self._build_batched(s, report)
+        return self._build_serial(s, report)
+
+    def _build_serial(self, s: np.ndarray, report: BuildReport) -> SuffixTreeIndex:
+        cfg = self.config
+        groups = self.partition(s, report)
+        capacity = self._capacity(groups)
+        s_padded = self._pad(s)
 
         t0 = time.perf_counter()
         subtrees: dict[tuple, SubTree] = {}
-        for g in groups:
-            for st in self.process_group(s_padded, g, capacity, report.prepare):
+        for g_i, g in enumerate(groups):
+            for st in self.process_group(s_padded, g, capacity, report.prepare,
+                                         group_index=g_i):
                 subtrees[st.prefix] = st
         report.t_prepare = time.perf_counter() - t0
 
@@ -166,13 +248,103 @@ class EraIndexer:
 
         return SuffixTreeIndex(s=np.asarray(s), alphabet=self.alphabet, subtrees=subtrees)
 
+    def _prepare_batched(self, s: np.ndarray, report: BuildReport):
+        """partition → padded (G, F) batched prepare, timing into ``report``.
+
+        Returns (groups, states); states is None when the string produced
+        no groups (cannot happen for a non-empty terminated string).
+        """
+        groups = self.partition(s, report)
+        if not groups:
+            return groups, None
+        capacity = self._capacity(groups)
+        s_padded = self._pad(s)
+        t0 = time.perf_counter()
+        states = subtree_prepare_batch(s_padded, groups, capacity,
+                                       self.config.elastic_config(),
+                                       report.prepare)
+        report.t_prepare = time.perf_counter() - t0
+        return groups, states
+
+    def _build_batched(self, s: np.ndarray, report: BuildReport) -> SuffixTreeIndex:
+        cfg = self.config
+        groups, states = self._prepare_batched(s, report)
+        subtrees: dict[tuple, SubTree] = {}
+        if states is not None:
+            t0 = time.perf_counter()
+            host = _HostState(states)
+            for g_i, g in enumerate(groups):
+                for st in self._slice_subtrees(host.group(g_i), g):
+                    subtrees[st.prefix] = st
+            report.t_prepare += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            if cfg.build_impl != "none":
+                self._attach_nodes_batched(states, groups, subtrees, len(s))
+            report.t_build = time.perf_counter() - t0
+
+        return SuffixTreeIndex(s=np.asarray(s), alphabet=self.alphabet, subtrees=subtrees)
+
+    def _attach_nodes_batched(self, states, groups, subtrees, n_total: int) -> None:
+        """All sub-trees' node sets in ONE vmapped Cartesian-tree build.
+
+        Per-prefix (ell, b_off) segments are gathered on device into padded
+        (P, F_pad) rows (depth-0 padding — see repro.core.build), built with
+        the vmapped parallel builder, then unpadded to the compact layout.
+        """
+        entries = _sorted_segments(groups)
+        f_cap = states.L.shape[1]
+        f_pad = build_mod.pad_width(max(e[3] for e in entries))
+        idx = np.zeros((len(entries), f_pad), np.int64)
+        mask = np.zeros((len(entries), f_pad), bool)
+        for row, entry in enumerate(entries):
+            freq = entry[3]
+            idx[row, :freq] = _entry_flat_idx(entry, f_cap)
+            mask[row, :freq] = True
+        idx = jnp.asarray(idx, jnp.int32)
+        mask = jnp.asarray(mask)
+        ell_rows = jnp.where(mask, jnp.take(states.L.reshape(-1), idx), n_total)
+        boff_rows = jnp.where(mask, jnp.take(states.b_off.reshape(-1), idx), 0)
+        nodes = build_mod.build_parallel_batch(ell_rows, boff_rows, n_total)
+        parent = np.asarray(nodes.parent)
+        depth = np.asarray(nodes.depth)
+        witness = np.asarray(nodes.witness)
+        for row, (prefix, _, _, freq) in enumerate(entries):
+            subtrees[prefix].nodes = build_mod.unpad_nodes_row(
+                parent[row], depth[row], witness[row], freq)
+
     def build_device(self, s: np.ndarray, report: BuildReport | None = None,
                      **device_kwargs):
-        """Build + flatten in one step: returns ``(index, device_index)``
-        where the second element is the batched query engine
-        (:class:`repro.core.query.DeviceIndex`)."""
-        index = self.build(s, report)
-        return index, index.to_device(**device_kwargs)
+        """String → :class:`repro.core.query.DeviceIndex` (the flattened
+        batched query engine).
+
+        With the batched engine the leaf arrays go straight from the
+        (G, F) prepare state into suffix-array order with one device
+        gather — no per-prefix numpy ``SubTree`` dict, no node build.  The
+        serial engine builds the full index first and flattens it.
+        ``device_kwargs``: ``route_cap``, ``max_pattern_len``.
+        """
+        report = report if report is not None else BuildReport(VerticalStats(), PrepareStats())
+        if self.config.construction != "batched":
+            return self.build(s, report).to_device(**device_kwargs)
+
+        from repro.core.query import DeviceIndex  # local: avoid import cycle
+
+        groups, states = self._prepare_batched(s, report)
+        if states is None:
+            raise ValueError("cannot flatten an empty index")
+        entries = _sorted_segments(groups)
+        f_cap = states.L.shape[1]
+        flat_idx = np.concatenate([_entry_flat_idx(e, f_cap) for e in entries])
+        ell = jnp.take(states.L.reshape(-1), jnp.asarray(flat_idx, jnp.int32))
+        return DeviceIndex.from_prepare(
+            alphabet=self.alphabet,
+            s=np.asarray(s),
+            prefixes=[e[0] for e in entries],
+            freqs=np.array([e[3] for e in entries], np.int32),
+            ell=ell,
+            **device_kwargs,
+        )
 
     def build_analytics(self, s: np.ndarray, report: BuildReport | None = None,
                         **device_kwargs):
@@ -181,3 +353,21 @@ class EraIndexer:
         (:class:`repro.core.analytics.AnalyticsEngine`)."""
         index = self.build(s, report)
         return index, index.analytics(**device_kwargs)
+
+
+class _HostState:
+    """One bulk device→host transfer of a (G, F) state, sliceable per group."""
+
+    def __init__(self, states):
+        self.L = np.asarray(states.L)
+        self.b_off = np.asarray(states.b_off)
+        self.b_c1 = np.asarray(states.b_c1)
+        self.b_c2 = np.asarray(states.b_c2)
+
+    def group(self, g_i: int) -> "_HostState":
+        view = object.__new__(_HostState)
+        view.L = self.L[g_i]
+        view.b_off = self.b_off[g_i]
+        view.b_c1 = self.b_c1[g_i]
+        view.b_c2 = self.b_c2[g_i]
+        return view

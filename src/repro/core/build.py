@@ -47,6 +47,24 @@ class SubTreeNodes(NamedTuple):
     n_leaves: int | jax.Array
 
 
+def nodes_to_host(nodes: SubTreeNodes) -> SubTreeNodes:
+    """Normalize a node set to host form in ONE transfer per field.
+
+    The scan/parallel builders return device arrays (and traced scalar
+    counts); consumers that walk the arrays element-wise
+    (:func:`nodes_to_intervals`, ``SuffixTreeIndex.save``/``_descend``)
+    must convert once up front — per-element ``int(...)`` on a device
+    array is a device sync inside the loop.  No-op for numpy inputs.
+    """
+    return SubTreeNodes(
+        parent=np.asarray(nodes.parent),
+        depth=np.asarray(nodes.depth),
+        witness=np.asarray(nodes.witness),
+        n_nodes=int(nodes.n_nodes),
+        n_leaves=int(nodes.n_leaves),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Faithful sequential builder (numpy, host) — Alg. BuildSubTree
 # ---------------------------------------------------------------------------
@@ -205,7 +223,6 @@ def build_parallel(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNod
     pl = h[jnp.maximum(psv, 0)]
     pr = h_ext[jnp.minimum(nsv, f)]
     parent_event = jnp.where(pl >= pr, jnp.maximum(psv, 0), jnp.minimum(nsv, f - 1))
-    parent_is_root = (pl <= 0) & (pr <= 0)  # both walls / depth<=0
     parent_rep = rep[parent_event]
 
     # node ids: internal node for canonical event j lives at id f + j
@@ -251,14 +268,88 @@ def build_parallel(ell: jax.Array, b_off: jax.Array, n_total: int) -> SubTreeNod
 
 
 # ---------------------------------------------------------------------------
+# Batched builder: every sub-tree of a whole build in ONE vmapped call
+# ---------------------------------------------------------------------------
+# Rows are per-PREFIX (one sub-tree each), padded to a common width F_pad.
+# Padding is depth-0: padded positions get ``b_off = 0`` and ``ell =
+# n_total``.  Real divergence depths are >= 1 (every vertical-partition
+# prefix has length >= 1), so all padded events collapse into exactly ONE
+# artificial internal node at string depth 0 — the canonical event is the
+# first padded position f — which adopts the real sub-tree root and every
+# padded leaf.  That node is the same depth-0 super-root ``build_numpy``
+# allocates, so extraction to the compact per-sub-tree layout is a pure id
+# remap (no topology fixes).  ``PAD_MIN = 2`` guarantees (a) the artificial
+# root always exists and (b) its node id ``F_pad + f`` never collides with
+# the builder's scatter dump slot ``2*F_pad - 1``.
+
+PAD_MIN = 2
+
+
+def pad_width(max_freq: int) -> int:
+    """Row width for :func:`build_parallel_batch` given the largest freq."""
+    return max_freq + PAD_MIN
+
+
+def build_parallel_batch(ell_rows: jax.Array, boff_rows: jax.Array,
+                         n_total: int) -> SubTreeNodes:
+    """vmapped :func:`build_parallel` over (P, F_pad) padded rows.
+
+    Deliberately NOT wrapped in ``jax.jit``: XLA:CPU expands the sparse
+    table's dynamic-index gathers pathologically when the table is an
+    intra-module value (minutes of compile at F_pad ~ 1k); eager vmap
+    dispatches the same ops with per-op compiles and runs in well under a
+    second at that size.  Revisit behind a flag if a TPU profile shows the
+    dispatch overhead matters there.
+    """
+    return jax.vmap(lambda e, b: build_parallel(e, b, n_total))(
+        ell_rows, boff_rows)
+
+
+def unpad_nodes_row(parent_row: np.ndarray, depth_row: np.ndarray,
+                    witness_row: np.ndarray, f: int) -> SubTreeNodes:
+    """Extract the compact 2f-slot node set of one sub-tree from a padded
+    builder row (host numpy; arrays must already be on host).
+
+    Row-space ids: leaves ``0..f-1`` (kept), internal ``F_pad + j`` for
+    canonical events ``j`` in ``1..f-1`` (→ ``f + j``), and the artificial
+    depth-0 root ``F_pad + f`` (→ ``f``, the slot event 0 never uses).
+    """
+    f_pad = len(parent_row) // 2
+    cap = 2 * f
+
+    def remap(v):
+        v = np.asarray(v, np.int64)
+        out = np.where(v == f_pad + f, f, np.where(v >= f_pad, v - f_pad + f, v))
+        return out.astype(np.int32)
+
+    parent = np.full(cap, -1, np.int32)
+    depth = np.zeros(cap, np.int32)
+    witness = np.full(cap, -1, np.int32)
+    parent[:f] = remap(parent_row[:f])
+    depth[:f] = depth_row[:f]
+    witness[:f] = witness_row[:f]
+
+    ev = np.arange(1, f + 1)            # candidate canonical events + root
+    row_ids = f_pad + ev
+    valid = witness_row[row_ids] >= 0   # written iff the event is canonical
+    ev = ev[valid]
+    lid = np.where(ev == f, f, f + ev)
+    parent[lid] = remap(parent_row[f_pad + ev])
+    depth[lid] = depth_row[f_pad + ev]
+    witness[lid] = witness_row[f_pad + ev]
+    return SubTreeNodes(parent, depth, witness, f + int(valid.sum()), f)
+
+
+# ---------------------------------------------------------------------------
 # Canonicalization for testing: node set -> (l, r, depth) intervals
 # ---------------------------------------------------------------------------
 
 def nodes_to_intervals(nodes: SubTreeNodes):
     """Internal-node intervals (leftmost leaf, rightmost leaf + 1, depth)."""
-    parent = np.asarray(nodes.parent)
-    depth = np.asarray(nodes.depth)
-    f = int(nodes.n_leaves)
+    nodes = nodes_to_host(nodes)
+    parent = nodes.parent
+    depth = nodes.depth
+    f = nodes.n_leaves
     cap = len(parent)
     lo = np.full(cap, np.iinfo(np.int64).max)
     hi = np.full(cap, -1)

@@ -30,6 +30,13 @@ separated, the boundary index never moves again.
 Shapes are static per jitted step; the elastic range ``w`` is bucketed to
 powers of two so at most ``log2(w_max/w_min)`` distinct compilations occur.
 The host loop drives steps until every area is resolved.
+
+Two drivers share the step: :func:`subtree_prepare` runs one virtual tree
+(the reference / worked-example path) and :func:`subtree_prepare_batch`
+stacks every group into one padded (G, F) state and drives a single
+vmapped, buffer-donated loop — the default construction engine (paper §5:
+virtual trees are independent, so the batch axis is free parallelism and
+``shard_map`` over G distributes it across devices).
 """
 
 from __future__ import annotations
@@ -72,13 +79,8 @@ class ElasticConfig:
     static_w: int = 16
 
 
-def init_state(group: VirtualTree, capacity: int) -> PrepareState:
-    """Concatenate the group's occurrence lists into padded state arrays.
-
-    Each prefix's segment gets its own initial area (id = segment start);
-    frequency-1 prefixes are born resolved (a single leaf is a complete
-    sub-tree).
-    """
+def _init_arrays(group: VirtualTree, capacity: int):
+    """Host-side (L, start, area) arrays for one group (padded to capacity)."""
     total = sum(p.freq for p in group.prefixes)
     if total > capacity:
         raise ValueError(f"group frequency {total} exceeds capacity {capacity}")
@@ -93,6 +95,17 @@ def init_state(group: VirtualTree, capacity: int) -> PrepareState:
         if f > 1:
             area[off : off + f] = off
         off += f
+    return L, start, area
+
+
+def init_state(group: VirtualTree, capacity: int) -> PrepareState:
+    """Concatenate the group's occurrence lists into padded state arrays.
+
+    Each prefix's segment gets its own initial area (id = segment start);
+    frequency-1 prefixes are born resolved (a single leaf is a complete
+    sub-tree).
+    """
+    L, start, area = _init_arrays(group, capacity)
     return PrepareState(
         L=jnp.asarray(L),
         start=jnp.asarray(start),
@@ -100,6 +113,22 @@ def init_state(group: VirtualTree, capacity: int) -> PrepareState:
         b_off=jnp.full(capacity, -1, jnp.int32),
         b_c1=jnp.zeros(capacity, jnp.int32),
         b_c2=jnp.zeros(capacity, jnp.int32),
+    )
+
+
+def init_batch(groups: list[VirtualTree], capacity: int) -> PrepareState:
+    """Stack ALL groups into one padded (G, F) state for the batched engine."""
+    if not groups:
+        raise ValueError("init_batch needs at least one group")
+    cols = [_init_arrays(g, capacity) for g in groups]
+    g = len(groups)
+    return PrepareState(
+        L=jnp.asarray(np.stack([c[0] for c in cols])),
+        start=jnp.asarray(np.stack([c[1] for c in cols])),
+        area=jnp.asarray(np.stack([c[2] for c in cols])),
+        b_off=jnp.full((g, capacity), -1, jnp.int32),
+        b_c1=jnp.zeros((g, capacity), jnp.int32),
+        b_c2=jnp.zeros((g, capacity), jnp.int32),
     )
 
 
@@ -115,7 +144,6 @@ def lcp_adjacent(keys: jax.Array, w: int) -> tuple[jax.Array, jax.Array, jax.Arr
     keys: (F, W) int32 packed words.  Returns (lcp, c1, c2) each (F,) where
     entry i compares rows i-1 and i (entry 0 is garbage, callers mask it).
     """
-    f, n_words = keys.shape
     a = jnp.concatenate([keys[:1], keys[:-1]], axis=0)  # row i-1
     b = keys
     neq = a != b
@@ -230,6 +258,31 @@ def _jit_step(s_padded, state, w, use_pallas=False):
     return prepare_step(s_padded, state, w=w, use_pallas=use_pallas)
 
 
+def prepare_step_batch(s_padded: jax.Array, states: PrepareState, *, w: int,
+                       use_pallas: bool = False, packed: bool = False):
+    """One elastic-range iteration for a (G, F) batch of virtual trees.
+
+    Groups are independent, so the step is a plain vmap over the leading
+    axis; converged groups have no active areas, make zeroed gathers and
+    are exact fixed points of the step.  Callers may shard_map G over the
+    mesh — the only cross-device data is the replicated string read.
+
+    Returns (new_states, n_active) with ``n_active`` int32[G].
+    """
+    step = lambda st: prepare_step(s_padded, st, w=w, use_pallas=use_pallas,
+                                   packed=packed)
+    return jax.vmap(step)(states)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "use_pallas", "packed"),
+                   donate_argnums=(1,))
+def _jit_step_batch(s_padded, states, w, use_pallas=False, packed=False):
+    # donated state buffers: the host loop re-binds the result, so the
+    # whole elastic loop runs in-place on device.
+    return prepare_step_batch(s_padded, states, w=w, use_pallas=use_pallas,
+                              packed=packed)
+
+
 def elastic_range(cfg: ElasticConfig, n_active: int) -> int:
     """range = |R| / |L'| (paper §4.4), bucketed to a power of two."""
     if not cfg.elastic:
@@ -255,6 +308,7 @@ def subtree_prepare(
     cfg: ElasticConfig = ElasticConfig(),
     stats: PrepareStats | None = None,
     max_iters: int = 10_000,
+    group_index: int | None = None,
 ) -> PrepareState:
     """Run SubTreePrepare to completion for one virtual tree."""
     state = init_state(group, capacity)
@@ -262,9 +316,13 @@ def subtree_prepare(
     n_active = int(jnp.sum(state.area >= 0))
     it = 0
     while n_active > 0:
-        if it >= max_iters:
-            raise RuntimeError("SubTreePrepare failed to converge")
         w = elastic_range(cfg, n_active)
+        if it >= max_iters:
+            raise RuntimeError(
+                "SubTreePrepare failed to converge after "
+                f"{it} iterations: group={group_index if group_index is not None else '?'} "
+                f"({len(group.prefixes)} prefixes, total_freq={group.total_freq}), "
+                f"w={w}, n_active={n_active}")
         if stats is not None and stats.record_offsets:
             act = np.asarray(state.area) >= 0
             offs = (np.asarray(state.L) + np.asarray(state.start))[act]
@@ -278,6 +336,58 @@ def subtree_prepare(
         n_active = int(n_active_dev)
         it += 1
     return state
+
+
+def subtree_prepare_batch(
+    s_padded: jax.Array,
+    groups: list[VirtualTree],
+    capacity: int,
+    cfg: ElasticConfig = ElasticConfig(),
+    stats: PrepareStats | None = None,
+    max_iters: int = 10_000,
+) -> PrepareState:
+    """Run SubTreePrepare to completion for ALL virtual trees at once.
+
+    The whole working set is one padded (G, F) state driven by a single
+    jitted vmapped elastic-range loop: per-group active counts shrink
+    independently, converged groups are fixed points (they mask out of the
+    gather and the sort leaves them in place), and the state buffers are
+    donated so the loop runs in-place on device.  The elastic range is
+    shared across the batch, keyed to the busiest group — range choice
+    never changes results (Fig. 9b invariant), only I/O.
+
+    Returns the final (G, F) state; slice per group/prefix with
+    :func:`segments_of`.
+    """
+    states = init_batch(groups, capacity)
+    use_pallas = kops._use_pallas()
+    n_active = np.asarray(jnp.sum(states.area >= 0, axis=1))
+    it = 0
+    while int(n_active.max()) > 0:
+        w = elastic_range(cfg, int(n_active.max()))
+        if it >= max_iters:
+            live = np.nonzero(n_active > 0)[0]
+            detail = "; ".join(
+                f"group {g}: {len(groups[g].prefixes)} prefixes, "
+                f"total_freq={groups[g].total_freq}, n_active={int(n_active[g])}"
+                for g in live[:8])
+            raise RuntimeError(
+                f"SubTreePrepare failed to converge after {it} iterations "
+                f"(w={w}, {len(live)}/{len(groups)} groups active): {detail}")
+        if stats is not None and stats.record_offsets:
+            act = np.asarray(states.area) >= 0
+            offs = (np.asarray(states.L) + np.asarray(states.start))[act]
+            stats.offsets_history.append(offs.astype(np.int64))
+        states, n_active_dev = _jit_step_batch(s_padded, states, w, use_pallas)
+        if stats is not None:
+            total_active = int(n_active.sum())
+            stats.iterations += 1
+            stats.ranges.append(w)
+            stats.active_history.append(total_active)
+            stats.symbols_fetched += total_active * w
+        n_active = np.asarray(n_active_dev)
+        it += 1
+    return states
 
 
 def segments_of(group: VirtualTree) -> list[tuple[int, int]]:

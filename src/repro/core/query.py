@@ -145,15 +145,35 @@ class DeviceIndex:
         ``route_cap`` bounds the dense routing table (cells <= route_cap);
         ``max_pattern_len`` fixes how far past |S| gathers may read.
         """
-        base = index.alphabet.base
         prefixes = sorted(index.subtrees)
         if not prefixes:
             raise ValueError("cannot flatten an empty index")
         subs = [index.subtrees[p] for p in prefixes]
         freqs = np.array([st.freq for st in subs], np.int32)
+        ell = np.concatenate([np.asarray(st.ell, np.int32) for st in subs])
+        return cls.from_prepare(alphabet=index.alphabet, s=np.asarray(index.s),
+                                prefixes=prefixes, freqs=freqs, ell=ell,
+                                route_cap=route_cap,
+                                max_pattern_len=max_pattern_len)
+
+    @classmethod
+    def from_prepare(cls, *, alphabet, s: np.ndarray, prefixes, freqs,
+                     ell, route_cap: int = 1 << 18,
+                     max_pattern_len: int = 512) -> "DeviceIndex":
+        """Assemble directly from construction output — no SubTree dict.
+
+        ``prefixes``: sorted (lexicographic) prefix tuples; ``freqs``: the
+        aligned leaf counts; ``ell``: the concatenated leaf arrays in the
+        same order (a device array from the batched engine stays on device;
+        only the routing tables are computed host-side from the prefix
+        metadata).  This is the ``EraIndexer.build_device`` fast path.
+        """
+        base = alphabet.base
+        if not prefixes:
+            raise ValueError("cannot flatten an empty index")
+        freqs = np.asarray(freqs, np.int32)
         offs = np.concatenate([[0], np.cumsum(freqs)[:-1]]).astype(np.int32)
         total = int(freqs.sum())
-        ell = np.concatenate([np.asarray(st.ell, np.int32) for st in subs])
 
         max_plen = max(len(p) for p in prefixes)
         plen = np.array([len(p) for p in prefixes], np.int32)
@@ -188,16 +208,15 @@ class DeviceIndex:
         n_iter = int(np.ceil(np.log2(total + 1))) + 1
         pows = (base ** np.arange(k_route - 1, -1, -1)).astype(np.int32)
         spans = (base ** (k_route - np.arange(k_route + 1)) - 1).astype(np.int32)
-        s_padded = index.alphabet.pad_string(np.asarray(index.s),
-                                             extra=max_pattern_len + 8)
+        s_padded = alphabet.pad_string(s, extra=max_pattern_len + 8)
         return cls(
             base=base,
             k_route=k_route,
             n_iter=n_iter,
             max_pattern_len=max_pattern_len,
             s_padded=jnp.asarray(s_padded),
-            ell=jnp.asarray(ell),
-            ell_host=ell,
+            ell=jnp.asarray(ell),  # no-op for a device array from the batched engine
+            ell_host=np.asarray(ell),
             sub_off=jnp.asarray(offs),
             sub_freq=jnp.asarray(freqs),
             sub_prefix=jnp.asarray(pref),

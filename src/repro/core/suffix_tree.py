@@ -24,7 +24,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.alphabet import Alphabet
-from repro.core.build import SubTreeNodes
+from repro.core.build import SubTreeNodes, nodes_to_host
 
 
 @dataclasses.dataclass
@@ -130,14 +130,17 @@ class SuffixTreeIndex:
 
     def _descend(self, st: SubTree, pattern: np.ndarray):
         """Walk the sub-tree matching ``pattern``; return (lo, hi) leaf span."""
-        nodes = st.nodes
-        parent = np.asarray(nodes.parent)
-        depth = np.asarray(nodes.depth)
-        f = int(nodes.n_leaves)
+        # one up-front host conversion, written back so repeated queries
+        # never re-copy: the walks below touch the arrays element-wise,
+        # which must never sync a device array per element
+        nodes = st.nodes = nodes_to_host(st.nodes)
+        parent = nodes.parent
+        depth = nodes.depth
+        f = nodes.n_leaves
         # children lists + leaf spans computed lazily and cached on the obj
         if not hasattr(st, "_children"):
             cap = len(parent)
-            wit = np.asarray(nodes.witness)
+            wit = nodes.witness
             kids: list[list[int]] = [[] for _ in range(cap)]
             root = -1
             for v in range(cap):
@@ -159,7 +162,7 @@ class SuffixTreeIndex:
             st._root = root
         kids = st._children
         lo, hi = st._span
-        witness = np.asarray(nodes.witness)
+        witness = nodes.witness
 
         v = st._root
         if v < 0:
@@ -244,12 +247,14 @@ class SuffixTreeIndex:
             blobs[f"p{i}_bc1"] = np.asarray(st.b_c1)
             blobs[f"p{i}_bc2"] = np.asarray(st.b_c2)
             if st.nodes is not None:
-                # persist built node arrays so a loaded index can find_walk
-                blobs[f"p{i}_nparent"] = np.asarray(st.nodes.parent)
-                blobs[f"p{i}_ndepth"] = np.asarray(st.nodes.depth)
-                blobs[f"p{i}_nwitness"] = np.asarray(st.nodes.witness)
+                # persist built node arrays so a loaded index can find_walk;
+                # normalize once (device arrays -> numpy, scalars -> int)
+                nodes = nodes_to_host(st.nodes)
+                blobs[f"p{i}_nparent"] = nodes.parent
+                blobs[f"p{i}_ndepth"] = nodes.depth
+                blobs[f"p{i}_nwitness"] = nodes.witness
                 blobs[f"p{i}_ncounts"] = np.array(
-                    [int(st.nodes.n_nodes), int(st.nodes.n_leaves)], np.int64)
+                    [nodes.n_nodes, nodes.n_leaves], np.int64)
         np.savez_compressed(path, **blobs)
 
     @classmethod

@@ -16,9 +16,12 @@ The ``model`` mesh axis is idle for ERA (no matmul to TP-shard) — all 512
 chips act as independent workers, giving 512-way task parallelism, which
 is exactly the paper's scaling story (no merge phase).
 
-Also provides ``era_prepare_batch``: a ``shard_map``-able batched step
-(vmapped over a per-device batch of groups) used by the dry-run to prove
-the ERA step itself lowers on the production mesh.
+``era_prepare_batch`` — the ``shard_map``-able batched step used by the
+dry-run to prove the ERA step lowers on the production mesh — is a thin
+alias for the shared batched engine in :mod:`repro.core.prepare`; the
+worker pool below consumes the same engine (each worker pulls a CHUNK of
+groups and runs one vmapped elastic loop over it) instead of a private
+per-group loop.
 """
 
 from __future__ import annotations
@@ -28,12 +31,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.alphabet import ALPHABETS
 from repro.core.api import BuildReport, EraConfig, EraIndexer
-from repro.core.prepare import PrepareState, init_state, prepare_step
+from repro.core.prepare import PrepareState, prepare_step_batch
 from repro.core.vertical import VerticalStats
 from repro.core.prepare import PrepareStats
 from repro.data.strings import dataset
@@ -54,13 +56,12 @@ def era_prepare_batch(s_padded: jax.Array, states: PrepareState, *, w: int,
 
     ``packed``: 2-bit packed string (paper §6.1) — s_padded is uint32 words
     of 16 symbols; 4x less gather traffic and 4x fewer sort key words.
+
+    The implementation is the shared batched construction engine
+    (:func:`repro.core.prepare.prepare_step_batch`) — the same step the
+    default ``EraIndexer.build`` pipeline drives to convergence.
     """
-    step = lambda st: prepare_step(s_padded, st, w=w, packed=packed)
-    return jax.vmap(step)(states)
-
-
-def stack_states(states: list[PrepareState]) -> PrepareState:
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    return prepare_step_batch(s_padded, states, w=w, packed=packed)
 
 
 # ---------------------------------------------------------------------------
@@ -83,8 +84,15 @@ def build_distributed(
     checkpoint_path: str | None = None,
     fail_worker: str | None = None,
     fail_after: int = 1,
+    groups_per_pull: int = 4,
 ):
     """Master/worker construction with the fault-tolerant queue.
+
+    Each worker turn pulls up to ``groups_per_pull`` virtual trees and runs
+    them through the shared batched (G, F) engine
+    (``EraIndexer.process_groups``) — one vmapped elastic loop per chunk,
+    the same engine the single-host ``build`` uses — then completes the
+    tasks individually so failure/recovery stays per-group.
 
     ``fail_worker`` simulates a node loss after ``fail_after`` completed
     groups (the failure-injection path used by tests): its in-flight work
@@ -93,8 +101,8 @@ def build_distributed(
     indexer = EraIndexer(alphabet, era_cfg)
     report = BuildReport(VerticalStats(), PrepareStats())
     groups = indexer.partition(s, report)
-    capacity = min(era_cfg.f_max, max((g.total_freq for g in groups), default=2))
-    s_padded = jnp.asarray(alphabet.pad_string(s, extra=2 * era_cfg.w_max + 8))
+    capacity = indexer._capacity(groups)
+    s_padded = indexer._pad(s)
 
     queue = WorkQueue(checkpoint_path=checkpoint_path)
     queue.add_tasks([g.total_freq for g in groups], payloads=groups)
@@ -110,24 +118,32 @@ def build_distributed(
         for w in workers:
             if w in dead:
                 continue
-            task = queue.pull(w)
-            if task is None:
+            tasks = []
+            while len(tasks) < max(1, groups_per_pull):
+                task = queue.pull(w)
+                if task is None:
+                    break
+                tasks.append(task)
+            if not tasks:
                 continue
             progressed = True
             t0 = time.perf_counter()
-            subtrees = indexer.process_group(s_padded, task.payload, capacity)
-            dt = time.perf_counter() - t0
-            if w == fail_worker and fail_count >= fail_after:
-                # simulate the node dying mid-task: no completion recorded
-                dead.add(w)
-                queue.mark_failed(w)
-                continue
-            queue.complete(task.task_id, worker=w, elapsed_s=dt)
-            completed[task.task_id] = subtrees
-            per_worker[w].groups += 1
-            per_worker[w].seconds += dt
-            if w == fail_worker:
-                fail_count += 1
+            results = indexer.process_groups(
+                s_padded, [t.payload for t in tasks], capacity)
+            dt = (time.perf_counter() - t0) / len(tasks)
+            for task, subtrees in zip(tasks, results):
+                if w == fail_worker and fail_count >= fail_after:
+                    # simulate the node dying mid-chunk: this task and the
+                    # rest of the chunk stay in flight and get re-queued
+                    dead.add(w)
+                    queue.mark_failed(w)
+                    break
+                queue.complete(task.task_id, worker=w, elapsed_s=dt)
+                completed[task.task_id] = subtrees
+                per_worker[w].groups += 1
+                per_worker[w].seconds += dt
+                if w == fail_worker:
+                    fail_count += 1
         if not progressed and not queue.drained:
             # everything in flight on dead workers: force requeue
             for w in list(dead):
@@ -150,13 +166,16 @@ def main():
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--memory-mb", type=float, default=1.0)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--batch-groups", type=int, default=4,
+                    help="virtual trees per worker pull (batched engine width)")
     args = ap.parse_args()
 
     s, alpha = dataset(args.dataset, args.n)
     cfg = EraConfig(memory_bytes=int(args.memory_mb * (1 << 20)), build_impl="none")
     t0 = time.perf_counter()
     idx, qstats, workers = build_distributed(
-        s, alpha, cfg, n_workers=args.workers, checkpoint_path=args.checkpoint)
+        s, alpha, cfg, n_workers=args.workers, checkpoint_path=args.checkpoint,
+        groups_per_pull=args.batch_groups)
     dt = time.perf_counter() - t0
     print(f"indexed {args.n} symbols in {dt:.2f}s with {args.workers} workers")
     print(f"queue: {qstats}")

@@ -58,9 +58,10 @@ def serve_queries(dataset_name: str = "dna", *, n: int = 100_000,
         raise ValueError(f"max_len {max_len} must be < --n {n}")
 
     def build(s, alphabet):
+        # batched construction -> DeviceIndex directly (no SubTree dict)
         cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
         return EraIndexer(alphabet, cfg).build_device(
-            s, max_pattern_len=max(64, max_len4))[1]
+            s, max_pattern_len=max(64, max_len4))
 
     # warm start: the npz round-trip skips build + flatten entirely
     dev, s, alphabet, t_build = load_or_build(

@@ -1,0 +1,161 @@
+"""Batched (G, F) construction engine vs the serial per-group reference.
+
+The batched engine must be a pure performance transform: identical ``ell``
+/ ``b_off`` / branching symbols, identical node topology, and identical
+query results — across alphabets (including byte, which exercises unsigned
+packed-word order) and across group counts > 1 with uneven group sizes
+(padding correctness in both the G and F axes).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ref
+from repro.core.alphabet import BYTE, DNA, PROTEIN
+from repro.core.api import BuildReport, EraConfig, EraIndexer
+from repro.core.build import nodes_to_intervals
+from repro.core.prepare import ElasticConfig, PrepareStats, subtree_prepare_batch
+from repro.core.vertical import VerticalStats
+
+
+def build_pair(alpha, n, mem, seed, build_impl="none"):
+    s = alpha.random_string(n, seed=seed)
+    kw = dict(memory_bytes=mem, r_bytes=128, build_impl=build_impl)
+    serial = EraIndexer(alpha, EraConfig(construction="serial", **kw)).build(s)
+    report = BuildReport(VerticalStats(), PrepareStats())
+    batched = EraIndexer(alpha, EraConfig(construction="batched", **kw)).build(s, report)
+    return s, serial, batched, report
+
+
+class TestBatchedEqualsSerial:
+    @pytest.mark.parametrize("alpha,n,mem", [
+        (DNA, 900, 1024),
+        (PROTEIN, 600, 4096),
+        (BYTE, 500, 4096),     # codes >= 128: unsigned packed-word order
+    ])
+    def test_prepare_state_identical(self, alpha, n, mem):
+        s, serial, batched, _ = build_pair(alpha, n, mem, seed=n + mem)
+        assert set(serial.subtrees) == set(batched.subtrees)
+        for p in serial.subtrees:
+            a, b = serial.subtrees[p], batched.subtrees[p]
+            np.testing.assert_array_equal(a.ell, b.ell, err_msg=str(p))
+            np.testing.assert_array_equal(a.b_off, b.b_off, err_msg=str(p))
+            np.testing.assert_array_equal(a.b_c1, b.b_c1, err_msg=str(p))
+            np.testing.assert_array_equal(a.b_c2, b.b_c2, err_msg=str(p))
+
+    def test_multi_group_uneven_sizes(self):
+        """G > 1 with unequal total frequencies: the padded (G, F) state
+        must not leak padding into any group's results."""
+        s, serial, batched, report = build_pair(DNA, 1200, 768, seed=7)
+        assert report.n_groups >= 4
+        # uneven: the (G, F) state pads the smaller groups, so demand at
+        # least two distinct group totals (else the test proves nothing)
+        cfg = EraConfig(memory_bytes=768, r_bytes=128, build_impl="none")
+        groups = EraIndexer(DNA, cfg).partition(s)
+        assert len({g.total_freq for g in groups}) > 1
+        for p in serial.subtrees:
+            np.testing.assert_array_equal(
+                serial.subtrees[p].ell, batched.subtrees[p].ell)
+            np.testing.assert_array_equal(
+                serial.subtrees[p].b_off, batched.subtrees[p].b_off)
+        # and every leaf position appears exactly once overall
+        leaves = np.concatenate([st.ell for st in batched.subtrees.values()])
+        assert sorted(leaves.tolist()) == list(range(len(s)))
+
+    @pytest.mark.parametrize("alpha,n,mem", [(DNA, 700, 1024), (PROTEIN, 400, 2048)])
+    def test_node_topology_matches_serial_numpy(self, alpha, n, mem):
+        """The vmapped padded Cartesian-tree build must produce the same
+        canonical intervals as the paper-faithful sequential builder."""
+        s, serial, batched, _ = build_pair(alpha, n, mem, seed=n,
+                                           build_impl="numpy")
+        for p in serial.subtrees:
+            assert nodes_to_intervals(serial.subtrees[p].nodes) \
+                == nodes_to_intervals(batched.subtrees[p].nodes), p
+
+    @pytest.mark.parametrize("alpha,n,mem", [
+        (DNA, 800, 1024), (PROTEIN, 500, 4096), (BYTE, 450, 4096)])
+    def test_find_batch_identical(self, alpha, n, mem):
+        s, serial, batched, _ = build_pair(alpha, n, mem, seed=n * 3)
+        rng = np.random.default_rng(n)
+        pats = []
+        for _ in range(25):
+            m = int(rng.integers(1, 12))
+            i = int(rng.integers(0, len(s) - 1 - m))
+            pats.append(np.asarray(s[i : i + m]))
+        for _ in range(5):  # absent patterns too
+            pats.append(rng.integers(0, len(alpha.symbols), size=6).astype(np.uint8))
+        got_s = serial.find_batch(pats)
+        got_b = batched.find_batch(pats)
+        for p, a, b in zip(pats, got_s, got_b):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(b, ref.occurrences(s, p))
+
+
+class TestBuildDeviceDirect:
+    def test_matches_serial_flatten_without_subtree_dict(self):
+        """string -> DeviceIndex directly: byte-identical query engine,
+        no intermediate per-prefix numpy SubTree dict."""
+        alpha, n, mem = DNA, 1000, 1024
+        s = alpha.random_string(n, seed=41)
+        kw = dict(memory_bytes=mem, r_bytes=128, build_impl="none")
+        dev_direct = EraIndexer(alpha, EraConfig(construction="batched", **kw)).build_device(s)
+        serial = EraIndexer(alpha, EraConfig(construction="serial", **kw)).build(s)
+        dev_serial = serial.to_device()
+        # the flattened leaf array (the suffix array) is byte-identical
+        np.testing.assert_array_equal(np.asarray(dev_direct.ell),
+                                      np.asarray(dev_serial.ell))
+        np.testing.assert_array_equal(dev_direct.ell_host, dev_serial.ell_host)
+        for name in ("sub_off", "sub_freq", "sub_prefix", "sub_plen",
+                     "win_lo", "win_hi"):
+            np.testing.assert_array_equal(np.asarray(getattr(dev_direct, name)),
+                                          np.asarray(getattr(dev_serial, name)))
+        rng = np.random.default_rng(5)
+        pats = [np.asarray(s[int(i) : int(i) + 6]) for i in rng.integers(0, n - 7, 16)]
+        for a, b in zip(dev_direct.find_batch(pats), dev_serial.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_serial_engine_still_flattens_via_index(self):
+        alpha = DNA
+        s = alpha.random_string(300, seed=3)
+        cfg = EraConfig(memory_bytes=2048, r_bytes=128, build_impl="none",
+                        construction="serial")
+        dev = EraIndexer(alpha, cfg).build_device(s)
+        pat = s[10:16]
+        (got,) = dev.find_batch([pat])
+        np.testing.assert_array_equal(got, ref.occurrences(s, pat))
+
+
+class TestDiagnostics:
+    def test_convergence_error_carries_group_context(self):
+        """The non-convergence error must name the stuck group(s), their
+        total frequency, the current range and active count."""
+        import jax.numpy as jnp
+        s = DNA.random_string(400, seed=9)
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=2048, r_bytes=128))
+        groups = idx.partition(s)
+        s_padded = jnp.asarray(DNA.pad_string(s, extra=520))
+        capacity = min(idx.config.f_max, max(g.total_freq for g in groups))
+        with pytest.raises(RuntimeError) as ei:
+            subtree_prepare_batch(s_padded, groups, capacity,
+                                  ElasticConfig(), max_iters=0)
+        msg = str(ei.value)
+        assert "group" in msg and "total_freq" in msg
+        assert "n_active" in msg and "w=" in msg
+
+    def test_serial_convergence_error_carries_context(self):
+        import jax.numpy as jnp
+        from repro.core.prepare import subtree_prepare
+        s = DNA.random_string(300, seed=11)
+        idx = EraIndexer(DNA, EraConfig(memory_bytes=2048, r_bytes=128))
+        groups = idx.partition(s)
+        s_padded = jnp.asarray(DNA.pad_string(s, extra=520))
+        capacity = min(idx.config.f_max, max(g.total_freq for g in groups))
+        with pytest.raises(RuntimeError) as ei:
+            subtree_prepare(s_padded, groups[0], capacity, ElasticConfig(),
+                            max_iters=0, group_index=0)
+        msg = str(ei.value)
+        assert "group=0" in msg and "total_freq" in msg and "w=" in msg
+
+    def test_rejects_unknown_construction(self):
+        with pytest.raises(ValueError):
+            EraIndexer(DNA, EraConfig(construction="magic"))
