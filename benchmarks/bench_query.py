@@ -3,7 +3,10 @@
 Emits one row per batch size: the device path's per-batch time, with the
 derived column carrying queries/sec and the speedup over running the same
 batch through per-pattern ``SuffixTreeIndex.find`` (scalar numpy binary
-search) — the host-bound path this engine replaces.
+search) — the host-bound path this engine replaces.  Each batch size also
+gets a ``packed`` row: the same search served from the dense 2-bit string
+(the default index representation for DNA), with the index's string
+storage bytes recorded for both.
 """
 
 from __future__ import annotations
@@ -20,7 +23,8 @@ def run(quick: bool = True) -> None:
     s, alphabet = dataset("dna", n, seed=0)
     cfg = EraConfig(memory_bytes=1 << 18, build_impl="none")
     index = EraIndexer(alphabet, cfg).build(s)
-    dev = index.to_device()
+    dev = index.to_device(packing="bytes")
+    dev_packed = index.to_device(packing="dense")
 
     rng = np.random.default_rng(1)
     for batch in (8, 64, 256):
@@ -31,15 +35,21 @@ def run(quick: bool = True) -> None:
             pats.append(np.asarray(s[i : i + m]))
         padded, lengths, route = dev.pad_batch(pats)
 
-        def device_batch():
-            start, count = dev.find_batch_ranges(padded, lengths, route)
+        def device_batch(d=dev):
+            start, count = d.find_batch_ranges(padded, lengths, route)
             np.asarray(count)  # block
 
         t_dev = timeit(device_batch, repeats=3, warmup=1)
         t_py = timeit(lambda: [index.find(p) for p in pats], repeats=1)
         emit(f"query/batch{batch}", t_dev,
              f"qps={batch / max(t_dev, 1e-9):.0f} "
-             f"speedup={t_py / max(t_dev, 1e-9):.1f}x")
+             f"speedup={t_py / max(t_dev, 1e-9):.1f}x "
+             f"string_bytes={dev.string_nbytes}")
+        t_pk = timeit(lambda: device_batch(dev_packed), repeats=3, warmup=1)
+        emit(f"query/batch{batch}_packed", t_pk,
+             f"qps={batch / max(t_pk, 1e-9):.0f} "
+             f"vs_byte={t_dev / max(t_pk, 1e-9):.2f}x "
+             f"string_bytes={dev_packed.string_nbytes}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@
   build      bench_build      batched (G,F) construction engine vs serial loop
   query      bench_query      batched device query engine vs per-pattern Python
   analytics  bench_analytics  LCP analytics engine vs per-position Python
+  packed     bench_packed     dense k-bit string gather/probe vs byte path
 
 ``python -m benchmarks.run``            — quick pass over everything
 ``python -m benchmarks.run --full``     — paper-scale (slower) settings
@@ -49,6 +50,7 @@ def main() -> None:
         bench_build,
         bench_elastic,
         bench_horizontal,
+        bench_packed,
         bench_query,
         bench_roofline,
         bench_rtuning,
@@ -69,6 +71,7 @@ def main() -> None:
         "build": bench_build.run,
         "query": bench_query.run,
         "analytics": bench_analytics.run,
+        "packed": bench_packed.run,
     }
     if args.only and args.only not in suites:
         ap.error(f"unknown suite {args.only!r}; choose from {sorted(suites)}")

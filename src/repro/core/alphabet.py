@@ -39,6 +39,24 @@ class Alphabet:
     def bits_per_symbol(self) -> int:
         return max(1, int(np.ceil(np.log2(self.base))))
 
+    @property
+    def dense_bits(self) -> int:
+        """Dense-packing width in bits per symbol (paper §6.1, generalized).
+
+        Covers the REAL symbols only — the terminal is virtual in the dense
+        representation (it exists only at the end of the string, so packed
+        gathers substitute it by position instead of storing it; see
+        :mod:`repro.core.packing`).  Rounded up to a power of two dividing
+        32 so symbols never straddle word boundaries: 2-bit DNA, 4-bit
+        reduced-protein-class alphabets, 8-bit fallback (= byte passthrough
+        density) for protein/english/byte.
+        """
+        need = max(1, int(np.ceil(np.log2(max(2, len(self.symbols))))))
+        for bits in (2, 4, 8):
+            if bits >= need:
+                return bits
+        return 8
+
     def char_of(self, code: int) -> str:
         if code == self.terminal_code:
             return TERMINAL
@@ -80,9 +98,14 @@ class Alphabet:
 DNA = Alphabet("dna", "ACGT")
 PROTEIN = Alphabet("protein", "ACDEFGHIKLMNPQRSTVWY")
 ENGLISH = Alphabet("english", "abcdefghijklmnopqrstuvwxyz")
+# Murphy-10 reduced protein classes (one representative letter per class:
+# LVIM, C, A, G, ST, P, FYW, EDNQ, KR, H) — 10 symbols fit 4-bit dense
+# packing, the "protein-class" tier between 2-bit DNA and the 8-bit
+# fallback that full 20-letter protein needs.
+PROTEIN_CLASS = Alphabet("protein_class", "LCAGSPFEKH")
 # Raw bytes 0..254 (terminal = 255): indexes arbitrary binary data.  Codes
 # above 127 reach the sign bit of packed int32 words, which is why every
 # packed-word sort/comparison runs unsigned (see repro.core.packing).
 BYTE = Alphabet("byte", "".join(chr(i) for i in range(255)))
 
-ALPHABETS = {a.name: a for a in (DNA, PROTEIN, ENGLISH, BYTE)}
+ALPHABETS = {a.name: a for a in (DNA, PROTEIN, PROTEIN_CLASS, ENGLISH, BYTE)}

@@ -54,19 +54,22 @@ _MS_BATCH_PAD = 64  # query positions round up to this (bounds recompiles)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas", "w"))
-def _matching_stats(s_padded, ell, win_lo, win_hi, pows, q_ext, n_q,
+def _matching_stats(s_text, ell, win_lo, win_hi, pows, q_ext, n_q,
                     *, k_route: int, n_iter: int, use_pallas: bool, w: int):
     """Matching statistics of query positions 0..B-1 vs the suffix array.
 
-    q_ext: (B + w,) int32 query codes, terminal-padded past ``n_q``.  Each
-    position's window ``q[i:i+w]`` is routed and lower-bounded exactly like
-    a ``find_batch`` pattern (the probe kernel is the only gather in the
-    search); the max-LCP suffix is then one of the two lexicographic
-    neighbors of the insertion point.  Returns (ms, witness): int32[B].
+    s_text: the served string (byte array or dense PackedText — probe and
+    neighbor gathers dispatch, results identical).  q_ext: (B + w,) int32
+    query codes, terminal-padded past ``n_q``.  Each position's window
+    ``q[i:i+w]`` is routed and lower-bounded exactly like a ``find_batch``
+    pattern (the probe kernel is the only gather in the search); the
+    max-LCP suffix is then one of the two lexicographic neighbors of the
+    insertion point.  Returns (ms, witness): int32[B].
     """
     b = q_ext.shape[0] - w
     total = ell.shape[0]
     probe = kops.pattern_probe_impl(use_pallas)
+    gather = kops.range_gather_impl(use_pallas)
 
     idx = jnp.arange(b, dtype=jnp.int32)
     windows = q_ext[idx[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]]
@@ -83,7 +86,7 @@ def _matching_stats(s_padded, ell, win_lo, win_hi, pows, q_ext, n_q,
         lo, hi = st
         mid = (lo + hi) // 2
         pos = ell[jnp.clip(mid, 0, total - 1)]
-        cmp = probe(s_padded, pos, pat_words, mask_words)
+        cmp = probe(s_text, pos, pat_words, mask_words)
         act = lo < hi
         lo = jnp.where(act & (cmp < 0), mid + 1, lo)
         hi = jnp.where(act & (cmp >= 0), mid, hi)
@@ -95,8 +98,8 @@ def _matching_stats(s_padded, ell, win_lo, win_hi, pows, q_ext, n_q,
     # insertion point; compare both neighbors' packed reads with the window.
     left_row = jnp.clip(pos - 1, 0, total - 1)
     right_row = jnp.clip(pos, 0, total - 1)
-    lw = packing.gather_pack(s_padded, ell[left_row], w)
-    rw = packing.gather_pack(s_padded, ell[right_row], w)
+    lw = gather(s_text, ell[left_row], w)
+    rw = gather(s_text, ell[right_row], w)
     lcp_l = jnp.where(pos > 0, kref.lcp_pairs_ref(lw, pat_words, w)[0], 0)
     lcp_r = jnp.where(pos < total, kref.lcp_pairs_ref(rw, pat_words, w)[0], 0)
     best = jnp.maximum(lcp_l, lcp_r)
@@ -194,8 +197,8 @@ class AnalyticsEngine:
             # prefix length; one fixed-width kernel pass covers them all.
             max_plen = max(len(p) for p in prefixes)
             w = -(-(max_plen + 1) // 4) * 4
-            if w <= dev.max_pattern_len:  # dev padding already covers w
-                s_pad = dev.s_padded
+            if w <= dev.max_pattern_len:  # dev padding already covers w;
+                s_pad = dev.s_text       # packed or byte — kernel dispatches
             else:
                 s_pad = jnp.asarray(index.alphabet.pad_string(
                     np.asarray(index.s), extra=w + 8))
@@ -278,7 +281,7 @@ class AnalyticsEngine:
         q_ext = np.full(b_pad + w, self.dev.base - 1, np.int32)
         q_ext[: len(q)] = q
         out = np.asarray(_matching_stats(
-            self.dev.s_padded, self.dev.ell, self.dev.win_lo, self.dev.win_hi,
+            self.dev.s_text, self.dev.ell, self.dev.win_lo, self.dev.win_hi,
             self.dev.pows, q_ext, np.int32(len(q)),
             k_route=self.dev.k_route, n_iter=self.dev.n_iter,
             use_pallas=kops._use_pallas(), w=w))
@@ -366,10 +369,8 @@ class AnalyticsEngine:
                                               k=k, topk=tk)
         # gather the (topk, k) windows on device; transferring the whole
         # string to read topk*k symbols would be an O(n) copy per call
-        wins = np.asarray(jnp.take(
-            self.dev.s_padded,
-            top_pos[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :],
-            axis=0))
+        # (read_symbols decodes dense storage in-register)
+        wins = np.asarray(self.dev.read_symbols(top_pos, k))
         out = []
         for c, p, w in zip(np.asarray(top_c), np.asarray(top_pos), wins):
             if c <= 0:

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build as build_mod
+from repro.core import packing
 from repro.core.alphabet import Alphabet
 from repro.core.prepare import (
     ElasticConfig,
@@ -64,6 +65,12 @@ class EraConfig:
     #                                batched engine always uses the vmapped
     #                                parallel builder unless "none" (skip nodes)
     construction: str = "batched"  # batched (one (G,F) loop) | serial (per group)
+    packing: str = "auto"          # device string representation (paper §6.1):
+    #                                auto  — dense k-bit when the alphabet is
+    #                                        denser than bytes (2-bit DNA,
+    #                                        4-bit protein classes), else bytes
+    #                                dense — force Alphabet.dense_bits packing
+    #                                bytes — one byte per symbol (reference)
 
     @property
     def mts_bytes(self) -> int:
@@ -140,6 +147,10 @@ class EraIndexer:
             raise ValueError(
                 f"unknown construction engine {config.construction!r}; "
                 "choose 'serial' or 'batched'")
+        if config.packing not in ("auto", "dense", "bytes"):
+            raise ValueError(
+                f"unknown packing mode {config.packing!r}; "
+                "choose 'auto', 'dense' or 'bytes'")
         if config.build_impl not in (*_BUILDERS, "none"):
             # fail fast: the batched engine always uses the vmapped parallel
             # builder (unless "none"), so a typo would otherwise pass silently
@@ -174,6 +185,17 @@ class EraIndexer:
     def _pad(self, s: np.ndarray) -> jnp.ndarray:
         # pad so gathers past the end stay in-bounds (terminal padding)
         return jnp.asarray(self.alphabet.pad_string(s, extra=2 * self.config.w_max + 8))
+
+    def _device_text(self, s: np.ndarray):
+        """The device-resident string for construction gathers: dense
+        k-bit :class:`repro.core.packing.PackedText` (paper §6.1 — the
+        default for sub-byte alphabets) or the terminal-padded byte
+        array, per ``EraConfig.packing``.  Construction output is
+        bit-identical either way."""
+        if packing.resolve_dense(self.config.packing, self.alphabet):
+            return packing.pack_text(s, self.alphabet,
+                                     extra=2 * self.config.w_max + 8)
+        return self._pad(s)
 
     # ---- worker units ------------------------------------------------------
 
@@ -228,7 +250,7 @@ class EraIndexer:
         cfg = self.config
         groups = self.partition(s, report)
         capacity = self._capacity(groups)
-        s_padded = self._pad(s)
+        s_padded = self._device_text(s)
 
         t0 = time.perf_counter()
         subtrees: dict[tuple, SubTree] = {}
@@ -258,7 +280,7 @@ class EraIndexer:
         if not groups:
             return groups, None
         capacity = self._capacity(groups)
-        s_padded = self._pad(s)
+        s_padded = self._device_text(s)
         t0 = time.perf_counter()
         states = subtree_prepare_batch(s_padded, groups, capacity,
                                        self.config.elastic_config(),
@@ -286,32 +308,40 @@ class EraIndexer:
         return SuffixTreeIndex(s=np.asarray(s), alphabet=self.alphabet, subtrees=subtrees)
 
     def _attach_nodes_batched(self, states, groups, subtrees, n_total: int) -> None:
-        """All sub-trees' node sets in ONE vmapped Cartesian-tree build.
+        """All sub-trees' node sets via size-bucketed vmapped builds.
 
         Per-prefix (ell, b_off) segments are gathered on device into padded
-        (P, F_pad) rows (depth-0 padding — see repro.core.build), built with
-        the vmapped parallel builder, then unpadded to the compact layout.
+        rows (depth-0 padding — see repro.core.build) and built with the
+        vmapped parallel Cartesian-tree builder.  Rows are grouped into at
+        most ~3 pad-width buckets (:func:`repro.core.build.bucket_pad_widths`)
+        instead of padding every row to the global max freq — on skewed
+        prefix mixes the narrow buckets hold most rows at a fraction of the
+        padded work, with bit-identical node sets per row either way.
         """
         entries = _sorted_segments(groups)
         f_cap = states.L.shape[1]
-        f_pad = build_mod.pad_width(max(e[3] for e in entries))
-        idx = np.zeros((len(entries), f_pad), np.int64)
-        mask = np.zeros((len(entries), f_pad), bool)
-        for row, entry in enumerate(entries):
-            freq = entry[3]
-            idx[row, :freq] = _entry_flat_idx(entry, f_cap)
-            mask[row, :freq] = True
-        idx = jnp.asarray(idx, jnp.int32)
-        mask = jnp.asarray(mask)
-        ell_rows = jnp.where(mask, jnp.take(states.L.reshape(-1), idx), n_total)
-        boff_rows = jnp.where(mask, jnp.take(states.b_off.reshape(-1), idx), 0)
-        nodes = build_mod.build_parallel_batch(ell_rows, boff_rows, n_total)
-        parent = np.asarray(nodes.parent)
-        depth = np.asarray(nodes.depth)
-        witness = np.asarray(nodes.witness)
-        for row, (prefix, _, _, freq) in enumerate(entries):
-            subtrees[prefix].nodes = build_mod.unpad_nodes_row(
-                parent[row], depth[row], witness[row], freq)
+        flat_L = states.L.reshape(-1)
+        flat_b = states.b_off.reshape(-1)
+        for f_pad, rows in build_mod.bucket_pad_widths(
+                [e[3] for e in entries]):
+            idx = np.zeros((len(rows), f_pad), np.int64)
+            mask = np.zeros((len(rows), f_pad), bool)
+            for r, e_i in enumerate(rows):
+                freq = entries[e_i][3]
+                idx[r, :freq] = _entry_flat_idx(entries[e_i], f_cap)
+                mask[r, :freq] = True
+            idx = jnp.asarray(idx, jnp.int32)
+            mask = jnp.asarray(mask)
+            ell_rows = jnp.where(mask, jnp.take(flat_L, idx), n_total)
+            boff_rows = jnp.where(mask, jnp.take(flat_b, idx), 0)
+            nodes = build_mod.build_parallel_batch(ell_rows, boff_rows, n_total)
+            parent = np.asarray(nodes.parent)
+            depth = np.asarray(nodes.depth)
+            witness = np.asarray(nodes.witness)
+            for r, e_i in enumerate(rows):
+                prefix, _, _, freq = entries[e_i]
+                subtrees[prefix].nodes = build_mod.unpad_nodes_row(
+                    parent[r], depth[r], witness[r], freq)
 
     def build_device(self, s: np.ndarray, report: BuildReport | None = None,
                      **device_kwargs):
@@ -322,9 +352,12 @@ class EraIndexer:
         (G, F) prepare state into suffix-array order with one device
         gather — no per-prefix numpy ``SubTree`` dict, no node build.  The
         serial engine builds the full index first and flattens it.
-        ``device_kwargs``: ``route_cap``, ``max_pattern_len``.
+        ``device_kwargs``: ``route_cap``, ``max_pattern_len``, ``packing``
+        (defaults to this indexer's ``EraConfig.packing``, so a dense
+        build serves from the dense string).
         """
         report = report if report is not None else BuildReport(VerticalStats(), PrepareStats())
+        device_kwargs.setdefault("packing", self.config.packing)
         if self.config.construction != "batched":
             return self.build(s, report).to_device(**device_kwargs)
 
@@ -350,8 +383,14 @@ class EraIndexer:
                         **device_kwargs):
         """Build + flatten + LCP in one step: returns ``(index, engine)``
         where the second element is the device-resident analytics engine
-        (:class:`repro.core.analytics.AnalyticsEngine`)."""
+        (:class:`repro.core.analytics.AnalyticsEngine`).  Flattening
+        kwargs default ``packing`` to this indexer's config."""
         index = self.build(s, report)
+        if device_kwargs or self.config.packing != "auto":
+            # honor a non-default packing even on the no-kwargs path (the
+            # engine is then built uncached; "auto" keeps the shared cache,
+            # whose default is the same "auto")
+            device_kwargs.setdefault("packing", self.config.packing)
         return index, index.analytics(**device_kwargs)
 
 

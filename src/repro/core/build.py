@@ -290,6 +290,38 @@ def pad_width(max_freq: int) -> int:
     return max_freq + PAD_MIN
 
 
+def bucket_pad_widths(freqs, max_buckets: int = 3) -> list[tuple[int, np.ndarray]]:
+    """Group row frequencies into at most ``max_buckets`` pad-width buckets.
+
+    Real sub-tree size mixes are skewed (a few huge prefixes, many tiny
+    ones), so padding EVERY row to the global max wastes most of the
+    vmapped Cartesian-tree work.  Rows are partitioned by
+    ``pad_width(freq)`` rounded up to a power of four (at most log4
+    distinct classes); the largest ``max_buckets`` classes survive and
+    smaller rows fall up into the narrowest surviving bucket.  Each
+    bucket's actual pad width is the exact ``pad_width`` of its largest
+    member, so the widest bucket never pads beyond the old global width.
+
+    Returns ``[(width, row_indices), ...]`` widest bucket first; the
+    indices partition ``range(len(freqs))``.
+    """
+    freqs = np.asarray(freqs, np.int64)
+    if freqs.size == 0:
+        return []
+    pow4 = 4 ** np.ceil(
+        np.log2(np.maximum(freqs + PAD_MIN, 1)) / 2).astype(np.int64)
+    classes = np.sort(np.unique(pow4))[::-1]
+    kept = classes[: max(1, max_buckets)]
+    out = []
+    for i, cls in enumerate(kept):
+        # last (narrowest) kept class absorbs every smaller dropped class
+        take = (pow4 <= cls) if i == len(kept) - 1 else (pow4 == cls)
+        idx = np.nonzero(take)[0]
+        if idx.size:
+            out.append((pad_width(int(freqs[idx].max())), idx))
+    return out
+
+
 def build_parallel_batch(ell_rows: jax.Array, boff_rows: jax.Array,
                          n_total: int) -> SubTreeNodes:
     """vmapped :func:`build_parallel` over (P, F_pad) padded rows.

@@ -1,26 +1,45 @@
 """Shared packed-word machinery for construction AND querying.
 
-One byte per symbol code, packed big-endian 4-symbols/int32 so that the
-UNSIGNED integer order of the packed words equals the lexicographic order
-of the symbol sequence.  This module is the single implementation behind
+Two representations live here:
+
+**Sort keys** — one byte per symbol code, packed big-endian
+4-symbols/int32 so that the UNSIGNED integer order of the packed words
+equals the lexicographic order of the symbol sequence.  This is the single
+comparison currency of the whole pipeline:
 
 * :mod:`repro.core.prepare`  — elastic-range sort keys (SubTreePrepare),
 * :mod:`repro.core.build`    — clz-based log2 in the parallel builder,
 * :mod:`repro.core.query`    — batched pattern/suffix comparisons,
 * :mod:`repro.kernels.ref`   — the pure-jnp kernel oracles.
 
-Signedness: codes up to 127 keep every packed word non-negative, so signed
-int32 comparisons coincide with lexicographic order (the original DNA /
-protein assumption).  The byte alphabet (codes up to 255) sets the int32
-sign bit via the top byte; every sort or comparison on packed words must
-therefore run on the uint32 bit pattern — use :func:`as_u32` (bitcast) or
-:func:`flip_sign` (order-preserving int32 remap) at the comparison site.
+**Storage** (:class:`PackedText`) — the string itself held DENSE at
+``Alphabet.dense_bits`` bits per symbol (paper §6.1 generalized beyond
+DNA: 2-bit DNA, 4-bit reduced-protein classes, 8-bit fallback), big-endian
+inside uint32 words.  Gathers read the dense words and REPACK in-register
+into the exact byte-per-symbol sort keys above (:func:`gather_pack_dense`),
+so every downstream lexsort / LCP / probe is bit-identical between the
+dense and byte paths while HBM string traffic shrinks by ``8/bits``.  The
+terminal is *virtual* in dense storage: it only ever occurs at the end of
+the string, so a gather substitutes the terminal code for every position
+``>= n_real`` instead of spending a code point on it (codes ``0..|Σ|-1``
+must fit ``bits``; the terminal ``|Σ|`` need not).
+
+Signedness: codes up to 127 keep every packed key word non-negative, so
+signed int32 comparisons coincide with lexicographic order (the original
+DNA / protein assumption).  The byte alphabet (codes up to 255) sets the
+int32 sign bit via the top byte; every sort or comparison on packed key
+words must therefore run on the uint32 bit pattern — use :func:`as_u32`
+(bitcast) or :func:`flip_sign` (order-preserving int32 remap) at the
+comparison site.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PACK_WEIGHTS = (1 << 24, 1 << 16, 1 << 8, 1)
 
@@ -74,3 +93,206 @@ def clz32(x: jax.Array) -> jax.Array:
     x = x | (x >> 8)
     x = x | (x >> 16)
     return 32 - jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Dense k-bit text storage (paper §6.1, generalized to the alphabet)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedText:
+    """The string stored dense at ``bits`` bits/symbol in uint32 words.
+
+    ``words[k]`` holds symbols ``k*spw .. k*spw + spw - 1`` big-endian
+    (``spw = 32 // bits``), so the bit pattern of a word run IS the
+    lexicographic order of the symbols it covers.  Only the ``n_real``
+    REAL symbols are stored; the terminal (and the terminal padding past
+    it) is virtual — readers substitute ``terminal`` for every position
+    ``>= n_real``.  ``words`` carries enough zero tail that any gather a
+    caller is contracted to make (``n_real + extra`` symbols, see
+    :func:`pack_text`) stays in bounds.
+
+    Registered as a pytree with ``bits``/``terminal`` static, so a
+    PackedText flows through ``jax.jit`` boundaries and abstract
+    ``ShapeDtypeStruct`` lowering (the dry-run) like any array.
+    """
+
+    words: jax.Array   # uint32[n_words]; big-endian ``bits``-bit symbols
+    n_real: jax.Array  # int32 scalar: symbols stored before the terminal
+    bits: int          # static: 2 | 4 | 8
+    terminal: int      # static: the (virtual) terminal code
+
+    def tree_flatten(self):
+        return (self.words, self.n_real), (self.bits, self.terminal)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(words=children[0], n_real=children[1],
+                   bits=aux[0], terminal=aux[1])
+
+    @property
+    def syms_per_word(self) -> int:
+        return 32 // self.bits
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.words.shape[0]) * 4
+
+
+def resolve_dense(mode: str, alphabet) -> bool:
+    """Does packing ``mode`` select dense storage for ``alphabet``?
+
+    ``auto`` goes dense exactly when density buys traffic (< 8 bits);
+    ``dense`` forces the packed machinery even at 8 bits (byte-equivalent
+    density, useful for exercising the generic path); ``bytes`` never."""
+    if mode == "bytes":
+        return False
+    if mode == "dense":
+        return True
+    if mode == "auto":
+        return alphabet.dense_bits < 8
+    raise ValueError(f"unknown packing mode {mode!r}; "
+                     "choose 'auto', 'dense' or 'bytes'")
+
+
+def pack_text(codes: np.ndarray, alphabet, *, extra: int = 8) -> PackedText:
+    """Dense-pack a TERMINATED code string for device-resident gathers.
+
+    ``codes``: uint8 codes whose last element is the terminal (the form
+    :meth:`Alphabet.encode` produces).  ``extra``: how many symbols past
+    the end gathers may read (the same contract as
+    :meth:`Alphabet.pad_string`) — the word tail is sized to cover it plus
+    one halo word for sub-word shift alignment.
+    """
+    codes = np.asarray(codes, np.uint8)
+    if codes.size == 0 or codes[-1] != alphabet.terminal_code:
+        raise ValueError("pack_text needs a terminated code string")
+    bits = alphabet.dense_bits
+    n_real = codes.size - 1
+    real = codes[:n_real].astype(np.uint32)
+    if real.size and real.max() >= (1 << bits):
+        raise ValueError(
+            f"codes exceed {bits}-bit dense range for alphabet "
+            f"{alphabet.name!r} (max code {int(real.max())})")
+    spw = 32 // bits
+    n_words = -(-(n_real + extra) // spw) + 1  # +1 halo for shift alignment
+    grp = np.zeros(n_words * spw, np.uint32)
+    grp[:n_real] = real
+    shifts = (32 - bits * (np.arange(spw, dtype=np.uint32) + 1))
+    words = (grp.reshape(n_words, spw) << shifts[None, :]).sum(
+        axis=1, dtype=np.uint32)
+    return PackedText(words=jnp.asarray(words),
+                      n_real=jnp.asarray(n_real, jnp.int32),
+                      bits=bits, terminal=alphabet.terminal_code)
+
+
+def gather_symbols_dense(pt: PackedText, offs: jax.Array, w: int) -> jax.Array:
+    """Read ``w`` symbol codes at each offset from dense storage.
+
+    Returns (F, w) int32 codes with the virtual terminal substituted for
+    positions ``>= n_real`` — element-for-element what a byte-path
+    ``jnp.take`` from the terminal-padded string returns.  Pure-jnp; the
+    Pallas realization is :mod:`repro.kernels.packed_gather`.
+    """
+    bits, spw = pt.bits, pt.syms_per_word
+    offs = offs.astype(jnp.int32)
+    aligned = _aligned_words(pt, offs, w)                       # (F, nw)
+    shifts = (32 - bits * (jnp.arange(spw, dtype=jnp.uint32) + 1))
+    sym = ((aligned[:, :, None] >> shifts[None, None, :]) & ((1 << bits) - 1))
+    sym = sym.reshape(offs.shape[0], -1)[:, :w].astype(jnp.int32)
+    past_end = (offs[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+                >= pt.n_real)
+    return jnp.where(past_end, jnp.int32(pt.terminal), sym)
+
+
+def _aligned_words(pt: PackedText, offs: jax.Array, w: int) -> jax.Array:
+    """(F, ceil(w/spw)) uint32 dense words, shift-aligned to each offset."""
+    bits, spw = pt.bits, pt.syms_per_word
+    nw = -(-w // spw)
+    word0 = offs // spw
+    idx = word0[:, None] + jnp.arange(nw + 1, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(idx, pt.words.shape[0] - 1)  # safety net (cf. gather_pack)
+    words = jnp.take(pt.words, idx, axis=0).astype(jnp.uint32)  # (F, nw+1)
+    sh = (bits * (offs % spw)).astype(jnp.uint32)[:, None]
+    hi = words[:, :-1] << sh
+    # funnel low half as (x >> 1) >> (31 - sh): equals x >> (32 - sh) for
+    # sh > 0 and 0 for sh == 0, with every shift amount in-range — no
+    # select needed (selects + masked shifts dominate this path on CPU).
+    lo = (words[:, 1:] >> 1) >> (31 - sh)
+    return hi | lo
+
+
+def _spread_to_bytes(chunk: jax.Array, bits: int) -> jax.Array:
+    """Spread 4 right-aligned ``bits``-bit fields of a uint32 lane into the
+    4 big-endian bytes of the lane (classic bit-interleave deposit)."""
+    if bits == 8:
+        return chunk
+    if bits == 4:
+        t = (chunk | (chunk << 8)) & jnp.uint32(0x00FF00FF)
+        return (t | (t << 4)) & jnp.uint32(0x0F0F0F0F)
+    if bits == 2:
+        t = (chunk | (chunk << 12)) & jnp.uint32(0x000F000F)
+        return (t | (t << 6)) & jnp.uint32(0x03030303)
+    raise ValueError(f"unsupported dense bits {bits}")
+
+
+def gather_pack_dense(pt: PackedText, offs: jax.Array, w: int) -> jax.Array:
+    """Gather ``w`` symbols from dense storage and emit byte sort keys.
+
+    Bit-identical to :func:`gather_pack` on the terminal-padded byte
+    string — the invariant the whole dense pipeline rests on (asserted in
+    ``tests/test_packed.py``) — while moving ``bits/8`` of the bytes.
+
+    The repack never materializes individual symbols: each output int32
+    carries 4 symbols = ``4*bits`` consecutive dense bits, so it is one
+    chunk-extract + bit-spread per OUTPUT word (4x fewer lanes than the
+    per-symbol route), and the virtual-terminal tail is patched per word
+    through a 5-entry keep/terminal mask table.
+    """
+    bits, spw = pt.bits, pt.syms_per_word
+    assert w % 4 == 0, w
+    offs = offs.astype(jnp.int32)
+    f = offs.shape[0]
+    n_out = w // 4
+    aligned = _aligned_words(pt, offs, w)  # (F, ceil(w/spw))
+    cpw = spw // 4  # output chunks per dense word
+    if cpw > 1:
+        csh = (32 - (4 * bits) * (jnp.arange(cpw, dtype=jnp.uint32) + 1))
+        chunks = ((aligned[:, :, None] >> csh[None, None, :])
+                  & jnp.uint32((1 << (4 * bits)) - 1))
+        chunks = chunks.reshape(f, aligned.shape[1] * cpw)[:, :n_out]
+    else:
+        chunks = aligned[:, :n_out]
+    out = _spread_to_bytes(chunks, bits)  # (F, n_out) big-endian byte words
+
+    # virtual terminal: word j holds symbols off+4j .. off+4j+3; keep the
+    # first v = clip(n_real - (off+4j), 0, 4) and overwrite the tail with
+    # terminal bytes (= t_word on the dropped bytes: term == t_word & ~keep)
+    t_word = jnp.uint32((pt.terminal & 0xFF) * 0x01010101)
+    keep_tab = jnp.asarray(
+        np.array([0, 0xFF000000, 0xFFFF0000, 0xFFFFFF00, 0xFFFFFFFF],
+                 np.uint32))
+    v = jnp.clip(pt.n_real - (offs[:, None]
+                              + 4 * jnp.arange(n_out, dtype=jnp.int32)[None, :]),
+                 0, 4)
+    keep = keep_tab[v]
+    out = (out & keep) | (t_word & ~keep)
+    return jax.lax.bitcast_convert_type(out, jnp.int32)
+
+
+def unpack_text(pt: PackedText, n: int | None = None) -> np.ndarray:
+    """Decode dense storage back to uint8 codes (terminal included).
+
+    ``n``: total symbols to materialize (default ``n_real + 1``, i.e. the
+    original terminated string)."""
+    n_real = int(pt.n_real)
+    n = n_real + 1 if n is None else int(n)
+    spw = pt.syms_per_word
+    words = np.asarray(pt.words)
+    shifts = (32 - pt.bits * (np.arange(spw, dtype=np.uint32) + 1))
+    sym = ((words[:, None] >> shifts[None, :]) & ((1 << pt.bits) - 1))
+    sym = sym.reshape(-1)[:n].astype(np.uint8)
+    sym[n_real:] = pt.terminal
+    return sym

@@ -164,35 +164,35 @@ def lcp_adjacent(keys: jax.Array, w: int) -> tuple[jax.Array, jax.Array, jax.Arr
 # One elastic-range step (jitted per static w)
 # ---------------------------------------------------------------------------
 
-def _kernel_impls(use_pallas: bool, packed: bool = False):
+def _kernel_impls(use_pallas: bool):
     """Select kernel implementations; a STATIC jit arg so switching the
     REPRO_KERNELS env var between builds cannot hit a stale trace cache.
 
-    ``packed``: 2-bit packed DNA path (paper §6.1) — 4x less gather traffic
-    and 4x fewer sort key words; uint32 unsigned comparisons."""
-    if packed:
-        from repro.kernels import ref as kref
-
-        return kref.packed_gather_ref, kref.lcp_pairs_packed_ref
+    The returned gather dispatches on the string representation: a dense
+    :class:`repro.core.packing.PackedText` (paper §6.1 generalized —
+    ``8/bits``x less gather traffic) or the terminal-padded byte array.
+    Both emit identical byte-per-symbol sort keys, so the LCP stage is
+    shared and construction output is representation-independent."""
     if use_pallas:
         from repro.kernels.lcp import lcp_pairs as lcp_k
-        from repro.kernels.range_gather import range_gather_pack as gather_k
 
         interp = jax.default_backend() != "tpu"
         return (
-            lambda s, o, w: gather_k(s, o, w, interpret=interp),
+            kops.range_gather_impl(True),
             lambda a, b, w: lcp_k(a, b, w, interpret=interp),
         )
     from repro.kernels import ref as kref
 
-    return kref.range_gather_pack_ref, kref.lcp_pairs_ref
+    return kops.range_gather_impl(False), kref.lcp_pairs_ref
 
 
-def prepare_step(s_padded: jax.Array, state: PrepareState, *, w: int,
-                 use_pallas: bool = False, packed: bool = False,
+def prepare_step(s_padded, state: PrepareState, *, w: int,
+                 use_pallas: bool = False,
                  gather_fn=None) -> tuple[PrepareState, jax.Array]:
     """One iteration of SubTreePrepare for static range ``w``.
 
+    ``s_padded``: the terminal-padded byte string OR a dense
+    :class:`repro.core.packing.PackedText` — results are bit-identical.
     Returns (new_state, n_active).
     """
     f = state.L.shape[0]
@@ -201,7 +201,7 @@ def prepare_step(s_padded: jax.Array, state: PrepareState, *, w: int,
 
     # 1. read ``w`` symbols after every active leaf (paper lines 9-12);
     #    Pallas paged-gather on TPU, pure-jnp fallback elsewhere.
-    default_gather, lcp_fn = _kernel_impls(use_pallas, packed)
+    default_gather, lcp_fn = _kernel_impls(use_pallas)
     gather_fn = gather_fn or default_gather
     offs = jnp.where(active, state.L + state.start, 0)
     keys = gather_fn(s_padded, offs, w)
@@ -258,29 +258,29 @@ def _jit_step(s_padded, state, w, use_pallas=False):
     return prepare_step(s_padded, state, w=w, use_pallas=use_pallas)
 
 
-def prepare_step_batch(s_padded: jax.Array, states: PrepareState, *, w: int,
-                       use_pallas: bool = False, packed: bool = False):
+def prepare_step_batch(s_padded, states: PrepareState, *, w: int,
+                       use_pallas: bool = False):
     """One elastic-range iteration for a (G, F) batch of virtual trees.
 
     Groups are independent, so the step is a plain vmap over the leading
     axis; converged groups have no active areas, make zeroed gathers and
     are exact fixed points of the step.  Callers may shard_map G over the
-    mesh — the only cross-device data is the replicated string read.
+    mesh — the only cross-device data is the replicated string read
+    (byte array or dense PackedText; the latter replicates ``8/bits``x
+    fewer bytes per device).
 
     Returns (new_states, n_active) with ``n_active`` int32[G].
     """
-    step = lambda st: prepare_step(s_padded, st, w=w, use_pallas=use_pallas,
-                                   packed=packed)
+    step = lambda st: prepare_step(s_padded, st, w=w, use_pallas=use_pallas)
     return jax.vmap(step)(states)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "use_pallas", "packed"),
+@functools.partial(jax.jit, static_argnames=("w", "use_pallas"),
                    donate_argnums=(1,))
-def _jit_step_batch(s_padded, states, w, use_pallas=False, packed=False):
+def _jit_step_batch(s_padded, states, w, use_pallas=False):
     # donated state buffers: the host loop re-binds the result, so the
     # whole elastic loop runs in-place on device.
-    return prepare_step_batch(s_padded, states, w=w, use_pallas=use_pallas,
-                              packed=packed)
+    return prepare_step_batch(s_padded, states, w=w, use_pallas=use_pallas)
 
 
 def elastic_range(cfg: ElasticConfig, n_active: int) -> int:
@@ -302,7 +302,7 @@ class PrepareStats:
 
 
 def subtree_prepare(
-    s_padded: jax.Array,
+    s_padded,
     group: VirtualTree,
     capacity: int,
     cfg: ElasticConfig = ElasticConfig(),
@@ -339,7 +339,7 @@ def subtree_prepare(
 
 
 def subtree_prepare_batch(
-    s_padded: jax.Array,
+    s_padded,
     groups: list[VirtualTree],
     capacity: int,
     cfg: ElasticConfig = ElasticConfig(),

@@ -25,8 +25,16 @@ packed big-endian words of :mod:`repro.core.packing` — the same machinery
 the construction path sorts with — under unsigned order, so results are
 exact for every alphabet including the byte alphabet.
 
+The served string itself (``s_text``) is stored DENSE by default (paper
+§6.1 generalized): ``Alphabet.dense_bits`` bits per symbol inside uint32
+words (2-bit DNA, 4-bit protein classes) with the byte array as fallback /
+reference.  Probe gathers repack in-register to the same byte sort keys,
+so results are bit-identical across representations while the serving
+index and its per-probe HBM traffic shrink ~``8/bits``x.
+
 The per-pattern numpy path (``SuffixTreeIndex.find``) remains the oracle;
-``tests/test_query.py`` cross-checks the two on randomized workloads.
+``tests/test_query.py`` / ``tests/test_packed.py`` cross-check the paths
+on randomized workloads.
 """
 
 from __future__ import annotations
@@ -38,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import packing
+from repro.core import packing as packing_mod
 from repro.kernels import ops as kops
 
 
@@ -50,11 +58,12 @@ def npz_path(path: str) -> str:
 
 
 @functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas"))
-def _find_batch_ranges(s_padded, ell, win_lo, win_hi, pows, spans,
+def _find_batch_ranges(s_text, ell, win_lo, win_hi, pows, spans,
                        patterns, lengths, route_syms,
                        *, k_route: int, n_iter: int, use_pallas: bool):
     """Route + vectorized lower/upper-bound binary search for one batch.
 
+    s_text: byte string or dense PackedText (the probe dispatches);
     patterns: (B, m_pad) int32, zero-padded; lengths: (B,) int32 >= 1;
     route_syms: (B, k_route) int32 (first symbols, zero-padded).
     Returns (start, count): int32[B] slices into ``ell``.
@@ -67,8 +76,8 @@ def _find_batch_ranges(s_padded, ell, win_lo, win_hi, pows, spans,
     # the 0xFF-byte mask, so masked suffix words compare against exactly the
     # first ``m`` symbols (prefix match == equality).
     in_pat = jnp.arange(m_pad, dtype=jnp.int32)[None, :] < lengths[:, None]
-    pat_words = packing.pack_words(jnp.where(in_pat, patterns, 0))
-    mask_words = packing.pack_words(jnp.where(in_pat, 0xFF, 0))
+    pat_words = packing_mod.pack_words(jnp.where(in_pat, patterns, 0))
+    mask_words = packing_mod.pack_words(jnp.where(in_pat, 0xFF, 0))
 
     # routing: the pattern's depth-k_route code interval [c_lo, c_hi] covers
     # every suffix that can match; one gather into the dense table bounds
@@ -91,7 +100,7 @@ def _find_batch_ranges(s_padded, ell, win_lo, win_hi, pows, spans,
         umid = (ulo + uhi) // 2
         mids = jnp.concatenate([lmid, umid])
         pos = ell[jnp.clip(mids, 0, total - 1)]
-        cmp = probe(s_padded, pos, pat2, mask2)
+        cmp = probe(s_text, pos, pat2, mask2)
         lcmp, ucmp = cmp[:b], cmp[b:]
         lact = llo < lhi
         uact = ulo < uhi
@@ -114,8 +123,10 @@ class DeviceIndex:
     base: int                 # |Σ| + 1 including the terminal
     k_route: int              # routing-trie depth (base**k_route cells)
     n_iter: int               # binary-search trip count (covers ``total``)
-    max_pattern_len: int      # padding guarantee baked into ``s_padded``
-    s_padded: jax.Array       # uint8[n + pad] terminal-padded string
+    max_pattern_len: int      # padding guarantee baked into ``s_text``
+    s_text: object            # the served string: dense PackedText (k-bit
+    #                           uint32 words, the default for sub-byte
+    #                           alphabets) or uint8[n + pad] terminal-padded
     ell: jax.Array            # int32[total] concatenated leaf arrays (= SA)
     ell_host: np.ndarray      # host copy of ell (result materialization)
     sub_off: jax.Array        # int32[T] slice start of sub-tree t in ell
@@ -135,15 +146,62 @@ class DeviceIndex:
     def n_subtrees(self) -> int:
         return int(self.sub_off.shape[0])
 
+    @property
+    def packed(self) -> bool:
+        """True when the string is stored dense (k-bit PackedText)."""
+        return isinstance(self.s_text, packing_mod.PackedText)
+
+    @property
+    def s_bits(self) -> int:
+        """Stored bits per symbol (8 on the byte path)."""
+        return self.s_text.bits if self.packed else 8
+
+    @property
+    def s_padded(self) -> jax.Array:
+        """The terminal-padded byte string (byte-path indexes only; packed
+        indexes read through :meth:`read_symbols` / the probe kernels)."""
+        if self.packed:
+            raise AttributeError(
+                "this DeviceIndex stores the string dense-packed; use "
+                "s_text / read_symbols / string_codes")
+        return self.s_text
+
+    @property
+    def string_nbytes(self) -> int:
+        """Bytes the served string representation occupies."""
+        return (self.s_text.nbytes if self.packed
+                else int(self.s_text.shape[0]))
+
+    def read_symbols(self, pos, k: int) -> jax.Array:
+        """(B, k) int32 symbol codes starting at each position (device);
+        representation-independent (dense storage decodes in-register)."""
+        pos = jnp.asarray(pos, jnp.int32)
+        if self.packed:
+            return packing_mod.gather_symbols_dense(self.s_text, pos, k)
+        idx = pos[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+        idx = jnp.minimum(idx, self.s_text.shape[0] - 1)
+        return jnp.take(self.s_text, idx, axis=0).astype(jnp.int32)
+
+    def string_codes(self) -> np.ndarray:
+        """The indexed string back as uint8 codes (terminal included) —
+        ``n_leaves`` symbols, whatever the storage representation."""
+        if self.packed:
+            return packing_mod.unpack_text(self.s_text, n=self.n_leaves)
+        return np.asarray(self.s_text)[: self.n_leaves]
+
     # ---- construction -----------------------------------------------------
 
     @classmethod
     def from_index(cls, index, *, route_cap: int = 1 << 18,
-                   max_pattern_len: int = 512) -> "DeviceIndex":
+                   max_pattern_len: int = 512,
+                   packing: str = "auto") -> "DeviceIndex":
         """Flatten ``index`` (a SuffixTreeIndex) into device arrays.
 
         ``route_cap`` bounds the dense routing table (cells <= route_cap);
-        ``max_pattern_len`` fixes how far past |S| gathers may read.
+        ``max_pattern_len`` fixes how far past |S| gathers may read;
+        ``packing`` picks the served string representation
+        (auto | dense | bytes — ``auto`` stores DNA at 2 and protein
+        classes at 4 bits per symbol).
         """
         prefixes = sorted(index.subtrees)
         if not prefixes:
@@ -154,12 +212,14 @@ class DeviceIndex:
         return cls.from_prepare(alphabet=index.alphabet, s=np.asarray(index.s),
                                 prefixes=prefixes, freqs=freqs, ell=ell,
                                 route_cap=route_cap,
-                                max_pattern_len=max_pattern_len)
+                                max_pattern_len=max_pattern_len,
+                                packing=packing)
 
     @classmethod
     def from_prepare(cls, *, alphabet, s: np.ndarray, prefixes, freqs,
                      ell, route_cap: int = 1 << 18,
-                     max_pattern_len: int = 512) -> "DeviceIndex":
+                     max_pattern_len: int = 512,
+                     packing: str = "auto") -> "DeviceIndex":
         """Assemble directly from construction output — no SubTree dict.
 
         ``prefixes``: sorted (lexicographic) prefix tuples; ``freqs``: the
@@ -208,13 +268,17 @@ class DeviceIndex:
         n_iter = int(np.ceil(np.log2(total + 1))) + 1
         pows = (base ** np.arange(k_route - 1, -1, -1)).astype(np.int32)
         spans = (base ** (k_route - np.arange(k_route + 1)) - 1).astype(np.int32)
-        s_padded = alphabet.pad_string(s, extra=max_pattern_len + 8)
+        if packing_mod.resolve_dense(packing, alphabet):
+            s_text = packing_mod.pack_text(np.asarray(s), alphabet,
+                                           extra=max_pattern_len + 8)
+        else:
+            s_text = jnp.asarray(alphabet.pad_string(s, extra=max_pattern_len + 8))
         return cls(
             base=base,
             k_route=k_route,
             n_iter=n_iter,
             max_pattern_len=max_pattern_len,
-            s_padded=jnp.asarray(s_padded),
+            s_text=s_text,
             ell=jnp.asarray(ell),  # no-op for a device array from the batched engine
             ell_host=np.asarray(ell),
             sub_off=jnp.asarray(offs),
@@ -232,13 +296,24 @@ class DeviceIndex:
     # (query_serve / analytics_serve) can start without re-building and
     # re-flattening the index.  AnalyticsEngine reuses the blob helpers to
     # store its LCP array alongside the same fields in one file.
+    #
+    # Two string encodings coexist: byte-path saves keep the ORIGINAL
+    # 4-entry-meta + ``s_padded`` layout (so pre-packing archives load
+    # unchanged and byte saves stay readable by older code); dense saves
+    # write ``s_words`` (uint32) and extend ``meta`` with
+    # ``[s_bits, n_real]``.
 
-    _BLOB_FIELDS = ("s_padded", "ell", "sub_off", "sub_freq", "sub_prefix",
+    _BLOB_FIELDS = ("ell", "sub_off", "sub_freq", "sub_prefix",
                     "sub_plen", "win_lo", "win_hi", "pows", "spans")
 
     def to_blobs(self) -> dict[str, np.ndarray]:
-        blobs = {"meta": np.array([self.base, self.k_route, self.n_iter,
-                                   self.max_pattern_len], np.int64)}
+        meta = [self.base, self.k_route, self.n_iter, self.max_pattern_len]
+        if self.packed:
+            meta += [self.s_text.bits, int(self.s_text.n_real)]
+            blobs = {"s_words": np.asarray(self.s_text.words)}
+        else:
+            blobs = {"s_padded": np.asarray(self.s_text)}
+        blobs["meta"] = np.array(meta, np.int64)
         for name in self._BLOB_FIELDS:
             blobs[name] = np.asarray(getattr(self, name))
         return blobs
@@ -247,9 +322,17 @@ class DeviceIndex:
     def from_blobs(cls, data) -> "DeviceIndex":
         meta = np.asarray(data["meta"])
         ell = np.asarray(data["ell"], np.int32)
+        if "s_words" in data:
+            s_text = packing_mod.PackedText(
+                words=jnp.asarray(np.asarray(data["s_words"], np.uint32)),
+                n_real=jnp.asarray(int(meta[5]), jnp.int32),
+                bits=int(meta[4]), terminal=int(meta[0]) - 1)
+        else:  # byte-format archive (including every pre-packing save)
+            s_text = jnp.asarray(data["s_padded"])
         fields = {name: jnp.asarray(data[name]) for name in cls._BLOB_FIELDS}
         return cls(base=int(meta[0]), k_route=int(meta[1]), n_iter=int(meta[2]),
-                   max_pattern_len=int(meta[3]), ell_host=ell, **fields)
+                   max_pattern_len=int(meta[3]), s_text=s_text, ell_host=ell,
+                   **fields)
 
     def save(self, path: str) -> None:
         """Persist the flattened index (npz); ``load`` restores it exactly."""
@@ -289,7 +372,7 @@ class DeviceIndex:
         """Jitted core: (B, m_pad)/(B,)/(B, k_route) → (start, count) slices
         of ``ell`` (device arrays; matches are ``ell[start:start+count]``)."""
         return _find_batch_ranges(
-            self.s_padded, self.ell, self.win_lo, self.win_hi,
+            self.s_text, self.ell, self.win_lo, self.win_hi,
             self.pows, self.spans,
             jnp.asarray(patterns, jnp.int32), jnp.asarray(lengths, jnp.int32),
             jnp.asarray(route_syms, jnp.int32),

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tiles import stage_tiles
+from repro.kernels.tiles import default_interpret, stage_tiles
 
 
 def _kernel(s_lo_ref, s_hi_ref, out_ref, *, tile: int, k: int, base: int, n: int, nbins: int):
@@ -50,13 +50,15 @@ def kmer_histogram(
     base: int,
     *,
     tile: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Counts of every base-``base`` k-mer over windows starting at 0..n-1.
 
     ``s_padded`` must be terminal-padded to >= n + k - 1 symbols.  Returns
     int32[base**k].  ``base**k`` must stay VMEM-resident (<= 2**16 bins).
+    ``interpret=None`` compiles on TPU and interprets elsewhere.
     """
+    interpret = default_interpret(interpret)
     nbins = base**k
     assert nbins <= (1 << 16), "histogram too wide for VMEM residency"
     assert k <= tile

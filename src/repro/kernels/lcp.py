@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import default_interpret
+
 
 def _kernel(a_ref, b_ref, lcp_ref, c1_ref, c2_ref, *, w: int, n_words: int, blk: int):
     a = a_ref[...]
@@ -48,10 +50,12 @@ def lcp_pairs(
     w: int,
     *,
     blk: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Row-wise LCP of packed key rows.  a, b: (F, W) int32; returns
-    (lcp, c1, c2) int32[F] (fully-equal rows get lcp == w, c1 == c2 == 0)."""
+    (lcp, c1, c2) int32[F] (fully-equal rows get lcp == w, c1 == c2 == 0).
+    ``interpret=None`` compiles on TPU and interprets elsewhere."""
+    interpret = default_interpret(interpret)
     f, n_words = a.shape
     assert b.shape == (f, n_words) and n_words * 4 >= w
     blk = min(blk, f)

@@ -8,6 +8,12 @@ the default for speed.  Selection:
                                  mode off-TPU);
 * ``REPRO_KERNELS=jnp`` (default on CPU) — pure-jnp reference path;
 * on TPU platforms the Pallas path is the default.
+
+String-representation dispatch: every wrapper that reads the string
+accepts EITHER the terminal-padded byte array (uint8 codes) OR a dense
+k-bit :class:`repro.core.packing.PackedText`; the packed variants emit
+byte-identical sort keys / verdicts (see :mod:`repro.kernels.packed_gather`),
+so callers switch representation without touching results.
 """
 
 from __future__ import annotations
@@ -16,9 +22,14 @@ import os
 
 import jax
 
+from repro.core.packing import PackedText
 from repro.kernels import ref as _ref
 from repro.kernels.kmer_histogram import kmer_histogram as _kmer_pallas
 from repro.kernels.lcp import lcp_pairs as _lcp_pallas
+from repro.kernels.packed_gather import (
+    pattern_probe_packed as _packed_probe_pallas,
+    range_gather_packed as _packed_gather_pallas,
+)
 from repro.kernels.pattern_probe import pattern_probe as _probe_pallas
 from repro.kernels.range_gather import range_gather_pack as _gather_pallas
 from repro.kernels.suffix_lcp import suffix_lcp_pairs as _suffix_lcp_pallas
@@ -37,10 +48,24 @@ def _use_pallas() -> bool:
     return _on_tpu()
 
 
-def range_gather_pack(s_padded, offs, w: int):
-    if _use_pallas():
-        return _gather_pallas(s_padded, offs, w, interpret=not _on_tpu())
-    return _ref.range_gather_pack_ref(s_padded, offs, w)
+def range_gather_impl(use_pallas: bool):
+    """Gather-and-pack implementation for a STATIC ``use_pallas`` —
+    returns ``fn(s_text, offs, w) -> (F, w//4) int32`` byte sort keys,
+    dispatching on the string representation inside the trace."""
+    def fn(s_text, offs, w: int):
+        if isinstance(s_text, PackedText):
+            if use_pallas:
+                return _packed_gather_pallas(s_text, offs, w,
+                                             interpret=not _on_tpu())
+            return _ref.range_gather_packed_ref(s_text, offs, w)
+        if use_pallas:
+            return _gather_pallas(s_text, offs, w, interpret=not _on_tpu())
+        return _ref.range_gather_pack_ref(s_text, offs, w)
+    return fn
+
+
+def range_gather_pack(s_text, offs, w: int):
+    return range_gather_impl(_use_pallas())(s_text, offs, w)
 
 
 def kmer_histogram(s_padded, n: int, k: int, base: int):
@@ -49,11 +74,18 @@ def kmer_histogram(s_padded, n: int, k: int, base: int):
     return _ref.kmer_histogram_ref(s_padded, n, k, base)
 
 
-def suffix_lcp_pairs(s_padded, pos_a, pos_b, w: int):
+def suffix_lcp_pairs(s_text, pos_a, pos_b, w: int):
+    if isinstance(s_text, PackedText):
+        # packed storage: two byte-key gathers (Pallas when enabled) feed
+        # the shared row-LCP — identical to the byte kernel's symbol scan.
+        gather = range_gather_impl(_use_pallas())
+        a = gather(s_text, pos_a, w)
+        b = gather(s_text, pos_b, w)
+        return lcp_pairs(a, b, w)[0]
     if _use_pallas():
-        return _suffix_lcp_pallas(s_padded, pos_a, pos_b, w,
+        return _suffix_lcp_pallas(s_text, pos_a, pos_b, w,
                                   interpret=not _on_tpu())
-    return _ref.suffix_lcp_pairs_ref(s_padded, pos_a, pos_b, w)
+    return _ref.suffix_lcp_pairs_ref(s_text, pos_a, pos_b, w)
 
 
 def lcp_pairs(a, b, w: int):
@@ -64,13 +96,23 @@ def lcp_pairs(a, b, w: int):
 
 def pattern_probe_impl(use_pallas: bool):
     """Probe implementation for a STATIC ``use_pallas`` — jitted callers
-    (repro.core.query) resolve the env var once outside the trace so
-    flipping REPRO_KERNELS between calls cannot hit a stale trace."""
-    if use_pallas:
-        return lambda s, p, pw, mw: _probe_pallas(s, p, pw, mw,
-                                                  interpret=not _on_tpu())
-    return _ref.pattern_probe_ref
+    (repro.core.query / analytics) resolve the env var once outside the
+    trace so flipping REPRO_KERNELS between calls cannot hit a stale
+    trace; the byte-vs-packed branch dispatches on the s_text type."""
+    def fn(s_text, pos, pat_words, mask_words):
+        if isinstance(s_text, PackedText):
+            if use_pallas:
+                return _packed_probe_pallas(s_text, pos, pat_words,
+                                            mask_words,
+                                            interpret=not _on_tpu())
+            return _ref.pattern_probe_packed_ref(s_text, pos, pat_words,
+                                                 mask_words)
+        if use_pallas:
+            return _probe_pallas(s_text, pos, pat_words, mask_words,
+                                 interpret=not _on_tpu())
+        return _ref.pattern_probe_ref(s_text, pos, pat_words, mask_words)
+    return fn
 
 
-def pattern_probe(s_padded, pos, pat_words, mask_words):
-    return pattern_probe_impl(_use_pallas())(s_padded, pos, pat_words, mask_words)
+def pattern_probe(s_text, pos, pat_words, mask_words):
+    return pattern_probe_impl(_use_pallas())(s_text, pos, pat_words, mask_words)

@@ -1,0 +1,190 @@
+"""Pallas TPU kernels over the DENSE k-bit packed string (paper §6.1).
+
+Two kernels share one in-kernel dense-read recipe:
+
+* :func:`range_gather_packed` — the packed realization of
+  :mod:`repro.kernels.range_gather`: gather ``w`` symbols per offset from
+  the ``bits``-bit packed word stream and emit the SAME big-endian
+  byte-per-symbol int32 sort keys the unpacked path produces, so every
+  downstream lexsort / LCP runs unchanged while the HBM string read
+  shrinks by ``8/bits`` (4x for DNA).
+* :func:`pattern_probe_packed` — the packed probe-gather-compare step of
+  the batched query binary search (:mod:`repro.kernels.pattern_probe`).
+
+Dense-read recipe: offsets are scalar-prefetched; each grid step DMAs the
+``(2, tile)`` uint32-word window containing the read (a read may straddle
+one tile boundary), slices the ``nw + 1`` words covering the symbols,
+shift-aligns across the sub-word bit offset (``off % syms_per_word``),
+expands the ``bits``-bit fields to one byte per symbol, substitutes the
+virtual terminal for positions ``>= n_real`` (dense storage holds only
+REAL symbols — see :class:`repro.core.packing.PackedText`), and repacks
+big-endian 4-symbols/int32.
+
+The pure-jnp oracles are :func:`repro.core.packing.gather_pack_dense` /
+``repro.kernels.ref.pattern_probe_packed_ref``; ``tests/test_packed.py``
+asserts exact equality in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import PackedText
+from repro.kernels.tiles import default_interpret as _default_interpret, stage_tiles
+
+
+def _dense_read(off, n_real, s_lo_ref, s_hi_ref, *, tile: int, w: int,
+                bits: int, terminal: int):
+    """Read ``w`` byte-expanded symbols at ``off`` from a 2-tile window."""
+    spw = 32 // bits
+    nw = -(-w // spw)
+    word0 = off // spw
+    local = word0 - (word0 // tile) * tile  # word offset within the window
+    flat = jnp.concatenate([s_lo_ref[...], s_hi_ref[...]], axis=1).reshape(2 * tile)
+    u = jax.lax.dynamic_slice(flat, (local,), (nw + 1,)).astype(jnp.uint32)
+    sh = (bits * (off - word0 * spw)).astype(jnp.uint32)
+    hi = u[:-1] << sh
+    # funnel low half: (x >> 1) >> (31 - sh) == x >> (32 - sh) for sh > 0
+    # and 0 at sh == 0, keeping every shift amount in-range select-free
+    lo = (u[1:] >> 1) >> (31 - sh)
+    aligned = hi | lo  # (nw,) each holding spw big-endian symbols
+    shifts = 32 - bits * (jax.lax.iota(jnp.uint32, spw) + 1)
+    sym = (aligned[:, None] >> shifts[None, :]) & jnp.uint32((1 << bits) - 1)
+    sym = sym.reshape(nw * spw)[:w].astype(jnp.int32)
+    past_end = off + jax.lax.iota(jnp.int32, w) >= n_real
+    return jnp.where(past_end, jnp.int32(terminal), sym)
+
+
+def _repack_bytes(sym, w: int):
+    grp = sym.reshape(w // 4, 4)
+    # unrolled big-endian pack (pallas kernels cannot capture array consts)
+    return (grp[:, 0] * (1 << 24) + grp[:, 1] * (1 << 16)
+            + grp[:, 2] * (1 << 8) + grp[:, 3])
+
+
+def _gather_kernel(offs_ref, nr_ref, s_lo_ref, s_hi_ref, out_ref,
+                   *, tile: int, w: int, bits: int, terminal: int):
+    i = pl.program_id(0)
+    sym = _dense_read(offs_ref[i], nr_ref[0], s_lo_ref, s_hi_ref,
+                      tile=tile, w=w, bits=bits, terminal=terminal)
+    out_ref[0, :] = _repack_bytes(sym, w)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile", "interpret"))
+def range_gather_packed(
+    pt: PackedText,
+    offs: jax.Array,
+    w: int,
+    *,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Gather ``w`` symbols per offset from dense storage; emit byte keys.
+
+    pt: the dense-packed string (its word tail must cover every read —
+    the ``extra`` contract of :func:`repro.core.packing.pack_text`);
+    offs: (F,) int32.  Returns (F, w//4) int32, bit-identical to
+    :func:`repro.kernels.range_gather.range_gather_pack` on the
+    terminal-padded byte string.
+    """
+    assert w % 4 == 0, w
+    spw = pt.syms_per_word
+    nw = -(-w // spw)
+    assert nw + 1 <= tile, (w, pt.bits, tile)
+    f = offs.shape[0]
+    s_rows, _ = stage_tiles(pt.words, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(f,),
+        in_specs=[
+            # the word window may straddle one tile boundary: fetch tiles
+            # r and r+1 as two (1, tile) blocks (halo row exists by staging)
+            pl.BlockSpec((1, tile),
+                         lambda i, offs_ref, nr_ref: ((offs_ref[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, offs_ref, nr_ref: ((offs_ref[i] // spw) // tile + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w // 4), lambda i, offs_ref, nr_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, tile=tile, w=w, bits=pt.bits,
+                          terminal=pt.terminal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((f, w // 4), jnp.int32),
+        interpret=_default_interpret(interpret),
+    )(offs.astype(jnp.int32), jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
+      s_rows, s_rows)
+
+
+def _probe_kernel(pos_ref, nr_ref, s_lo_ref, s_hi_ref, pat_ref, mask_ref,
+                  out_ref, *, tile: int, w: int, bits: int, terminal: int):
+    i = pl.program_id(0)
+    sym = _dense_read(pos_ref[i], nr_ref[0], s_lo_ref, s_hi_ref,
+                      tile=tile, w=w, bits=bits, terminal=terminal)
+    words = _repack_bytes(sym, w)
+    pat = pat_ref[0, :]
+    sw = words & mask_ref[0, :]
+    neq = sw != pat
+    n_words = w // 4
+    iota = jax.lax.iota(jnp.int32, n_words)
+    first = jnp.min(jnp.where(neq, iota, n_words))
+    sel = iota == first
+    sign = jnp.int32(-(1 << 31))
+    a = jnp.sum(jnp.where(sel, sw, 0)) ^ sign
+    b = jnp.sum(jnp.where(sel, pat, 0)) ^ sign
+    out_ref[0, 0] = jnp.where(jnp.any(neq), jnp.where(a < b, -1, 1), 0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def pattern_probe_packed(
+    pt: PackedText,
+    pos: jax.Array,
+    pat_words: jax.Array,
+    mask_words: jax.Array,
+    *,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed-storage probe: compare each suffix against its pattern row.
+
+    pos: (B,) int32 suffix positions; pat_words/mask_words: (B, W) int32
+    byte-packed + masked pattern rows (the same host-side packing the byte
+    probe uses).  Returns int32[B] in {-1, 0, +1}; bit-identical to
+    :func:`repro.kernels.pattern_probe.pattern_probe` on the byte string.
+    """
+    b, n_words = pat_words.shape
+    w = n_words * 4
+    assert mask_words.shape == (b, n_words) and pos.shape == (b,)
+    spw = pt.syms_per_word
+    nw = -(-w // spw)
+    assert nw + 1 <= tile, (w, pt.bits, tile)
+    s_rows, _ = stage_tiles(pt.words, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, nr_ref: ((pos_ref[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, nr_ref: ((pos_ref[i] // spw) // tile + 1, 0)),
+            pl.BlockSpec((1, n_words), lambda i, pos_ref, nr_ref: (i, 0)),
+            pl.BlockSpec((1, n_words), lambda i, pos_ref, nr_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, pos_ref, nr_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_probe_kernel, tile=tile, w=w, bits=pt.bits,
+                          terminal=pt.terminal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=_default_interpret(interpret),
+    )(pos.astype(jnp.int32), jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
+      s_rows, s_rows, pat_words, mask_words)
+    return out[:, 0]

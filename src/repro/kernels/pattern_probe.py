@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiles import stage_tiles
+from repro.kernels.tiles import default_interpret, stage_tiles
 
 
 def _kernel(pos_ref, s_lo_ref, s_hi_ref, pat_ref, mask_ref, out_ref,
@@ -61,14 +61,16 @@ def pattern_probe(
     mask_words: jax.Array,
     *,
     tile: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Compare the suffix at each probe position against its pattern row.
 
     s_padded: (n,) integer codes (terminal-padded past every read);
     pos: (B,) int32; pat_words/mask_words: (B, W) int32 packed+masked.
     Returns int32[B] in {-1, 0, +1} (0 == suffix starts with pattern).
+    ``interpret=None`` compiles on TPU and interprets elsewhere.
     """
+    interpret = default_interpret(interpret)
     b, n_words = pat_words.shape
     w = n_words * 4
     assert mask_words.shape == (b, n_words) and pos.shape == (b,)

@@ -24,7 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import PACK_WEIGHTS
-from repro.kernels.tiles import stage_tiles
+from repro.kernels.tiles import default_interpret, stage_tiles
 
 
 def _kernel(offs_ref, s_lo_ref, s_hi_ref, out_ref, *, tile: int, w: int):
@@ -47,12 +47,14 @@ def range_gather_pack(
     w: int,
     *,
     tile: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Gather ``w`` symbols per offset from S (terminal-padded) and pack.
 
     s_padded: (n,) integer codes;  offs: (F,) int32;  returns (F, w//4) int32.
+    ``interpret=None`` compiles on TPU and interprets elsewhere.
     """
+    interpret = default_interpret(interpret)
     assert w % 4 == 0 and w <= tile, (w, tile)
     f = offs.shape[0]
     s_rows, _ = stage_tiles(s_padded, tile)

@@ -12,10 +12,23 @@ import jax.numpy as jnp
 
 from repro.core.packing import (  # noqa: F401  (canonical shared impls)
     PACK_WEIGHTS,
+    PackedText,
     flip_sign,
     gather_pack as range_gather_pack_ref,
+    gather_pack_dense as range_gather_packed_ref,
     pack_words as pack_words_ref,
 )
+
+
+def probe_compare_ref(sw: jax.Array, pat_words: jax.Array) -> jax.Array:
+    """Sign of masked suffix key rows vs pattern rows (shared probe tail)."""
+    neq = sw != pat_words
+    any_neq = jnp.any(neq, axis=1)
+    first = jnp.argmax(neq, axis=1)
+    a = jnp.take_along_axis(sw, first[:, None], axis=1)[:, 0]
+    b = jnp.take_along_axis(pat_words, first[:, None], axis=1)[:, 0]
+    lt = flip_sign(a) < flip_sign(b)  # unsigned compare (byte alphabet safe)
+    return jnp.where(any_neq, jnp.where(lt, -1, 1), 0).astype(jnp.int32)
 
 
 def pattern_probe_ref(s_padded: jax.Array, pos: jax.Array,
@@ -30,13 +43,19 @@ def pattern_probe_ref(s_padded: jax.Array, pos: jax.Array,
     """
     w = pat_words.shape[1] * 4
     sw = range_gather_pack_ref(s_padded, pos, w) & mask_words
-    neq = sw != pat_words
-    any_neq = jnp.any(neq, axis=1)
-    first = jnp.argmax(neq, axis=1)
-    a = jnp.take_along_axis(sw, first[:, None], axis=1)[:, 0]
-    b = jnp.take_along_axis(pat_words, first[:, None], axis=1)[:, 0]
-    lt = flip_sign(a) < flip_sign(b)  # unsigned compare (byte alphabet safe)
-    return jnp.where(any_neq, jnp.where(lt, -1, 1), 0).astype(jnp.int32)
+    return probe_compare_ref(sw, pat_words)
+
+
+def pattern_probe_packed_ref(pt: PackedText, pos: jax.Array,
+                             pat_words: jax.Array,
+                             mask_words: jax.Array) -> jax.Array:
+    """:func:`pattern_probe_ref` reading the dense k-bit packed string.
+
+    The gather-and-repack emits byte-identical key words, so the compare
+    tail is shared and results match the byte path bit-for-bit."""
+    w = pat_words.shape[1] * 4
+    sw = range_gather_packed_ref(pt, pos, w) & mask_words
+    return probe_compare_ref(sw, pat_words)
 
 
 def kmer_histogram_ref(s: jax.Array, n: int, k: int, base: int) -> jax.Array:
@@ -66,11 +85,13 @@ def suffix_lcp_pairs_ref(s_padded: jax.Array, pos_a: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# 2-bit packed path (paper §6.1: DNA symbols encoded in 2 bits).  The string
-# is stored as uint32 words of 16 big-endian 2-bit symbols; gathers shift-
-# align across word boundaries and comparisons run on 4x fewer key words.
-# Terminal handling: windows overlapping the final 16 symbols fall back to
-# the unpacked path (host routes those few leaves) — see DESIGN.md §Perf.
+# Literal §6.1 2-bit DNA path (historical reference): dense uint32 words of
+# 16 big-endian 2-bit symbols compared as 4x-narrower DENSE keys.  The
+# production pipeline instead generalizes density to the alphabet and
+# repacks gathers into the common byte-key currency (core.packing.PackedText
+# + kernels.packed_gather), which keeps every sort/LCP/probe bit-identical
+# across representations; these functions remain as the §6.1 worked form
+# and its property tests (tests/test_flash_and_packed.py).
 # ---------------------------------------------------------------------------
 
 SYMS_PER_WORD = 16

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiles import stage_tiles
+from repro.kernels.tiles import default_interpret, stage_tiles
 
 
 def _kernel(pa_ref, pb_ref, a_lo_ref, a_hi_ref, b_lo_ref, b_hi_ref, out_ref,
@@ -50,14 +50,16 @@ def suffix_lcp_pairs(
     w: int,
     *,
     tile: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """LCP in symbols of the suffixes at ``pos_a[i]`` and ``pos_b[i]``.
 
     s_padded: (n,) integer codes (terminal-padded so ``pos + w`` reads stay
     in meaningful padding); pos_a, pos_b: (B,) int32.  Returns int32[B],
     capped at ``w`` (pairs equal through ``w`` symbols report exactly ``w``).
+    ``interpret=None`` compiles on TPU and interprets elsewhere.
     """
+    interpret = default_interpret(interpret)
     b = pos_a.shape[0]
     assert pos_b.shape == (b,)
     assert w % 4 == 0

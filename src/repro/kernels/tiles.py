@@ -15,6 +15,13 @@ import jax
 import jax.numpy as jnp
 
 
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret=None`` default: compiled on TPU,
+    interpreter elsewhere (a hard-coded True would leave real TPU runs
+    interpreting forever).  One shared policy site for every kernel."""
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
 def stage_tiles(s_padded: jax.Array, tile: int) -> tuple[jax.Array, int]:
     """Reshape S into ``(n_tiles, tile)`` int32 rows with one halo row.
 

@@ -198,14 +198,24 @@ def build_era_cell(mesh, *, w: int = ERA_RANGE_W, n: int = ERA_GENOME_N,
                    f_m: int = ERA_F_M, packed: bool = False):
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.core.packing import PackedText
     from repro.core.prepare import PrepareState
     from repro.launch.era_run import era_prepare_batch
 
     g = mesh.size  # one virtual tree per chip
     all_axes = tuple(mesh.axis_names)
-    s_dtype = jnp.int32 if packed else jnp.uint8
-    s_len = n // 16 if packed else n  # 2-bit packing: 16 symbols / int32
-    s_abs = jax.ShapeDtypeStruct((s_len,), s_dtype)
+    rep = NamedSharding(mesh, P())
+    if packed:
+        # dense 2-bit DNA storage: 16 symbols / uint32 word — the
+        # replicated string costs n/4 bytes of HBM per chip, not n
+        s_abs = PackedText(
+            words=jax.ShapeDtypeStruct((n // 16,), jnp.uint32),
+            n_real=jax.ShapeDtypeStruct((), jnp.int32),
+            bits=2, terminal=4)
+        s_shard = PackedText(words=rep, n_real=rep, bits=2, terminal=4)
+    else:
+        s_abs = jax.ShapeDtypeStruct((n,), jnp.uint8)
+        s_shard = rep
     st_abs = PrepareState(
         L=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
         start=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
@@ -214,15 +224,14 @@ def build_era_cell(mesh, *, w: int = ERA_RANGE_W, n: int = ERA_GENOME_N,
         b_c1=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
         b_c2=jax.ShapeDtypeStruct((g, f_m), jnp.int32),
     )
-    rep = NamedSharding(mesh, P())
     by_group = NamedSharding(mesh, P(all_axes, None))
     st_shard = PrepareState(*([by_group] * 6))
 
     def fn(s_padded, states):
-        return era_prepare_batch(s_padded, states, w=w, packed=packed)
+        return era_prepare_batch(s_padded, states, w=w)
 
     args = (s_abs, st_abs)
-    in_sh = (rep, st_shard)
+    in_sh = (s_shard, st_shard)
     out_sh = (st_shard, NamedSharding(mesh, P(all_axes)))
     return fn, args, in_sh, out_sh, (1,)
 

@@ -46,22 +46,23 @@ from repro.runtime.scheduler import WorkQueue
 # shard_map-able batched prepare step (for the dry-run / real pods)
 # ---------------------------------------------------------------------------
 
-def era_prepare_batch(s_padded: jax.Array, states: PrepareState, *, w: int,
-                      packed: bool = False):
+def era_prepare_batch(s_padded, states: PrepareState, *, w: int):
     """One elastic-range iteration for a batch of virtual trees.
 
     states: PrepareState with leading group-batch dim (G, F).  The caller
     shard_maps / shards G over (pod, data, model) — groups are independent,
     so the only communication is the replicated string read.
 
-    ``packed``: 2-bit packed string (paper §6.1) — s_padded is uint32 words
-    of 16 symbols; 4x less gather traffic and 4x fewer sort key words.
+    ``s_padded`` is either the terminal-padded byte string or a dense
+    k-bit :class:`repro.core.packing.PackedText` (paper §6.1: 2-bit DNA —
+    ``8/bits``x less replicated string HBM and gather traffic); the
+    representation dispatches inside the step and results are identical.
 
     The implementation is the shared batched construction engine
     (:func:`repro.core.prepare.prepare_step_batch`) — the same step the
     default ``EraIndexer.build`` pipeline drives to convergence.
     """
-    return prepare_step_batch(s_padded, states, w=w, packed=packed)
+    return prepare_step_batch(s_padded, states, w=w)
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +103,7 @@ def build_distributed(
     report = BuildReport(VerticalStats(), PrepareStats())
     groups = indexer.partition(s, report)
     capacity = indexer._capacity(groups)
-    s_padded = indexer._pad(s)
+    s_padded = indexer._device_text(s)  # dense-packed for DNA (EraConfig.packing)
 
     queue = WorkQueue(checkpoint_path=checkpoint_path)
     queue.add_tasks([g.total_freq for g in groups], payloads=groups)

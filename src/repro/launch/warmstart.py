@@ -52,7 +52,7 @@ def load_or_build(index_path: str | None, dataset_name: str, n: int,
     if path and os.path.exists(path):
         obj = load(path)
         dev = dev_of(obj)
-        s = np.asarray(dev.s_padded)[: dev.n_leaves]  # n_leaves == |S|
+        s = dev.string_codes()  # n_leaves symbols == |S|, any representation
         alphabet = dataset(dataset_name, 1, seed=seed)[1]
         if alphabet.base != dev.base:
             raise ValueError(

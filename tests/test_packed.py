@@ -1,0 +1,309 @@
+"""Dense k-bit text pipeline: packed ↔ byte bit-identity end-to-end.
+
+The tentpole invariant: the dense-packed string representation (paper §6.1
+generalized per alphabet) must produce IDENTICAL sort keys, construction
+arrays, query results and analytics as the byte path — density only changes
+bytes moved.  These tests pin that invariant at every layer: the gather
+primitive, the Pallas kernels, construction, find_batch, matching
+statistics, and npz persistence (including legacy byte-format archives).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import packing
+from repro.core.alphabet import BYTE, DNA, PROTEIN, PROTEIN_CLASS
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.build import bucket_pad_widths, pad_width
+from repro.core.query import DeviceIndex
+from repro.kernels import ref as kref
+from repro.kernels.packed_gather import pattern_probe_packed, range_gather_packed
+
+ALPHAS = [DNA, PROTEIN_CLASS, PROTEIN, BYTE]
+
+
+def build_pair(alpha, n, *, mem, seed):
+    """(s, byte-packing index, dense-packing index) over one string."""
+    s = alpha.random_string(n, seed=seed)
+    mk = lambda mode: EraIndexer(alpha, EraConfig(
+        memory_bytes=mem, r_bytes=128, build_impl="none", packing=mode)).build(s)
+    return s, mk("bytes"), mk("dense")
+
+
+class TestDenseBits:
+    def test_alphabet_density_tiers(self):
+        assert DNA.dense_bits == 2
+        assert PROTEIN_CLASS.dense_bits == 4
+        assert PROTEIN.dense_bits == 8   # 20 symbols: byte fallback
+        assert BYTE.dense_bits == 8
+
+    @pytest.mark.parametrize("alpha", ALPHAS, ids=lambda a: a.name)
+    def test_pack_unpack_roundtrip(self, alpha):
+        s = alpha.random_string(777, seed=1)
+        pt = packing.pack_text(s, alpha, extra=64)
+        np.testing.assert_array_equal(packing.unpack_text(pt), s)
+        assert pt.nbytes * 8 >= len(s) * alpha.dense_bits
+
+    def test_pack_rejects_unterminated(self):
+        with pytest.raises(ValueError):
+            packing.pack_text(np.zeros(5, np.uint8), DNA)
+
+
+class TestGatherPackDense:
+    @pytest.mark.parametrize("alpha", ALPHAS, ids=lambda a: a.name)
+    @pytest.mark.parametrize("w", [4, 16, 64])
+    def test_matches_byte_gather(self, alpha, w):
+        """The invariant everything rests on: identical byte sort keys."""
+        rng = np.random.default_rng(w)
+        s = alpha.random_string(900, seed=9)
+        pt = packing.pack_text(s, alpha, extra=w + 8)
+        sp = alpha.pad_string(s, extra=w + 8)
+        offs = np.concatenate([
+            rng.integers(0, len(s), size=65),
+            [len(s) - 2, len(s) - 1, len(s), len(s) + 3],  # terminal tail
+        ]).astype(np.int32)
+        got = packing.gather_pack_dense(pt, jnp.asarray(offs), w)
+        want = packing.gather_pack(jnp.asarray(sp), jnp.asarray(offs), w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_key_order_is_lexicographic(self):
+        s = DNA.random_string(400, seed=2)
+        pt = packing.pack_text(s, DNA, extra=40)
+        rng = np.random.default_rng(3)
+        offs = rng.integers(0, len(s), size=50).astype(np.int32)
+        keys = np.asarray(packing.as_u32(
+            packing.gather_pack_dense(pt, jnp.asarray(offs), 32)))
+        sp = DNA.pad_string(s, extra=40)
+        for i in range(len(offs) - 1):
+            sa = tuple(sp[offs[i] : offs[i] + 32])
+            sb = tuple(sp[offs[i + 1] : offs[i + 1] + 32])
+            ka, kb = tuple(keys[i]), tuple(keys[i + 1])
+            assert (sa < sb) == (ka < kb) or sa == sb
+
+
+class TestPackedKernels:
+    @pytest.mark.parametrize("alpha,n,f,w,tile", [
+        (DNA, 300, 7, 4, 32), (DNA, 1000, 33, 16, 64),
+        (PROTEIN_CLASS, 800, 21, 32, 64), (BYTE, 500, 16, 8, 32),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_range_gather_packed_matches_ref(self, alpha, n, f, w, tile):
+        rng = np.random.default_rng(n + f)
+        s = alpha.random_string(n, seed=n)
+        pt = packing.pack_text(s, alpha, extra=w + 8)
+        offs = rng.integers(0, n, size=f).astype(np.int32)
+        got = range_gather_packed(pt, jnp.asarray(offs), w, tile=tile,
+                                  interpret=True)
+        want = kref.range_gather_packed_ref(pt, jnp.asarray(offs), w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_word_tile_boundary_straddle(self):
+        """Reads crossing the uint32-word tile boundary see both tiles."""
+        tile = 32  # words = 512 2-bit symbols per tile
+        s = DNA.random_string(3 * 32 * 16, seed=8)
+        pt = packing.pack_text(s, DNA, extra=72)
+        spw = pt.syms_per_word
+        offs = np.array([tile * spw - 1, tile * spw - 17, tile * spw,
+                         2 * tile * spw - 3], np.int32)
+        got = range_gather_packed(pt, jnp.asarray(offs), 64, tile=tile,
+                                  interpret=True)
+        want = kref.range_gather_packed_ref(pt, jnp.asarray(offs), 64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("alpha,n,b,m", [
+        (DNA, 400, 19, 4), (PROTEIN_CLASS, 700, 33, 8), (BYTE, 500, 16, 12),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_pattern_probe_packed_matches_byte_ref(self, alpha, n, b, m):
+        rng = np.random.default_rng(n + b)
+        s = alpha.random_string(n, seed=n)
+        pt = packing.pack_text(s, alpha, extra=32)
+        sp = alpha.pad_string(s, extra=32)
+        pos = rng.integers(0, n, size=b).astype(np.int32)
+        m_pad = -(-m // 4) * 4
+        lengths = rng.integers(1, m + 1, size=b)
+        sym = rng.integers(0, alpha.base, size=(b, m_pad)).astype(np.int32)
+        valid = np.arange(m_pad)[None, :] < lengths[:, None]
+        pat = kref.pack_words_ref(jnp.asarray(np.where(valid, sym, 0)))
+        mask = kref.pack_words_ref(jnp.asarray(np.where(valid, 0xFF, 0)))
+        got = pattern_probe_packed(pt, jnp.asarray(pos), pat, mask,
+                                   tile=32, interpret=True)
+        want = kref.pattern_probe_ref(jnp.asarray(sp), jnp.asarray(pos),
+                                      pat, mask)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestConstructionBitIdentity:
+    @pytest.mark.parametrize("alpha,n,mem", [
+        (DNA, 800, 2048), (PROTEIN_CLASS, 700, 4096), (PROTEIN, 600, 4096),
+        (BYTE, 500, 4096),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_construction_arrays_equal(self, alpha, n, mem):
+        """ell / b_off / b_c1 / b_c2 identical between dense and byte."""
+        _, idx_b, idx_d = build_pair(alpha, n, mem=mem, seed=n)
+        assert set(idx_b.subtrees) == set(idx_d.subtrees)
+        for p in idx_b.subtrees:
+            for field in ("ell", "b_off", "b_c1", "b_c2"):
+                np.testing.assert_array_equal(
+                    getattr(idx_b.subtrees[p], field),
+                    getattr(idx_d.subtrees[p], field),
+                    err_msg=f"{alpha.name} prefix={p} field={field}")
+
+    def test_serial_engine_dense(self):
+        """The paper-faithful serial engine reads dense storage too."""
+        alpha = DNA
+        s = alpha.random_string(500, seed=4)
+        mk = lambda mode: EraIndexer(alpha, EraConfig(
+            memory_bytes=2048, r_bytes=128, build_impl="none",
+            construction="serial", packing=mode)).build(s)
+        a, b = mk("bytes"), mk("dense")
+        for p in a.subtrees:
+            np.testing.assert_array_equal(a.subtrees[p].ell, b.subtrees[p].ell)
+            np.testing.assert_array_equal(a.subtrees[p].b_off, b.subtrees[p].b_off)
+
+
+class TestServingBitIdentity:
+    @pytest.mark.parametrize("alpha,n,mem", [
+        (DNA, 900, 2048), (PROTEIN_CLASS, 700, 4096), (BYTE, 500, 4096),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_find_batch_equal(self, alpha, n, mem):
+        s, idx_b, _ = build_pair(alpha, n, mem=mem, seed=n + 1)
+        dev_b = idx_b.to_device(packing="bytes")
+        dev_d = idx_b.to_device(packing="dense")
+        assert dev_d.packed and not dev_b.packed
+        rng = np.random.default_rng(5)
+        pats = [np.asarray(s[i : i + m]) for i, m in zip(
+            rng.integers(0, n - 20, 25), rng.integers(1, 17, 25))]
+        pats += [rng.integers(0, len(alpha.symbols), size=int(m)).astype(np.uint8)
+                 for m in rng.integers(1, 10, 8)]
+        for pd, pb, p in zip(dev_d.find_batch(pats), dev_b.find_batch(pats), pats):
+            np.testing.assert_array_equal(pd, pb)
+            np.testing.assert_array_equal(pd, idx_b.find(p))
+
+    def test_auto_packs_sub_byte_alphabets_only(self):
+        for alpha, expect in ((DNA, True), (PROTEIN_CLASS, True),
+                              (PROTEIN, False), (BYTE, False)):
+            s = alpha.random_string(300, seed=0)
+            dev = EraIndexer(alpha, EraConfig(
+                memory_bytes=4096, r_bytes=128,
+                build_impl="none")).build_device(s)
+            assert dev.packed == expect, alpha.name
+            if expect:
+                byte_equiv = len(alpha.pad_string(
+                    s, extra=dev.max_pattern_len + 8))
+                assert dev.string_nbytes <= \
+                    byte_equiv * alpha.dense_bits // 8 + 8
+
+    @pytest.mark.parametrize("alpha", [DNA, PROTEIN_CLASS],
+                             ids=lambda a: a.name)
+    def test_matching_stats_equal(self, alpha):
+        s, idx_b, _ = build_pair(alpha, 800, mem=4096, seed=13)
+        eng_b = idx_b.analytics(packing="bytes")
+        eng_d = idx_b.analytics(packing="dense")
+        assert eng_d.dev.packed
+        np.testing.assert_array_equal(eng_b.lcp_host, eng_d.lcp_host)
+        rng = np.random.default_rng(6)
+        q = np.concatenate([s[100:180],
+                            rng.integers(0, len(alpha.symbols),
+                                         size=60).astype(np.uint8)])
+        ms_b, wit_b = eng_b.matching_stats(q, window=48)
+        ms_d, wit_d = eng_d.matching_stats(q, window=48)
+        np.testing.assert_array_equal(ms_b, ms_d)
+        np.testing.assert_array_equal(wit_b, wit_d)
+
+    def test_read_symbols_and_string_codes(self):
+        s, idx_b, _ = build_pair(DNA, 400, mem=2048, seed=21)
+        dev = idx_b.to_device(packing="dense")
+        np.testing.assert_array_equal(dev.string_codes(), s)
+        pos = np.array([0, 5, len(s) - 3], np.int32)
+        got = np.asarray(dev.read_symbols(pos, 6))
+        sp = DNA.pad_string(s, extra=8)
+        want = np.stack([sp[p : p + 6] for p in pos]).astype(np.int32)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestPackedPersistence:
+    def test_packed_npz_round_trip(self, tmp_path):
+        s, idx_b, _ = build_pair(DNA, 600, mem=2048, seed=31)
+        dev = idx_b.to_device()  # auto -> dense for DNA
+        assert dev.packed
+        p = str(tmp_path / "dev_packed.npz")
+        dev.save(p)
+        dev2 = DeviceIndex.load(p)
+        assert dev2.packed and dev2.s_bits == dev.s_bits == 2
+        assert (dev2.base, dev2.k_route, dev2.n_iter, dev2.max_pattern_len) \
+            == (dev.base, dev.k_route, dev.n_iter, dev.max_pattern_len)
+        np.testing.assert_array_equal(np.asarray(dev2.s_text.words),
+                                      np.asarray(dev.s_text.words))
+        np.testing.assert_array_equal(dev2.string_codes(), s)
+        pats = [np.asarray(s[i : i + 8]) for i in (3, 77, 300)]
+        for a, b in zip(dev2.find_batch(pats), dev.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_byte_saves_keep_legacy_format_and_load(self, tmp_path):
+        """Byte-path archives must stay in the original blob layout so
+        pre-packing caches (and older readers) keep working."""
+        s, idx_b, _ = build_pair(DNA, 400, mem=2048, seed=33)
+        dev_b = idx_b.to_device(packing="bytes")
+        blobs = dev_b.to_blobs()
+        assert "s_padded" in blobs and "s_words" not in blobs
+        assert blobs["meta"].shape == (4,)  # the pre-packing meta layout
+        p = str(tmp_path / "dev_legacy.npz")
+        dev_b.save(p)
+        dev2 = DeviceIndex.load(p)
+        assert not dev2.packed
+        pats = [np.asarray(s[i : i + 6]) for i in (1, 50, 200)]
+        for a, b in zip(dev2.find_batch(pats), idx_b.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_analytics_engine_packed_round_trip(self, tmp_path):
+        from repro.core.analytics import AnalyticsEngine
+
+        s, idx_b, _ = build_pair(DNA, 500, mem=2048, seed=35)
+        eng = idx_b.analytics(packing="dense")
+        p = str(tmp_path / "eng_packed.npz")
+        eng.save(p)
+        eng2 = AnalyticsEngine.load(p)
+        assert eng2.dev.packed
+        np.testing.assert_array_equal(eng2.lcp_host, eng.lcp_host)
+        q = np.asarray(s[50:120])
+        ms, wit = eng.matching_stats(q, window=32)
+        ms2, wit2 = eng2.matching_stats(q, window=32)
+        np.testing.assert_array_equal(ms, ms2)
+        np.testing.assert_array_equal(wit, wit2)
+
+
+class TestBucketedNodeBuild:
+    def test_bucket_pad_widths_partition(self):
+        rng = np.random.default_rng(7)
+        freqs = np.concatenate([rng.integers(1, 9, 40),
+                                rng.integers(50, 300, 6), [4000]])
+        buckets = bucket_pad_widths(freqs)
+        assert 1 <= len(buckets) <= 3
+        seen = np.sort(np.concatenate([idx for _, idx in buckets]))
+        np.testing.assert_array_equal(seen, np.arange(len(freqs)))
+        widths = [w for w, _ in buckets]
+        assert widths == sorted(widths, reverse=True)
+        for w, idx in buckets:
+            assert w == pad_width(int(freqs[idx].max()))  # exact, no over-pad
+            assert all(pad_width(int(freqs[i])) <= w for i in idx)
+
+    def test_bucket_single_and_empty(self):
+        assert bucket_pad_widths([]) == []
+        (w, idx), = bucket_pad_widths([5, 5, 5])
+        assert w == pad_width(5) and list(idx) == [0, 1, 2]
+
+    def test_skewed_mix_builds_identical_trees(self):
+        """A skewed prefix mix exercises >= 2 buckets and must produce the
+        same trees as the serial per-prefix builder."""
+        from repro.core.build import nodes_to_intervals
+
+        s = DNA.random_string(1500, seed=41)
+        mk = lambda c: EraIndexer(DNA, EraConfig(
+            memory_bytes=8192, r_bytes=128, build_impl="numpy",
+            construction=c)).build(s)
+        ser, bat = mk("serial"), mk("batched")
+        freqs = [st.freq for _, st in sorted(bat.subtrees.items())]
+        assert len(bucket_pad_widths(freqs)) >= 2  # mix actually skewed
+        for p in ser.subtrees:
+            assert nodes_to_intervals(ser.subtrees[p].nodes) == \
+                nodes_to_intervals(bat.subtrees[p].nodes)
