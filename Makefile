@@ -1,0 +1,25 @@
+# Developer entry points.  PYTHONPATH=src is baked in so targets work from
+# a fresh checkout with no install step.
+
+PR ?= local
+PY := PYTHONPATH=src python
+
+.PHONY: test bench bench-smoke bench-check
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run
+
+# Record the per-PR perf trajectory: one smoke pass, rows written to
+# BENCH_$(PR).json at the repo root (commit it with the PR so the next
+# PR's regression check has a baseline).  Example: make bench-smoke PR=PR5
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke --json BENCH_$(PR).json
+
+# Compare a fresh smoke run against the newest committed BENCH_*.json:
+# warns on >20% throughput drops in the packed/query rows.
+bench-check:
+	$(PY) -m benchmarks.run --smoke --json bench-results.json
+	$(PY) -m benchmarks.check_regression --current bench-results.json

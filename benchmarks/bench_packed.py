@@ -10,6 +10,14 @@ path over the SAME random DNA string:
 * ``probe``   — the query binary-search inner step (``pattern_probe``
   family): B masked suffix-vs-pattern verdicts.
 
+PR 5 adds the WORD-COMPARE rows: the same primitives with dense uint32
+words as the comparison currency (no byte repack at all) —
+``gather_words`` (raw word sort keys), ``probe_words`` (k-bit pattern
+words vs shifted text words) and the ``suffix_lcp`` pair (byte-key
+repack vs XOR + count-leading-zeros).  Their speedups are measured
+against the PR-4 byte-repack packed path, the regression budget CI
+watches.
+
 Each row's derived column records the STRING bytes a row of the gather
 touches under each representation (``row_bytes``; the packed window is
 ``w*bits/8`` plus one uint32 halo) and the wall-clock speedup — the JSON
@@ -54,8 +62,10 @@ def run(quick: bool = True) -> None:
     gather = jax.jit(lambda st, o: kops.range_gather_impl(use_pallas)(st, o, W))
 
     def timed(fn, *args):
+        # best-of-9: single-digit repeats leave ±40% jitter on shared
+        # hosts, which drowns the row-vs-row speedups this suite reports
         return timeit(lambda: jax.block_until_ready(fn(*args)),
-                      repeats=5, warmup=1)
+                      repeats=9, warmup=2)
 
     # --- gather: F x W symbols -> byte sort keys ---------------------------
     t_byte = timed(gather, sp, offs)
@@ -70,8 +80,12 @@ def run(quick: bool = True) -> None:
          f"speedup={t_byte / max(t_packed, 1e-9):.2f}x")
 
     # --- probe: B masked suffix-vs-pattern verdicts ------------------------
+    # real-symbol patterns only (codes < terminal): the workload every
+    # probe variant serves — terminal-bearing patterns are degenerate and
+    # route to the byte fallback in production, so benchmarking them
+    # against the word row would compare different work
     m_pad = -(-PAT_LEN // 4) * 4
-    sym = rng.integers(0, 5, size=(F, m_pad)).astype(np.int32)
+    sym = rng.integers(0, 4, size=(F, m_pad)).astype(np.int32)
     lengths = rng.integers(1, PAT_LEN + 1, size=F)
     valid = np.arange(m_pad)[None, :] < lengths[:, None]
     pat = jnp.asarray(np.asarray(kref.pack_words_ref(
@@ -101,6 +115,56 @@ def run(quick: bool = True) -> None:
          f"byte_total_us={t_byte_gp * 1e6:.1f} "
          f"speedup={t_byte_gp / max(t_packed_gp, 1e-9):.2f}x "
          f"stored_bits={DNA.dense_bits} nominal_bytes_ratio={nominal:.0f}x")
+
+    # --- WORD-COMPARE rows: dense words as the comparison currency ---------
+    # speedups are vs the PR-4 byte-repack packed path above (the word
+    # path's baseline), not vs the unpacked byte string.
+    bits = pt.bits
+    spw = pt.syms_per_word
+
+    # gather_words: raw uint32 word sort keys, never spread back to bytes
+    gather_w = jax.jit(lambda st, o: kops.range_gather_words_impl(
+        use_pallas)(st, o, W))
+    t_words_g = timed(gather_w, pt, offs)
+    emit("packed/gather_words", t_words_g,
+         f"n={n} f={F} w={W} key_words={-(-W // spw)} "
+         f"vs_byte_keys={W // 4} "
+         f"speedup={t_packed / max(t_words_g, 1e-9):.2f}x")
+
+    # probe_words: k-bit pattern words vs shifted text words directly
+    pat_sym = jnp.asarray(np.where(valid, sym, 0))
+    pat_d = packing.pack_pattern_dense(pat_sym, bits, pt.terminal)
+    mask_d = packing.pack_dense(
+        jnp.asarray(np.where(valid, (1 << bits) - 1, 0)), bits)
+    len_arr = jnp.asarray(lengths.astype(np.int32))
+    probe_w = jax.jit(lambda st, p: kops.pattern_probe_words_impl(
+        use_pallas)(st, p, pat_d, mask_d, len_arr))
+    t_words_p = timed(probe_w, pt, pos)
+    emit("packed/probe_words", t_words_p,
+         f"n={n} b={F} m={m_pad} pat_words={pat_d.shape[1]} "
+         f"vs_byte_words={m_pad // 4} "
+         f"speedup={t_packed_p / max(t_words_p, 1e-9):.2f}x")
+
+    # suffix-pair LCP: byte-key repack + row-LCP (PR 4) vs first
+    # differing word + count-leading-zeros (PR 5)
+    pos_b2 = jnp.asarray(rng.integers(0, n, size=F).astype(np.int32))
+    gather = kops.range_gather_impl(use_pallas)
+    lcp_bytekeys = jax.jit(lambda st, a, b: kref.lcp_pairs_ref(
+        gather(st, a, W), gather(st, b, W), W)[0])
+    if use_pallas:
+        from repro.kernels.packed_gather import suffix_lcp_words
+
+        lcp_words_fn = jax.jit(lambda st, a, b: suffix_lcp_words(
+            st, a, b, W, interpret=jax.default_backend() != "tpu"))
+    else:
+        lcp_words_fn = jax.jit(
+            lambda st, a, b: kref.suffix_lcp_words_ref(st, a, b, W))
+    t_lcp_byte = timed(lcp_bytekeys, pt, pos, pos_b2)
+    t_lcp_words = timed(lcp_words_fn, pt, pos, pos_b2)
+    emit("packed/suffix_lcp_bytekeys", t_lcp_byte, f"n={n} b={F} w={W}")
+    emit("packed/suffix_lcp_words", t_lcp_words,
+         f"n={n} b={F} w={W} "
+         f"speedup={t_lcp_byte / max(t_lcp_words, 1e-9):.2f}x")
 
 
 if __name__ == "__main__":

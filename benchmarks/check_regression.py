@@ -1,0 +1,129 @@
+"""Benchmark-regression check: diff a bench JSON against the previous one.
+
+``benchmarks.run --json`` rows never used to land anywhere diffable — CI
+uploaded them as a build artifact and they vanished with it.  Now every
+PR records a ``BENCH_<pr>.json`` at the repo root (``make bench-smoke``
+locally, the CI smoke step in automation) and this checker compares the
+current run against the most recent committed artifact:
+
+    python -m benchmarks.check_regression --current bench-results.json
+    python -m benchmarks.check_regression \
+        --baseline BENCH_PR4.json --current BENCH_PR5.json --strict
+
+Only the device-hot suites are gated (``packed/`` and ``query/`` rows —
+bench_packed / bench_query): a row whose ``us_per_call`` grew more than
+``--threshold`` (default 20%) over the baseline is reported as a
+throughput drop.  Exit status is 0 unless ``--strict`` (warn-by-default:
+CI runners are noisy; the signal is the printed table and the committed
+trajectory, the hard gate is opt-in).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# suites gated for regressions (prefix of the row name)
+WATCH_PREFIXES = ("packed/", "query/")
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload["rows"] if isinstance(payload, dict) else payload
+    return {r["name"]: float(r["us_per_call"]) for r in rows
+            if "name" in r and "us_per_call" in r}
+
+
+def latest_baseline(root: str = ".") -> str | None:
+    """The newest ``BENCH_*.json`` at the repo root.
+
+    "Newest" is decided by the number embedded in the filename (PR
+    numbers grow monotonically; git checkouts do NOT preserve mtimes, so
+    modification time alone would pick an arbitrary committed file) with
+    mtime as the tiebreak for number-less names like ``BENCH_local.json``.
+    """
+    cands = glob.glob(os.path.join(root, "BENCH_*.json"))
+    if not cands:
+        return None
+
+    def key(path: str):
+        m = re.search(r"(\d+)", os.path.basename(path))
+        return (1, int(m.group(1))) if m else (0, os.path.getmtime(path))
+
+    return max(cands, key=key)
+
+
+def compare(base: dict[str, float], cur: dict[str, float],
+            threshold: float) -> tuple[list[str], list[str]]:
+    """(drops, notes): warning lines for watched regressions + info lines."""
+    drops: list[str] = []
+    notes: list[str] = []
+    for name in sorted(set(base) & set(cur)):
+        if not name.startswith(WATCH_PREFIXES):
+            continue
+        b, c = base[name], cur[name]
+        if b <= 0:
+            continue
+        ratio = c / b
+        line = f"{name}: {b:.1f}us -> {c:.1f}us ({ratio:.2f}x)"
+        if ratio > 1 + threshold:
+            drops.append(line)
+        else:
+            notes.append(line)
+    missing = [n for n in sorted(base) if n.startswith(WATCH_PREFIXES)
+               and n not in cur]
+    for n in missing:
+        drops.append(f"{n}: present in baseline, missing from current run")
+    return drops, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True,
+                    help="bench JSON of the run under test")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_<pr>.json (default: newest "
+                         "BENCH_*.json at the repo root)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="fractional us_per_call growth that counts as a "
+                         "drop (default 0.20 = 20%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero when any watched row dropped")
+    args = ap.parse_args()
+
+    baseline = args.baseline or latest_baseline()
+    if baseline is None:
+        print("check_regression: no BENCH_*.json baseline found — "
+              "nothing to compare (first recorded run?)")
+        return
+    if os.path.abspath(baseline) == os.path.abspath(args.current):
+        print(f"check_regression: baseline == current ({baseline}); "
+              "nothing to compare")
+        return
+
+    base = load_rows(baseline)
+    cur = load_rows(args.current)
+    drops, notes = compare(base, cur, args.threshold)
+
+    print(f"baseline: {baseline} ({len(base)} rows)")
+    print(f"current : {args.current} ({len(cur)} rows)")
+    for line in notes:
+        print(f"  ok    {line}")
+    for line in drops:
+        print(f"  DROP  {line}", file=sys.stderr)
+    if drops:
+        print(f"check_regression: {len(drops)} watched row(s) regressed "
+              f"more than {args.threshold:.0%}", file=sys.stderr)
+        if args.strict:
+            sys.exit(1)
+    else:
+        print("check_regression: no watched regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -88,6 +88,28 @@ def main():
           f"{dev.string_nbytes:,} B packed vs {dev_bytes.string_nbytes:,} B "
           f"bytes — {dev_bytes.string_nbytes / dev.string_nbytes:.1f}x smaller)")
 
+    # 5d. word-parallel querying: on a dense index every hot comparison —
+    #     the construction sort, find_batch probes, matching statistics,
+    #     suffix LCP — runs on the packed uint32 words DIRECTLY (16 DNA
+    #     symbols per compare; LCP = XOR + count-leading-zeros) instead
+    #     of byte-expanded keys.  That is the default; the byte-key
+    #     comparison path is kept as a bit-identical oracle behind
+    #     REPRO_WORD_COMPARE=byte (CI re-runs the packed suite with it
+    #     pinned).  Same index, both currencies, same answers:
+    import os
+    prev = os.environ.get("REPRO_WORD_COMPARE")
+    os.environ["REPRO_WORD_COMPARE"] = "byte"
+    try:
+        oracle_hits = dev.find_batch(batch)
+    finally:
+        if prev is None:
+            del os.environ["REPRO_WORD_COMPARE"]
+        else:
+            os.environ["REPRO_WORD_COMPARE"] = prev
+    for a, b in zip(dev.find_batch(batch), oracle_hits):
+        assert np.array_equal(a, b)
+    print("word-compare probes agree with the byte-key oracle ✓")
+
     # 6. analytics: the global LCP array over the flattened index unlocks
     #    substring analytics beyond exact search (repro.core.analytics)
     eng = idx.analytics()

@@ -53,9 +53,11 @@ _MS_BATCH_PAD = 64  # query positions round up to this (bounds recompiles)
 # jitted cores (module-level so tracing caches across engine instances)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas", "w"))
+@functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas",
+                                             "w", "word"))
 def _matching_stats(s_text, ell, win_lo, win_hi, pows, q_ext, n_q,
-                    *, k_route: int, n_iter: int, use_pallas: bool, w: int):
+                    *, k_route: int, n_iter: int, use_pallas: bool, w: int,
+                    word: bool = False):
     """Matching statistics of query positions 0..B-1 vs the suffix array.
 
     s_text: the served string (byte array or dense PackedText — probe and
@@ -64,17 +66,37 @@ def _matching_stats(s_text, ell, win_lo, win_hi, pows, q_ext, n_q,
     ``q[i:i+w]`` is routed and lower-bounded exactly like a ``find_batch``
     pattern (the probe kernel is the only gather in the search); the
     max-LCP suffix is then one of the two lexicographic neighbors of the
-    insertion point.  Returns (ms, witness): int32[B].
+    insertion point.  ``word`` (PackedText, terminal-free queries) packs
+    the whole window batch to k-bit dense words once and runs the
+    word-compare probe + word-LCP neighbor resolution — the window's
+    terminal padding enters the comparison as its first-terminal limit
+    (``n_q - i``).  Returns (ms, witness): int32[B].
     """
     b = q_ext.shape[0] - w
     total = ell.shape[0]
-    probe = kops.pattern_probe_impl(use_pallas)
-    gather = kops.range_gather_impl(use_pallas)
 
     idx = jnp.arange(b, dtype=jnp.int32)
     windows = q_ext[idx[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]]
-    pat_words = packing.pack_words(windows)
-    mask_words = jnp.full_like(pat_words, -1)  # full-width comparison
+    if word:
+        bits = s_text.bits
+        pat_words = packing.pack_pattern_dense(windows, bits, s_text.terminal)
+        mask_words = jnp.broadcast_to(
+            packing.pack_dense(
+                jnp.full((1, w), (1 << bits) - 1, jnp.int32), bits),
+            pat_words.shape)
+        # the window holds real query symbols then terminal padding: its
+        # comparison limit is the first terminal (== n_q - i, clipped)
+        lim_p = jnp.clip(n_q - idx, 0, w)
+        w_arr = jnp.full((b,), w, jnp.int32)
+        probe_w = kops.pattern_probe_words_impl(use_pallas)
+        probe = lambda st, pos, pat, mask: probe_w(st, pos, pat, mask,
+                                                   w_arr, lim_p)
+        gather = kops.range_gather_words_impl(use_pallas)
+    else:
+        probe = kops.pattern_probe_impl(use_pallas)
+        gather = kops.range_gather_impl(use_pallas)
+        pat_words = packing.pack_words(windows)
+        mask_words = jnp.full_like(pat_words, -1)  # full-width comparison
 
     # routing: the window is always k_route symbols deep (terminal-padded),
     # so its depth-k_route code owns exactly one cell.
@@ -100,8 +122,25 @@ def _matching_stats(s_text, ell, win_lo, win_hi, pows, q_ext, n_q,
     right_row = jnp.clip(pos, 0, total - 1)
     lw = gather(s_text, ell[left_row], w)
     rw = gather(s_text, ell[right_row], w)
-    lcp_l = jnp.where(pos > 0, kref.lcp_pairs_ref(lw, pat_words, w)[0], 0)
-    lcp_r = jnp.where(pos < total, kref.lcp_pairs_ref(rw, pat_words, w)[0], 0)
+    if word:
+        def window_lcp(sw, la):
+            # min(first-diff, limits) — except when suffix and window hit
+            # their terminals at the SAME index with no earlier real
+            # difference: there the byte rows continue matching through
+            # the equal terminal padding, so the byte LCP is exactly w
+            p = packing.lcp_words(sw, pat_words, bits)
+            capped = jnp.minimum(jnp.minimum(jnp.minimum(p, la), lim_p), w)
+            return jnp.where((la == lim_p) & (p >= la), w, capped)
+
+        la_l = packing.word_limit(s_text.n_real, ell[left_row], w)
+        la_r = packing.word_limit(s_text.n_real, ell[right_row], w)
+        raw_l = window_lcp(lw, la_l)
+        raw_r = window_lcp(rw, la_r)
+    else:
+        raw_l = kref.lcp_pairs_ref(lw, pat_words, w)[0]
+        raw_r = kref.lcp_pairs_ref(rw, pat_words, w)[0]
+    lcp_l = jnp.where(pos > 0, raw_l, 0)
+    lcp_r = jnp.where(pos < total, raw_r, 0)
     best = jnp.maximum(lcp_l, lcp_r)
     # window symbols past the query end are terminal padding: clipping to
     # the remaining query length makes the padded computation exact.
@@ -280,11 +319,16 @@ class AnalyticsEngine:
         b_pad = -(-len(q) // _MS_BATCH_PAD) * _MS_BATCH_PAD
         q_ext = np.full(b_pad + w, self.dev.base - 1, np.int32)
         q_ext[: len(q)] = q
+        # dense-packed indexes default to word-compare; a query embedding
+        # the terminal sentinel falls back to the byte-key path, whose
+        # comparison semantics are defined for it
+        word = (self.dev.packed and kops._use_word_compare()
+                and int(q.max()) < self.dev.s_text.terminal)
         out = np.asarray(_matching_stats(
             self.dev.s_text, self.dev.ell, self.dev.win_lo, self.dev.win_hi,
             self.dev.pows, q_ext, np.int32(len(q)),
             k_route=self.dev.k_route, n_iter=self.dev.n_iter,
-            use_pallas=kops._use_pallas(), w=w))
+            use_pallas=kops._use_pallas(), w=w, word=word))
         # re-apply the caller's exact cap (w was rounded up to whole words;
         # a witness matching >= ms symbols stays valid after clipping)
         return np.minimum(out[0, : len(q)], w_req), out[1, : len(q)]

@@ -312,11 +312,14 @@ class EraIndexer:
 
         Per-prefix (ell, b_off) segments are gathered on device into padded
         rows (depth-0 padding — see repro.core.build) and built with the
-        vmapped parallel Cartesian-tree builder.  Rows are grouped into at
-        most ~3 pad-width buckets (:func:`repro.core.build.bucket_pad_widths`)
-        instead of padding every row to the global max freq — on skewed
-        prefix mixes the narrow buckets hold most rows at a fraction of the
-        padded work, with bit-identical node sets per row either way.
+        vmapped parallel Cartesian-tree builder.  Rows are grouped into
+        pad-width buckets whose COUNT is auto-tuned from the freq
+        histogram (:func:`repro.core.build.bucket_pad_widths`: uniform
+        mixes collapse to one bucket, heavy-tailed mixes split until
+        another vmapped dispatch stops paying) instead of padding every
+        row to the global max freq — on skewed prefix mixes the narrow
+        buckets hold most rows at a fraction of the padded work, with
+        bit-identical node sets per row either way.
         """
         entries = _sorted_segments(groups)
         f_cap = states.L.shape[1]

@@ -290,20 +290,34 @@ def pad_width(max_freq: int) -> int:
     return max_freq + PAD_MIN
 
 
-def bucket_pad_widths(freqs, max_buckets: int = 3) -> list[tuple[int, np.ndarray]]:
-    """Group row frequencies into at most ``max_buckets`` pad-width buckets.
+# Modeled fixed cost (in padded Cartesian-tree cells) of dispatching one
+# more vmapped build bucket — the auto-tuner stops splitting once the
+# padded-cell saving of another bucket drops below this.
+BUCKET_OVERHEAD_CELLS = 4096
+
+
+def bucket_pad_widths(freqs, max_buckets: int | None = None
+                      ) -> list[tuple[int, np.ndarray]]:
+    """Group row frequencies into histogram-driven pad-width buckets.
 
     Real sub-tree size mixes are skewed (a few huge prefixes, many tiny
     ones), so padding EVERY row to the global max wastes most of the
     vmapped Cartesian-tree work.  Rows are partitioned by
     ``pad_width(freq)`` rounded up to a power of four (at most log4
-    distinct classes); the largest ``max_buckets`` classes survive and
-    smaller rows fall up into the narrowest surviving bucket.  Each
-    bucket's actual pad width is the exact ``pad_width`` of its largest
-    member, so the widest bucket never pads beyond the old global width.
+    distinct classes).  With ``max_buckets=None`` (default) the bucket
+    COUNT is auto-tuned from the class histogram: a small DP over class
+    boundaries finds, for every candidate count k, the k-bucket partition
+    with the fewest padded cells ``sum(width_b * rows_b)``, and the k
+    minimizing ``cells + k * BUCKET_OVERHEAD_CELLS`` wins — uniform mixes
+    collapse to one bucket, heavy-tailed mixes split until another
+    dispatch stops paying for itself.  An integer ``max_buckets`` keeps
+    the legacy behavior: the largest ``max_buckets`` classes survive and
+    smaller rows fall up into the narrowest surviving bucket.
 
-    Returns ``[(width, row_indices), ...]`` widest bucket first; the
-    indices partition ``range(len(freqs))``.
+    Each bucket's actual pad width is the exact ``pad_width`` of its
+    largest member, so the widest bucket never pads beyond the old global
+    width.  Returns ``[(width, row_indices), ...]`` widest bucket first;
+    the indices partition ``range(len(freqs))``.
     """
     freqs = np.asarray(freqs, np.int64)
     if freqs.size == 0:
@@ -311,14 +325,55 @@ def bucket_pad_widths(freqs, max_buckets: int = 3) -> list[tuple[int, np.ndarray
     pow4 = 4 ** np.ceil(
         np.log2(np.maximum(freqs + PAD_MIN, 1)) / 2).astype(np.int64)
     classes = np.sort(np.unique(pow4))[::-1]
-    kept = classes[: max(1, max_buckets)]
+
+    if max_buckets is not None:
+        kept = classes[: max(1, max_buckets)]
+        out = []
+        for i, cls in enumerate(kept):
+            # last (narrowest) kept class absorbs every smaller dropped class
+            take = (pow4 <= cls) if i == len(kept) - 1 else (pow4 == cls)
+            idx = np.nonzero(take)[0]
+            if idx.size:
+                out.append((pad_width(int(freqs[idx].max())), idx))
+        return out
+
+    # auto-tune: DP over contiguous class spans (widest class first; a
+    # bucket is always a contiguous span — splitting a class never helps)
+    m = len(classes)
+    cls_idx = [np.nonzero(pow4 == cls)[0] for cls in classes]
+    counts = np.array([len(ix) for ix in cls_idx], np.int64)
+    widths = np.array([pad_width(int(freqs[ix].max())) for ix in cls_idx],
+                      np.int64)
+    csum = np.concatenate([[0], np.cumsum(counts)])
+
+    def span_cells(a: int, b: int) -> int:
+        # one bucket over classes a..b-1 pads every row to widths[a]
+        return int(widths[a] * (csum[b] - csum[a]))
+
+    inf = float("inf")
+    best = [[inf] * (m + 1) for _ in range(m + 1)]
+    cut = [[0] * (m + 1) for _ in range(m + 1)]
+    best[0][0] = 0.0
+    for k in range(1, m + 1):
+        for j in range(k, m + 1):
+            for a in range(k - 1, j):
+                cand = best[k - 1][a] + span_cells(a, j)
+                if cand < best[k][j]:
+                    best[k][j] = cand
+                    cut[k][j] = a
+    k_best = min(range(1, m + 1),
+                 key=lambda k: best[k][m] + k * BUCKET_OVERHEAD_CELLS)
+
+    bounds = [m]
+    j = m
+    for k in range(k_best, 0, -1):
+        j = cut[k][j]
+        bounds.append(j)
+    bounds.reverse()  # [0, ..., m]
     out = []
-    for i, cls in enumerate(kept):
-        # last (narrowest) kept class absorbs every smaller dropped class
-        take = (pow4 <= cls) if i == len(kept) - 1 else (pow4 == cls)
-        idx = np.nonzero(take)[0]
-        if idx.size:
-            out.append((pad_width(int(freqs[idx].max())), idx))
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        idx = np.concatenate([cls_idx[i] for i in range(a, b)])
+        out.append((int(widths[a]), np.sort(idx)))
     return out
 
 

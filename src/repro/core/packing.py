@@ -31,6 +31,33 @@ int32 sign bit via the top byte; every sort or comparison on packed key
 words must therefore run on the uint32 bit pattern — use :func:`as_u32`
 (bitcast) or :func:`flip_sign` (order-preserving int32 remap) at the
 comparison site.
+
+**Word comparison** — the packed words themselves are ALSO a comparison
+currency (ERA §6.1 taken to its conclusion: 16 DNA symbols per uint32
+compare instead of 4 byte-codes per int32).  The subtlety is the virtual
+terminal: a bits-saturated alphabet (DNA: 4 codes fill 2 bits exactly)
+has no spare bit pattern for ``$``, so dense word reads SUBSTITUTE the
+largest representable code (:func:`sub_code`) for every position past
+``n_real`` and carry a per-row *limit* — the symbol index of the first
+terminal (``n_real - off``).  Every word-level comparison then follows
+one rule set, exact for all four alphabets:
+
+* first difference ``p`` (XOR + count-leading-zeros, :func:`lcp_words`)
+  below both limits → a real symbol difference, sign/LCP taken directly;
+* otherwise the side whose limit comes first holds ``$`` there — it is
+  LARGER (the terminal is the largest code) and the LCP is the smaller
+  limit (:func:`lcp_words_limited`, :func:`probe_words_ref` in
+  ``kernels.ref``);
+* rows equal through the window with both limits beyond it are equal —
+  the elastic-range sort appends ``w - limit`` as a least-significant
+  tiebreak key so equal substituted keys order exactly like the byte
+  keys (:func:`word_sort_keys`).
+
+When the terminal fits ``bits`` (4-bit protein classes, 8-bit byte) the
+substitution is the identity and the limit rules reduce to no-ops, so one
+code path serves every alphabet.  The byte-key path remains the oracle:
+both paths emit bit-identical construction arrays, query results and
+analytics (``tests/test_packed.py``).
 """
 
 from __future__ import annotations
@@ -83,10 +110,12 @@ def flip_sign(words: jax.Array) -> jax.Array:
 
 
 def clz32(x: jax.Array) -> jax.Array:
-    """Count leading zeros of int32 via bit smear + popcount.
+    """Count leading zeros of an int32 OR uint32 via bit smear + popcount.
 
-    Arithmetic right shifts only over-smear below the highest set bit, so
-    the result is exact for negative inputs too (clz == 0)."""
+    int32's arithmetic right shifts only over-smear below the highest set
+    bit, so the result is exact for negative inputs too (clz == 0);
+    uint32's logical shifts are the textbook form.  Plain jnp ops, so it
+    is usable inside Pallas kernel bodies."""
     x = x | (x >> 1)
     x = x | (x >> 2)
     x = x | (x >> 4)
@@ -280,6 +309,161 @@ def gather_pack_dense(pt: PackedText, offs: jax.Array, w: int) -> jax.Array:
     keep = keep_tab[v]
     out = (out & keep) | (t_word & ~keep)
     return jax.lax.bitcast_convert_type(out, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Word-parallel comparison primitives (dense words AS the compare currency)
+# ---------------------------------------------------------------------------
+
+
+def syms_per_word(bits: int) -> int:
+    return 32 // bits
+
+
+def sub_code(bits: int, terminal: int) -> int:
+    """The code substituted for the virtual terminal in dense word reads.
+
+    The largest representable code: when the terminal itself fits ``bits``
+    (4-bit protein classes, 8-bit byte) this IS the terminal and word
+    reads are faithful; a saturated alphabet (2-bit DNA, terminal code 4)
+    substitutes the largest real code and relies on the per-row limit to
+    keep comparisons exact (see the module docstring)."""
+    return min(terminal, (1 << bits) - 1)
+
+
+def _sub_word(bits: int, terminal: int) -> int:
+    """``sub_code`` replicated across every field of a uint32 word."""
+    sub = sub_code(bits, terminal)
+    return sum(sub << (bits * k) for k in range(syms_per_word(bits)))
+
+
+def pack_dense(sym: jax.Array, bits: int) -> jax.Array:
+    """(…, m) symbol codes (< 2**bits) → (…, ceil(m/spw)) uint32 dense
+    big-endian words, zero-padded past ``m`` — the pattern-side packing
+    that mirrors what :func:`pack_text` stores for the string."""
+    *lead, m = sym.shape
+    spw = syms_per_word(bits)
+    m_pad = -(-m // spw) * spw
+    sym = sym.astype(jnp.uint32)
+    if m_pad != m:
+        pad = jnp.zeros((*lead, m_pad - m), jnp.uint32)
+        sym = jnp.concatenate([sym, pad], axis=-1)
+    grp = sym.reshape(*lead, m_pad // spw, spw)
+    shifts = (32 - bits * (jnp.arange(spw, dtype=jnp.uint32) + 1))
+    return jnp.sum(grp << shifts, axis=-1).astype(jnp.uint32)
+
+
+def pack_pattern_dense(sym: jax.Array, bits: int, terminal: int) -> jax.Array:
+    """Pack a (…, m) pattern/window batch to dense words, substituting the
+    terminal code (``jnp.minimum`` with :func:`sub_code` — the identity
+    for every code a valid pattern may hold except a too-wide terminal)."""
+    sub = jnp.uint32(sub_code(bits, terminal))
+    return pack_dense(jnp.minimum(sym.astype(jnp.uint32), sub), bits)
+
+
+def gather_words_dense(pt: PackedText, offs: jax.Array, w: int) -> jax.Array:
+    """(F, ceil(w/spw)) uint32 dense words, shift-aligned to each offset,
+    with :func:`sub_code` substituted for every position ``>= n_real``.
+
+    This is the word-compare analogue of :func:`gather_pack_dense`: the
+    raw comparison keys, never spread back to bytes.  Pure-jnp; the
+    Pallas realization is ``repro.kernels.packed_gather.range_gather_words``.
+    """
+    bits, spw = pt.bits, pt.syms_per_word
+    offs = offs.astype(jnp.int32)
+    aligned = _aligned_words(pt, offs, w)                        # (F, nw)
+    nw = aligned.shape[1]
+    # keep the first v = clip(n_real - word_start, 0, spw) fields of each
+    # word; overwrite the tail with the substituted terminal pattern
+    starts = offs[:, None] + spw * jnp.arange(nw, dtype=jnp.int32)[None, :]
+    v = jnp.clip(pt.n_real - starts, 0, spw)
+    full = jnp.uint32(0xFFFFFFFF)
+    # shift stays in-range: v >= 1 rows shift by <= 32 - bits; v == 0 is
+    # overridden by the where
+    keep = jnp.where(
+        v > 0,
+        full << ((spw - jnp.maximum(v, 1)) * bits).astype(jnp.uint32),
+        jnp.uint32(0))
+    sub_w = jnp.uint32(_sub_word(bits, pt.terminal))
+    return (aligned & keep) | (sub_w & ~keep)
+
+
+def word_limit(n_real, offs: jax.Array, w: int) -> jax.Array:
+    """Symbol index of the first (virtual) terminal in a width-``w`` read
+    at each offset, clipped to [0, w] — the per-row comparison limit."""
+    return jnp.clip(n_real - offs.astype(jnp.int32), 0, w)
+
+
+def lcp_words(a: jax.Array, b: jax.Array, bits: int) -> jax.Array:
+    """First differing SYMBOL index of (F, NW) uint32 dense word rows:
+    XOR, first non-zero word, count-leading-zeros → field index.  Rows
+    equal through all NW words return ``NW * spw``."""
+    spw = syms_per_word(bits)
+    nw = a.shape[-1]
+    x = a ^ b
+    neq = x != 0
+    any_neq = jnp.any(neq, axis=-1)
+    wi = jnp.argmax(neq, axis=-1).astype(jnp.int32)
+    xw = jnp.take_along_axis(x, wi[..., None], axis=-1)[..., 0]
+    sym = clz32(xw) // bits
+    return jnp.where(any_neq, wi * spw + sym, nw * spw)
+
+
+def extract_sym(words: jax.Array, idx: jax.Array, bits: int) -> jax.Array:
+    """The ``bits``-wide field at symbol index ``idx`` of each word row."""
+    spw = syms_per_word(bits)
+    wv = jnp.take_along_axis(words, (idx // spw)[..., None], axis=-1)[..., 0]
+    sh = (32 - bits * (idx % spw + 1)).astype(jnp.uint32)
+    return ((wv >> sh) & ((1 << bits) - 1)).astype(jnp.int32)
+
+
+def lcp_words_limited(a: jax.Array, b: jax.Array, lim_a: jax.Array,
+                      lim_b: jax.Array, w: int, bits: int) -> jax.Array:
+    """Row LCP in symbols, capped at ``w``, of substituted dense word rows
+    with per-row terminal limits: ``min(first_diff, lim_a, lim_b, w)``.
+
+    Exact vs the byte scan whenever ``lim_a != lim_b`` or the rows carry
+    matching all-terminal tails past a common limit (suffix-vs-suffix
+    always; window-vs-suffix for embedded-terminal-free queries)."""
+    p = lcp_words(a, b, bits)
+    return jnp.minimum(jnp.minimum(jnp.minimum(p, lim_a), lim_b),
+                       w).astype(jnp.int32)
+
+
+def lcp_adjacent_words(prev: jax.Array, cur: jax.Array, lim_prev: jax.Array,
+                       lim_cur: jax.Array, w: int, bits: int, terminal: int):
+    """Word-key analogue of ``prepare.lcp_adjacent``: (lcp, c1, c2) per
+    row, with the true terminal code restored at a divergence that falls
+    ON a row's limit (the substituted field there is :func:`sub_code`,
+    but the suffix really holds ``$``).  Fully-equal rows (lcp == w)
+    report c1 == c2 == 0, matching the byte oracle."""
+    spw = syms_per_word(bits)
+    nw = cur.shape[-1]
+    lcp = lcp_words_limited(prev, cur, lim_prev, lim_cur, w, bits)
+    idx = jnp.clip(lcp, 0, nw * spw - 1)
+    ca = extract_sym(prev, idx, bits)
+    cb = extract_sym(cur, idx, bits)
+    diverged = lcp < w
+    c1 = jnp.where(diverged, jnp.where(lim_prev == lcp, terminal, ca), 0)
+    c2 = jnp.where(diverged, jnp.where(lim_cur == lcp, terminal, cb), 0)
+    return lcp, c1.astype(jnp.int32), c2.astype(jnp.int32)
+
+
+def word_sort_keys(pt: PackedText, offs: jax.Array, w: int,
+                   gather_words=None) -> tuple[jax.Array, jax.Array]:
+    """(keys, tie) for the elastic-range sort on dense word keys.
+
+    keys: (F, ceil(w/spw)) uint32 substituted dense words; tie: (F,)
+    int32 ``w - limit``, the LEAST significant sort key.  Substituted
+    keys that compare equal through ``w`` symbols differ from the byte
+    keys only where a terminal was substituted — and there the row whose
+    terminal comes FIRST is lexicographically larger, which is exactly
+    ascending ``w - limit``.  Rows with no terminal in the window tie at
+    0, preserving the stable order the byte path keeps."""
+    gather = gather_words or gather_words_dense
+    keys = gather(pt, offs, w)
+    tie = (w - word_limit(pt.n_real, offs, w)).astype(jnp.int32)
+    return keys, tie
 
 
 def unpack_text(pt: PackedText, n: int | None = None) -> np.ndarray:

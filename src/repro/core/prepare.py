@@ -49,7 +49,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import as_u32, clz32 as _clz32, gather_pack, pack_words  # noqa: F401  (re-exported; shared with build/query)
+from repro.core import packing
+from repro.core.packing import (  # noqa: F401  (re-exported; shared with build/query)
+    PackedText,
+    as_u32,
+    clz32 as _clz32,
+    gather_pack,
+    pack_words,
+)
 from repro.core.vertical import VirtualTree
 from repro.kernels import ops as kops
 
@@ -188,43 +195,88 @@ def _kernel_impls(use_pallas: bool):
 
 def prepare_step(s_padded, state: PrepareState, *, w: int,
                  use_pallas: bool = False,
+                 word_keys: bool | None = None,
                  gather_fn=None) -> tuple[PrepareState, jax.Array]:
     """One iteration of SubTreePrepare for static range ``w``.
 
     ``s_padded``: the terminal-padded byte string OR a dense
     :class:`repro.core.packing.PackedText` — results are bit-identical.
+    For a PackedText the sort runs on the dense uint32 WORD keys by
+    default (``word_keys``; env ``REPRO_WORD_COMPARE=byte`` or an
+    explicit ``False`` pins the byte-key oracle): ``8/bits``x fewer sort
+    key words plus one ``w - limit`` tiebreak lane, identical final
+    construction arrays (intermediate orders may differ only INSIDE
+    still-active equal-key blocks, which the segmented sort re-orders
+    before anything observable is emitted).
     Returns (new_state, n_active).
     """
     f = state.L.shape[0]
     iota = jnp.arange(f, dtype=jnp.int32)
     active = state.area >= 0
+    if word_keys is None:
+        word_keys = kops._use_word_compare()
+    word_keys = (word_keys and isinstance(s_padded, PackedText)
+                 and gather_fn is None)
 
-    # 1. read ``w`` symbols after every active leaf (paper lines 9-12);
-    #    Pallas paged-gather on TPU, pure-jnp fallback elsewhere.
-    default_gather, lcp_fn = _kernel_impls(use_pallas)
-    gather_fn = gather_fn or default_gather
     offs = jnp.where(active, state.L + state.start, 0)
-    keys = gather_fn(s_padded, offs, w)
-    keys = jnp.where(active[:, None], keys, 0)
-
-    # 2. segmented stable sort (paper lines 13-15): major key = area id;
-    #    done elements get singleton majors (their index) so they stay put.
-    #    Minor keys compare as uint32: byte-alphabet codes >= 128 set the
-    #    int32 sign bit of the top packed byte, so signed order would break.
     major = jnp.where(active, state.area, iota)
-    sort_keys = as_u32(keys) if keys.dtype == jnp.int32 else keys
-    n_words = keys.shape[1]
-    minor_keys = tuple(sort_keys[:, j] for j in range(n_words - 1, -1, -1))
-    order = jnp.lexsort(minor_keys + (major,))
-    L = state.L[order]
-    start = state.start[order]
-    keys = keys[order]
-    # area / b_* are position-attached: within-area sorting leaves them fixed.
 
-    # 3. adjacent divergence → B entries (paper lines 16-23)
+    if word_keys:
+        # 1w. read the dense word keys directly (no byte repack): the
+        #     substituted words plus the w - limit tiebreak ARE the
+        #     comparison currency (see core.packing's word-compare rules).
+        keys, tie = packing.word_sort_keys(
+            s_padded, offs, w,
+            gather_words=kops.range_gather_words_impl(use_pallas))
+        keys = jnp.where(active[:, None], keys, jnp.uint32(0))
+        tie = jnp.where(active, tie, 0)
+
+        # 2w. segmented stable sort on ``8/bits``x fewer minor words; the
+        #     tiebreak lane is the LEAST significant key.
+        n_words = keys.shape[1]
+        minor_keys = (tie,) + tuple(keys[:, j]
+                                    for j in range(n_words - 1, -1, -1))
+        order = jnp.lexsort(minor_keys + (major,))
+        L = state.L[order]
+        start = state.start[order]
+        keys = keys[order]
+
+        # 3w. adjacent divergence: XOR + clz + terminal-limit rules give
+        #     the same (lcp, c1, c2) the byte rows would.
+        lim = packing.word_limit(s_padded.n_real, L + start, w)
+        prev_rows = jnp.concatenate([keys[:1], keys[:-1]], axis=0)
+        prev_lim = jnp.concatenate([lim[:1], lim[:-1]])
+        lcp, c1, c2 = packing.lcp_adjacent_words(
+            prev_rows, keys, prev_lim, lim, w, s_padded.bits,
+            s_padded.terminal)
+    else:
+        # 1. read ``w`` symbols after every active leaf (paper lines 9-12);
+        #    Pallas paged-gather on TPU, pure-jnp fallback elsewhere.
+        default_gather, lcp_fn = _kernel_impls(use_pallas)
+        gather_fn = gather_fn or default_gather
+        keys = gather_fn(s_padded, offs, w)
+        keys = jnp.where(active[:, None], keys, 0)
+
+        # 2. segmented stable sort (paper lines 13-15): major key = area
+        #    id; done elements get singleton majors (their index) so they
+        #    stay put.  Minor keys compare as uint32: byte-alphabet codes
+        #    >= 128 set the int32 sign bit of the top packed byte, so
+        #    signed order would break.
+        sort_keys = as_u32(keys) if keys.dtype == jnp.int32 else keys
+        n_words = keys.shape[1]
+        minor_keys = tuple(sort_keys[:, j] for j in range(n_words - 1, -1, -1))
+        order = jnp.lexsort(minor_keys + (major,))
+        L = state.L[order]
+        start = state.start[order]
+        keys = keys[order]
+        # area / b_* are position-attached: within-area sorting leaves
+        # them fixed.
+
+        # 3. adjacent divergence → B entries (paper lines 16-23)
+        prev_rows = jnp.concatenate([keys[:1], keys[:-1]], axis=0)
+        lcp, c1, c2 = lcp_fn(prev_rows, keys, w)
+
     same_area = (state.area == jnp.roll(state.area, 1)) & active & (iota > 0)
-    prev_rows = jnp.concatenate([keys[:1], keys[:-1]], axis=0)
-    lcp, c1, c2 = lcp_fn(prev_rows, keys, w)
     new_split = same_area & (lcp < w)
     b_off = jnp.where(new_split, start + lcp, state.b_off)
     b_c1 = jnp.where(new_split, c1, state.b_c1)
@@ -253,13 +305,15 @@ def prepare_step(s_padded, state: PrepareState, *, w: int,
     return new_state, jnp.sum(area >= 0)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "use_pallas"))
-def _jit_step(s_padded, state, w, use_pallas=False):
-    return prepare_step(s_padded, state, w=w, use_pallas=use_pallas)
+@functools.partial(jax.jit, static_argnames=("w", "use_pallas", "word_keys"))
+def _jit_step(s_padded, state, w, use_pallas=False, word_keys=None):
+    return prepare_step(s_padded, state, w=w, use_pallas=use_pallas,
+                        word_keys=word_keys)
 
 
 def prepare_step_batch(s_padded, states: PrepareState, *, w: int,
-                       use_pallas: bool = False):
+                       use_pallas: bool = False,
+                       word_keys: bool | None = None):
     """One elastic-range iteration for a (G, F) batch of virtual trees.
 
     Groups are independent, so the step is a plain vmap over the leading
@@ -271,16 +325,18 @@ def prepare_step_batch(s_padded, states: PrepareState, *, w: int,
 
     Returns (new_states, n_active) with ``n_active`` int32[G].
     """
-    step = lambda st: prepare_step(s_padded, st, w=w, use_pallas=use_pallas)
+    step = lambda st: prepare_step(s_padded, st, w=w, use_pallas=use_pallas,
+                                   word_keys=word_keys)
     return jax.vmap(step)(states)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "use_pallas"),
+@functools.partial(jax.jit, static_argnames=("w", "use_pallas", "word_keys"),
                    donate_argnums=(1,))
-def _jit_step_batch(s_padded, states, w, use_pallas=False):
+def _jit_step_batch(s_padded, states, w, use_pallas=False, word_keys=None):
     # donated state buffers: the host loop re-binds the result, so the
     # whole elastic loop runs in-place on device.
-    return prepare_step_batch(s_padded, states, w=w, use_pallas=use_pallas)
+    return prepare_step_batch(s_padded, states, w=w, use_pallas=use_pallas,
+                              word_keys=word_keys)
 
 
 def elastic_range(cfg: ElasticConfig, n_active: int) -> int:
@@ -313,6 +369,7 @@ def subtree_prepare(
     """Run SubTreePrepare to completion for one virtual tree."""
     state = init_state(group, capacity)
     use_pallas = kops._use_pallas()
+    word_keys = kops._use_word_compare()
     n_active = int(jnp.sum(state.area >= 0))
     it = 0
     while n_active > 0:
@@ -327,7 +384,8 @@ def subtree_prepare(
             act = np.asarray(state.area) >= 0
             offs = (np.asarray(state.L) + np.asarray(state.start))[act]
             stats.offsets_history.append(offs.astype(np.int64))
-        state, n_active_dev = _jit_step(s_padded, state, w, use_pallas)
+        state, n_active_dev = _jit_step(s_padded, state, w, use_pallas,
+                                        word_keys)
         if stats is not None:
             stats.iterations += 1
             stats.ranges.append(w)
@@ -361,6 +419,7 @@ def subtree_prepare_batch(
     """
     states = init_batch(groups, capacity)
     use_pallas = kops._use_pallas()
+    word_keys = kops._use_word_compare()
     n_active = np.asarray(jnp.sum(states.area >= 0, axis=1))
     it = 0
     while int(n_active.max()) > 0:
@@ -378,7 +437,8 @@ def subtree_prepare_batch(
             act = np.asarray(states.area) >= 0
             offs = (np.asarray(states.L) + np.asarray(states.start))[act]
             stats.offsets_history.append(offs.astype(np.int64))
-        states, n_active_dev = _jit_step_batch(s_padded, states, w, use_pallas)
+        states, n_active_dev = _jit_step_batch(s_padded, states, w, use_pallas,
+                                               word_keys)
         if stats is not None:
             total_active = int(n_active.sum())
             stats.iterations += 1

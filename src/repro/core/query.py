@@ -57,27 +57,44 @@ def npz_path(path: str) -> str:
     return path if path.endswith(".npz") else path + ".npz"
 
 
-@functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("k_route", "n_iter", "use_pallas",
+                                             "word"))
 def _find_batch_ranges(s_text, ell, win_lo, win_hi, pows, spans,
                        patterns, lengths, route_syms,
-                       *, k_route: int, n_iter: int, use_pallas: bool):
+                       *, k_route: int, n_iter: int, use_pallas: bool,
+                       word: bool = False):
     """Route + vectorized lower/upper-bound binary search for one batch.
 
     s_text: byte string or dense PackedText (the probe dispatches);
     patterns: (B, m_pad) int32, zero-padded; lengths: (B,) int32 >= 1;
     route_syms: (B, k_route) int32 (first symbols, zero-padded).
+    ``word`` (PackedText only, real-symbol patterns only) packs the batch
+    to k-bit dense words ONCE and runs the word-compare probe — ``bits/8``
+    of the pattern key words and compare lanes, identical verdicts.
     Returns (start, count): int32[B] slices into ``ell``.
     """
     b, m_pad = patterns.shape
     total = ell.shape[0]
-    probe = kops.pattern_probe_impl(use_pallas)
 
-    # pattern packing: zero symbols past each length in both the pattern and
-    # the 0xFF-byte mask, so masked suffix words compare against exactly the
-    # first ``m`` symbols (prefix match == equality).
+    # pattern packing (once per batch): zero symbols past each length in
+    # both the pattern and the all-ones mask, so masked suffix words
+    # compare against exactly the first ``m`` symbols (prefix match ==
+    # equality).  Byte path: 0xFF-byte masks over 4-symbol int32 words;
+    # word path: bits-wide fields over 32/bits-symbol uint32 words.
     in_pat = jnp.arange(m_pad, dtype=jnp.int32)[None, :] < lengths[:, None]
-    pat_words = packing_mod.pack_words(jnp.where(in_pat, patterns, 0))
-    mask_words = packing_mod.pack_words(jnp.where(in_pat, 0xFF, 0))
+    if word:
+        bits = s_text.bits
+        pat_words = packing_mod.pack_pattern_dense(
+            jnp.where(in_pat, patterns, 0), bits, s_text.terminal)
+        mask_words = packing_mod.pack_dense(
+            jnp.where(in_pat, (1 << bits) - 1, 0), bits)
+        probe_w = kops.pattern_probe_words_impl(use_pallas)
+        len2 = jnp.concatenate([lengths, lengths])
+        probe = lambda st, pos, pat, mask: probe_w(st, pos, pat, mask, len2)
+    else:
+        pat_words = packing_mod.pack_words(jnp.where(in_pat, patterns, 0))
+        mask_words = packing_mod.pack_words(jnp.where(in_pat, 0xFF, 0))
+        probe = kops.pattern_probe_impl(use_pallas)
 
     # routing: the pattern's depth-k_route code interval [c_lo, c_hi] covers
     # every suffix that can match; one gather into the dense table bounds
@@ -370,14 +387,29 @@ class DeviceIndex:
 
     def find_batch_ranges(self, patterns, lengths, route_syms):
         """Jitted core: (B, m_pad)/(B,)/(B, k_route) → (start, count) slices
-        of ``ell`` (device arrays; matches are ``ell[start:start+count]``)."""
+        of ``ell`` (device arrays; matches are ``ell[start:start+count]``).
+
+        Dense-packed indexes default to the word-compare probe
+        (``REPRO_WORD_COMPARE``); a batch carrying the terminal sentinel
+        as a pattern code (degenerate but accepted) falls back to the
+        byte-key probe, whose verdicts are defined for it."""
+        word = self.packed and kops._use_word_compare()
+        if word:
+            # the gate is a STATIC jit arg, so the max code must reach the
+            # host; reduce on device for device-resident batches (one
+            # scalar sync) instead of pulling the whole batch back
+            if isinstance(patterns, jax.Array):
+                pat_max = int(jnp.max(patterns, initial=0))
+            else:
+                pat_max = int(np.asarray(patterns).max(initial=0))
+            word = pat_max < self.s_text.terminal
         return _find_batch_ranges(
             self.s_text, self.ell, self.win_lo, self.win_hi,
             self.pows, self.spans,
             jnp.asarray(patterns, jnp.int32), jnp.asarray(lengths, jnp.int32),
             jnp.asarray(route_syms, jnp.int32),
             k_route=self.k_route, n_iter=self.n_iter,
-            use_pallas=kops._use_pallas(),
+            use_pallas=kops._use_pallas(), word=word,
         )
 
     def find_batch(self, patterns) -> list[np.ndarray]:

@@ -14,6 +14,13 @@ accepts EITHER the terminal-padded byte array (uint8 codes) OR a dense
 k-bit :class:`repro.core.packing.PackedText`; the packed variants emit
 byte-identical sort keys / verdicts (see :mod:`repro.kernels.packed_gather`),
 so callers switch representation without touching results.
+
+Comparison-currency dispatch: for a PackedText the hot comparisons
+(suffix LCP, probe, the elastic-range sort keys) default to WORD-compare
+— k-bit dense uint32 words compared directly, ``8/bits``x fewer compare
+lanes — with the PR-4 byte-repack path kept as the oracle.
+``REPRO_WORD_COMPARE=byte`` forces the byte-key path (bit-identical
+results either way; tests pin it).
 """
 
 from __future__ import annotations
@@ -28,7 +35,10 @@ from repro.kernels.kmer_histogram import kmer_histogram as _kmer_pallas
 from repro.kernels.lcp import lcp_pairs as _lcp_pallas
 from repro.kernels.packed_gather import (
     pattern_probe_packed as _packed_probe_pallas,
+    pattern_probe_words as _words_probe_pallas,
     range_gather_packed as _packed_gather_pallas,
+    range_gather_words as _words_gather_pallas,
+    suffix_lcp_words as _words_lcp_pallas,
 )
 from repro.kernels.pattern_probe import pattern_probe as _probe_pallas
 from repro.kernels.range_gather import range_gather_pack as _gather_pallas
@@ -46,6 +56,19 @@ def _use_pallas() -> bool:
     if env == "jnp":
         return False
     return _on_tpu()
+
+
+def _use_word_compare() -> bool:
+    """Word-compare is the default for dense-packed strings;
+    ``REPRO_WORD_COMPARE=byte`` pins the PR-4 byte-repack oracle path.
+    Resolved OUTSIDE jitted traces (a static arg), like ``_use_pallas``."""
+    env = os.environ.get("REPRO_WORD_COMPARE", "")
+    if env == "byte":
+        return False
+    if env in ("", "word"):
+        return True
+    raise ValueError(
+        f"unknown REPRO_WORD_COMPARE={env!r}; choose 'word' or 'byte'")
 
 
 def range_gather_impl(use_pallas: bool):
@@ -74,10 +97,31 @@ def kmer_histogram(s_padded, n: int, k: int, base: int):
     return _ref.kmer_histogram_ref(s_padded, n, k, base)
 
 
+def range_gather_words_impl(use_pallas: bool):
+    """Word-key gather for a STATIC ``use_pallas``: ``fn(pt, offs, w) ->
+    (F, ceil(w/spw)) uint32`` substituted dense word rows (PackedText
+    only — the word currency has no byte-string form)."""
+    def fn(pt: PackedText, offs, w: int):
+        if use_pallas:
+            return _words_gather_pallas(pt, offs, w, interpret=not _on_tpu())
+        return _ref.range_gather_words_ref(pt, offs, w)
+    return fn
+
+
+def range_gather_words(pt: PackedText, offs, w: int):
+    return range_gather_words_impl(_use_pallas())(pt, offs, w)
+
+
 def suffix_lcp_pairs(s_text, pos_a, pos_b, w: int):
     if isinstance(s_text, PackedText):
-        # packed storage: two byte-key gathers (Pallas when enabled) feed
-        # the shared row-LCP — identical to the byte kernel's symbol scan.
+        if _use_word_compare():
+            # word path: first differing dense word + clz, no byte repack
+            if _use_pallas():
+                return _words_lcp_pallas(s_text, pos_a, pos_b, w,
+                                         interpret=not _on_tpu())
+            return _ref.suffix_lcp_words_ref(s_text, pos_a, pos_b, w)
+        # byte-key oracle path: two byte-key gathers feed the shared
+        # row-LCP — identical to the byte kernel's symbol scan.
         gather = range_gather_impl(_use_pallas())
         a = gather(s_text, pos_a, w)
         b = gather(s_text, pos_b, w)
@@ -116,3 +160,25 @@ def pattern_probe_impl(use_pallas: bool):
 
 def pattern_probe(s_text, pos, pat_words, mask_words):
     return pattern_probe_impl(_use_pallas())(s_text, pos, pat_words, mask_words)
+
+
+def pattern_probe_words_impl(use_pallas: bool):
+    """Word-compare probe for a STATIC ``use_pallas``:
+    ``fn(pt, pos, pat_dense, mask_dense, lengths, lim_p=None) -> int32[B]``
+    verdicts (PackedText only; patterns must be real-symbol apart from a
+    terminal-padded tail described by ``lim_p`` — callers fall back to
+    :func:`pattern_probe_impl` for other terminal-bearing batches)."""
+    def fn(pt: PackedText, pos, pat_dense, mask_dense, lengths, lim_p=None):
+        if use_pallas:
+            return _words_probe_pallas(pt, pos, pat_dense, mask_dense,
+                                       lengths, lim_p,
+                                       interpret=not _on_tpu())
+        return _ref.pattern_probe_words_ref(pt, pos, pat_dense, mask_dense,
+                                            lengths, lim_p)
+    return fn
+
+
+def pattern_probe_words(pt: PackedText, pos, pat_dense, mask_dense, lengths,
+                        lim_p=None):
+    return pattern_probe_words_impl(_use_pallas())(pt, pos, pat_dense,
+                                                   mask_dense, lengths, lim_p)

@@ -1,6 +1,7 @@
 """Pallas TPU kernels over the DENSE k-bit packed string (paper §6.1).
 
-Two kernels share one in-kernel dense-read recipe:
+Five kernels share one in-kernel dense-read recipe.  The byte-key family
+(PR 4) repacks dense reads into byte-per-symbol sort keys:
 
 * :func:`range_gather_packed` — the packed realization of
   :mod:`repro.kernels.range_gather`: gather ``w`` symbols per offset from
@@ -10,6 +11,19 @@ Two kernels share one in-kernel dense-read recipe:
   shrinks by ``8/bits`` (4x for DNA).
 * :func:`pattern_probe_packed` — the packed probe-gather-compare step of
   the batched query binary search (:mod:`repro.kernels.pattern_probe`).
+
+The word-compare family keeps the dense words AS the comparison currency
+(no byte repack in-kernel, ``bits/8`` of the compare lanes — the ERA §6.1
+packing argument taken to its end; terminal semantics live in
+:mod:`repro.core.packing`'s word-comparison rules):
+
+* :func:`range_gather_words` — raw shift-aligned uint32 word rows with
+  the virtual terminal substituted (:func:`repro.core.packing.sub_code`);
+* :func:`pattern_probe_words` — compares k-bit pattern words against the
+  shifted text words directly, verdict via XOR + first-word + clz +
+  terminal-limit rules;
+* :func:`suffix_lcp_words` — suffix-pair LCP as first-differing-word +
+  count-leading-zeros, capped by both terminal limits.
 
 Dense-read recipe: offsets are scalar-prefetched; each grid step DMAs the
 ``(2, tile)`` uint32-word window containing the read (a read may straddle
@@ -34,7 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.packing import PackedText
+from repro.core.packing import PackedText, _sub_word, clz32
 from repro.kernels.tiles import default_interpret as _default_interpret, stage_tiles
 
 
@@ -187,4 +201,262 @@ def pattern_probe_packed(
         interpret=_default_interpret(interpret),
     )(pos.astype(jnp.int32), jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
       s_rows, s_rows, pat_words, mask_words)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Word-compare kernels: dense uint32 words are the comparison currency
+# ---------------------------------------------------------------------------
+
+
+def _dense_read_words(off, n_real, s_lo_ref, s_hi_ref, *, tile: int, nw: int,
+                      bits: int, terminal: int):
+    """Read ``nw`` shift-aligned SUBSTITUTED dense words at symbol ``off``
+    from a 2-tile uint32 window (the in-kernel form of
+    :func:`repro.core.packing.gather_words_dense`)."""
+    spw = 32 // bits
+    word0 = off // spw
+    local = word0 - (word0 // tile) * tile
+    flat = jnp.concatenate([s_lo_ref[...], s_hi_ref[...]], axis=1).reshape(2 * tile)
+    u = jax.lax.dynamic_slice(flat, (local,), (nw + 1,)).astype(jnp.uint32)
+    sh = (bits * (off - word0 * spw)).astype(jnp.uint32)
+    hi = u[:-1] << sh
+    lo = (u[1:] >> 1) >> (31 - sh)  # funnel low half, shift always in-range
+    aligned = hi | lo
+    # virtual terminal: keep the first v = clip(n_real - start, 0, spw)
+    # fields of each word, substitute sub_code for the rest
+    starts = off + spw * jax.lax.iota(jnp.int32, nw)
+    v = jnp.clip(n_real - starts, 0, spw)
+    full = jnp.uint32(0xFFFFFFFF)
+    keep = jnp.where(
+        v > 0,
+        full << ((spw - jnp.maximum(v, 1)) * bits).astype(jnp.uint32),
+        jnp.uint32(0))
+    sub_w = jnp.uint32(_sub_word(bits, terminal))
+    return (aligned & keep) | (sub_w & ~keep)
+
+
+def _first_diff(a, b, nw: int, bits: int):
+    """(p, aw, bw): first differing symbol index of two word vectors plus
+    the words holding it (p == nw * spw when equal)."""
+    spw = 32 // bits
+    x = a ^ b
+    neq = x != 0
+    iota = jax.lax.iota(jnp.int32, nw)
+    first = jnp.min(jnp.where(neq, iota, nw))
+    sel = iota == first
+    xw = jnp.sum(jnp.where(sel, x, jnp.uint32(0)))
+    aw = jnp.sum(jnp.where(sel, a, jnp.uint32(0)))
+    bw = jnp.sum(jnp.where(sel, b, jnp.uint32(0)))
+    sym = clz32(xw) // bits
+    p = jnp.where(jnp.any(neq), first * spw + sym, nw * spw)
+    return p, aw, bw, jnp.minimum(sym, spw - 1)
+
+
+def _words_gather_kernel(offs_ref, nr_ref, s_lo_ref, s_hi_ref, out_ref,
+                         *, tile: int, nw: int, bits: int, terminal: int):
+    i = pl.program_id(0)
+    words = _dense_read_words(offs_ref[i], nr_ref[0], s_lo_ref, s_hi_ref,
+                              tile=tile, nw=nw, bits=bits, terminal=terminal)
+    out_ref[0, :] = words.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile", "interpret"))
+def range_gather_words(
+    pt: PackedText,
+    offs: jax.Array,
+    w: int,
+    *,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Gather the ``ceil(w / spw)`` dense uint32 words covering ``w``
+    symbols at each offset — shift-aligned, terminal-substituted, never
+    spread to bytes.  Returns (F, nw) uint32, bit-identical to
+    :func:`repro.core.packing.gather_words_dense`.
+    """
+    spw = pt.syms_per_word
+    nw = -(-w // spw)
+    assert nw + 1 <= tile, (w, pt.bits, tile)
+    f = offs.shape[0]
+    s_rows, _ = stage_tiles(pt.words, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(f,),
+        in_specs=[
+            pl.BlockSpec((1, tile),
+                         lambda i, offs_ref, nr_ref: ((offs_ref[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, offs_ref, nr_ref: ((offs_ref[i] // spw) // tile + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nw), lambda i, offs_ref, nr_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_words_gather_kernel, tile=tile, nw=nw, bits=pt.bits,
+                          terminal=pt.terminal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((f, nw), jnp.int32),
+        interpret=_default_interpret(interpret),
+    )(offs.astype(jnp.int32), jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
+      s_rows, s_rows)
+    return jax.lax.bitcast_convert_type(out, jnp.uint32)
+
+
+def _words_probe_kernel(pos_ref, len_ref, limp_ref, nr_ref, s_lo_ref, s_hi_ref,
+                        pat_ref, mask_ref, out_ref,
+                        *, tile: int, nw: int, bits: int, terminal: int):
+    i = pl.program_id(0)
+    spw = 32 // bits
+    big = nw * spw
+    pos = pos_ref[i]
+    sw = _dense_read_words(pos, nr_ref[0], s_lo_ref, s_hi_ref,
+                           tile=tile, nw=nw, bits=bits, terminal=terminal)
+    mask = jax.lax.bitcast_convert_type(mask_ref[0, :], jnp.uint32)
+    pat = jax.lax.bitcast_convert_type(pat_ref[0, :], jnp.uint32)
+    p, aw, bw, sym = _first_diff(sw & mask, pat, nw, bits)
+    sh = (32 - bits * (sym + 1)).astype(jnp.uint32)
+    ones = jnp.uint32((1 << bits) - 1)
+    ca = ((aw >> sh) & ones).astype(jnp.int32)
+    cb = ((bw >> sh) & ones).astype(jnp.int32)
+    sym_sign = jnp.where(ca < cb, -1, 1)
+    # terminal-limit rules (core.packing module docstring): limits at or
+    # past the compare length saturate out of the comparison
+    cmp_len = len_ref[i]
+    ls = nr_ref[0] - pos
+    lp = limp_ref[i]
+    ls = jnp.where(ls < cmp_len, ls, big)
+    lp = jnp.where(lp < cmp_len, lp, big)
+    lim_sign = jnp.where(ls < lp, 1, jnp.where(lp < ls, -1, 0))
+    out_ref[0, 0] = jnp.where(p < jnp.minimum(ls, lp), sym_sign, lim_sign)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def pattern_probe_words(
+    pt: PackedText,
+    pos: jax.Array,
+    pat_dense: jax.Array,
+    mask_dense: jax.Array,
+    lengths: jax.Array,
+    lim_p: jax.Array | None = None,
+    *,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Word-compare probe: k-bit pattern words vs shifted text words.
+
+    pat_dense / mask_dense: (B, NW) uint32 dense rows from
+    :func:`repro.core.packing.pack_pattern_dense` (zero / all-ones fields
+    past each compare length); lengths: (B,) int32 compare lengths;
+    lim_p: the pattern side's first-terminal index for terminal-padded
+    windows (defaults to ``lengths`` — no pattern terminal).  Returns
+    int32[B] in {-1, 0, +1}; bit-identical to the byte probe for
+    real-symbol patterns (oracle:
+    :func:`repro.kernels.ref.pattern_probe_words_ref`).
+    """
+    b, nw = pat_dense.shape
+    spw = pt.syms_per_word
+    assert mask_dense.shape == (b, nw) and pos.shape == (b,)
+    assert nw + 1 <= tile, (nw, pt.bits, tile)
+    if lim_p is None:
+        lim_p = lengths
+    s_rows, _ = stage_tiles(pt.words, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref:
+                         ((pos_ref[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref:
+                         ((pos_ref[i] // spw) // tile + 1, 0)),
+            pl.BlockSpec((1, nw),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref: (i, 0)),
+            pl.BlockSpec((1, nw),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1), lambda i, pos_ref, len_ref, limp_ref, nr_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_words_probe_kernel, tile=tile, nw=nw, bits=pt.bits,
+                          terminal=pt.terminal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=_default_interpret(interpret),
+    )(pos.astype(jnp.int32), lengths.astype(jnp.int32),
+      lim_p.astype(jnp.int32),
+      jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
+      s_rows, s_rows,
+      jax.lax.bitcast_convert_type(pat_dense, jnp.int32),
+      jax.lax.bitcast_convert_type(mask_dense, jnp.int32))
+    return out[:, 0]
+
+
+def _words_lcp_kernel(pa_ref, pb_ref, nr_ref, a_lo_ref, a_hi_ref,
+                      b_lo_ref, b_hi_ref, out_ref,
+                      *, tile: int, nw: int, w: int, bits: int, terminal: int):
+    i = pl.program_id(0)
+    oa = pa_ref[i]
+    ob = pb_ref[i]
+    a = _dense_read_words(oa, nr_ref[0], a_lo_ref, a_hi_ref,
+                          tile=tile, nw=nw, bits=bits, terminal=terminal)
+    b = _dense_read_words(ob, nr_ref[0], b_lo_ref, b_hi_ref,
+                          tile=tile, nw=nw, bits=bits, terminal=terminal)
+    p, _, _, _ = _first_diff(a, b, nw, bits)
+    la = jnp.clip(nr_ref[0] - oa, 0, w)
+    lb = jnp.clip(nr_ref[0] - ob, 0, w)
+    out_ref[0, 0] = jnp.minimum(jnp.minimum(jnp.minimum(p, la), lb), w)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile", "interpret"))
+def suffix_lcp_words(
+    pt: PackedText,
+    pos_a: jax.Array,
+    pos_b: jax.Array,
+    w: int,
+    *,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Word-compare suffix-pair LCP over dense storage, capped at ``w``.
+
+    Finds the first differing dense word by XOR, resolves the symbol
+    offset with count-leading-zeros, and caps at both terminal limits —
+    equal to the byte symbol scan for distinct suffix pairs (oracle:
+    :func:`repro.kernels.ref.suffix_lcp_words_ref`).
+    """
+    spw = pt.syms_per_word
+    nw = -(-w // spw)
+    assert nw + 1 <= tile, (w, pt.bits, tile)
+    b = pos_a.shape[0]
+    assert pos_b.shape == (b,)
+    s_rows, _ = stage_tiles(pt.words, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, tile),
+                         lambda i, pa, pb, nr: ((pa[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pa, pb, nr: ((pa[i] // spw) // tile + 1, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pa, pb, nr: ((pb[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pa, pb, nr: ((pb[i] // spw) // tile + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, pa, pb, nr: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_words_lcp_kernel, tile=tile, nw=nw, w=w,
+                          bits=pt.bits, terminal=pt.terminal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=_default_interpret(interpret),
+    )(pos_a.astype(jnp.int32), pos_b.astype(jnp.int32),
+      jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
+      s_rows, s_rows, s_rows, s_rows)
     return out[:, 0]

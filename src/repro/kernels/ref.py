@@ -13,10 +13,15 @@ import jax.numpy as jnp
 from repro.core.packing import (  # noqa: F401  (canonical shared impls)
     PACK_WEIGHTS,
     PackedText,
+    extract_sym,
     flip_sign,
     gather_pack as range_gather_pack_ref,
     gather_pack_dense as range_gather_packed_ref,
+    gather_words_dense as range_gather_words_ref,
+    lcp_words,
+    lcp_words_limited,
     pack_words as pack_words_ref,
+    word_limit,
 )
 
 
@@ -56,6 +61,76 @@ def pattern_probe_packed_ref(pt: PackedText, pos: jax.Array,
     w = pat_words.shape[1] * 4
     sw = range_gather_packed_ref(pt, pos, w) & mask_words
     return probe_compare_ref(sw, pat_words)
+
+
+def probe_words_ref(sw: jax.Array, pat_words: jax.Array, lim_s: jax.Array,
+                    lim_p: jax.Array, cmp_len: jax.Array,
+                    bits: int) -> jax.Array:
+    """Word-compare probe verdict (shared tail of the word probes).
+
+    sw / pat_words: (B, NW) uint32 substituted dense rows, BOTH masked to
+    the per-row compare length ``cmp_len`` (the pattern length for the
+    query probe, the window width for matching stats); lim_s / lim_p:
+    per-row terminal limits — ``n_real - pos`` for the suffix side, the
+    first-terminal index for a terminal-padded window.  The rules:
+
+    * a difference below both (in-range) limits is a real symbol
+      difference — its sign is the verdict;
+    * otherwise the side whose limit falls INSIDE the compared region
+      holds ``$`` there first and is larger;
+    * limits at or past ``cmp_len`` never participate: the comparison
+      ended in masked-equal region, so such rows compare equal (0).
+    """
+    spw = 32 // bits
+    nw = sw.shape[-1]
+    big = nw * spw  # past every masked difference and every in-range limit
+    ls = jnp.where(lim_s < cmp_len, lim_s, big)
+    lp = jnp.where(lim_p < cmp_len, lim_p, big)
+    p = lcp_words(sw, pat_words, bits)
+    idx = jnp.clip(p, 0, big - 1)
+    ca = extract_sym(sw, idx, bits)
+    cb = extract_sym(pat_words, idx, bits)
+    sym_sign = jnp.where(ca < cb, -1, 1)
+    lim_sign = jnp.where(ls < lp, 1, jnp.where(lp < ls, -1, 0))
+    return jnp.where(p < jnp.minimum(ls, lp),
+                     sym_sign, lim_sign).astype(jnp.int32)
+
+
+def pattern_probe_words_ref(pt: PackedText, pos: jax.Array,
+                            pat_dense: jax.Array, mask_dense: jax.Array,
+                            lengths: jax.Array,
+                            lim_p: jax.Array | None = None) -> jax.Array:
+    """Word-parallel :func:`pattern_probe_packed_ref`: compare k-bit
+    pattern words against shifted text words directly — no byte repack.
+
+    pat_dense / mask_dense: (B, NW) uint32 dense pattern rows packed by
+    :func:`repro.core.packing.pack_pattern_dense` and the matching
+    all-ones-field masks (zero past each compare length); lengths: (B,)
+    int32 per-row compare lengths (the pattern length for the query
+    probe, the window width for matching stats); lim_p: the pattern
+    side's first-terminal index when it carries a terminal-padded tail
+    (matching-stats windows) — defaults to ``lengths``, i.e. no pattern
+    terminal inside the compared region.  Bit-identical verdicts to the
+    byte probe for real-symbol patterns (``tests/test_packed.py``).
+    """
+    w = pat_dense.shape[1] * (32 // pt.bits)
+    sw = range_gather_words_ref(pt, pos, w) & mask_dense
+    lim_s = pt.n_real - pos.astype(jnp.int32)
+    if lim_p is None:
+        lim_p = lengths
+    return probe_words_ref(sw, pat_dense, lim_s, lim_p, lengths, pt.bits)
+
+
+def suffix_lcp_words_ref(pt: PackedText, pos_a: jax.Array,
+                         pos_b: jax.Array, w: int) -> jax.Array:
+    """Word-parallel suffix-pair LCP: first differing dense word via XOR,
+    symbol offset via count-leading-zeros, capped by both terminal
+    limits.  Equals the byte symbol scan for distinct suffixes."""
+    a = range_gather_words_ref(pt, pos_a, w)
+    b = range_gather_words_ref(pt, pos_b, w)
+    la = word_limit(pt.n_real, pos_a, w)
+    lb = word_limit(pt.n_real, pos_b, w)
+    return lcp_words_limited(a, b, la, lb, w, pt.bits)
 
 
 def kmer_histogram_ref(s: jax.Array, n: int, k: int, base: int) -> jax.Array:

@@ -18,7 +18,13 @@ from repro.core.api import EraConfig, EraIndexer
 from repro.core.build import bucket_pad_widths, pad_width
 from repro.core.query import DeviceIndex
 from repro.kernels import ref as kref
-from repro.kernels.packed_gather import pattern_probe_packed, range_gather_packed
+from repro.kernels.packed_gather import (
+    pattern_probe_packed,
+    pattern_probe_words,
+    range_gather_packed,
+    range_gather_words,
+    suffix_lcp_words,
+)
 
 ALPHAS = [DNA, PROTEIN_CLASS, PROTEIN, BYTE]
 
@@ -277,8 +283,8 @@ class TestBucketedNodeBuild:
         rng = np.random.default_rng(7)
         freqs = np.concatenate([rng.integers(1, 9, 40),
                                 rng.integers(50, 300, 6), [4000]])
-        buckets = bucket_pad_widths(freqs)
-        assert 1 <= len(buckets) <= 3
+        buckets = bucket_pad_widths(freqs)  # histogram-driven auto count
+        assert len(buckets) >= 1
         seen = np.sort(np.concatenate([idx for _, idx in buckets]))
         np.testing.assert_array_equal(seen, np.arange(len(freqs)))
         widths = [w for w, _ in buckets]
@@ -287,19 +293,62 @@ class TestBucketedNodeBuild:
             assert w == pad_width(int(freqs[idx].max()))  # exact, no over-pad
             assert all(pad_width(int(freqs[i])) <= w for i in idx)
 
+    def test_bucket_legacy_cap(self):
+        """An explicit integer max_buckets keeps the PR-4 semantics."""
+        rng = np.random.default_rng(7)
+        freqs = np.concatenate([rng.integers(1, 9, 40),
+                                rng.integers(50, 300, 6), [4000]])
+        buckets = bucket_pad_widths(freqs, max_buckets=3)
+        assert 1 <= len(buckets) <= 3
+        seen = np.sort(np.concatenate([idx for _, idx in buckets]))
+        np.testing.assert_array_equal(seen, np.arange(len(freqs)))
+
+    def test_auto_objective_never_worse_than_capped(self):
+        """The auto tuner minimizes padded cells PLUS the per-bucket
+        dispatch overhead, so ITS objective is never worse than any
+        legacy fixed-cap partition's (raw cells alone can be: a merge
+        that wastes fewer cells than one dispatch costs is a win)."""
+        from repro.core.build import BUCKET_OVERHEAD_CELLS
+
+        rng = np.random.default_rng(13)
+        objective = lambda bs: (sum(w * len(idx) for w, idx in bs)
+                                + len(bs) * BUCKET_OVERHEAD_CELLS)
+        for trial in range(20):
+            freqs = np.concatenate([
+                rng.integers(1, 5, int(rng.integers(1, 300))),
+                rng.integers(30, 70, int(rng.integers(1, 20))),
+                rng.integers(900, 1100, int(rng.integers(1, 4)))])
+            auto = objective(bucket_pad_widths(freqs))
+            for cap in (1, 2, 3, 4):
+                assert auto <= objective(
+                    bucket_pad_widths(freqs, max_buckets=cap))
+
+    def test_auto_collapses_uniform_and_splits_skewed(self):
+        (w, idx), = bucket_pad_widths([5] * 200)  # uniform: one bucket
+        assert w == pad_width(5) and len(idx) == 200
+        skew = [2] * 500 + [3000]  # heavy tail: the split pays for itself
+        assert len(bucket_pad_widths(skew)) == 2
+
     def test_bucket_single_and_empty(self):
         assert bucket_pad_widths([]) == []
         (w, idx), = bucket_pad_widths([5, 5, 5])
         assert w == pad_width(5) and list(idx) == [0, 1, 2]
 
     def test_skewed_mix_builds_identical_trees(self):
-        """A skewed prefix mix exercises >= 2 buckets and must produce the
-        same trees as the serial per-prefix builder."""
+        """A skewed prefix mix makes the auto-tuner choose >= 2 buckets
+        and must produce the same trees as the serial per-prefix builder.
+        (A uniform mix collapses to one bucket by design — the skew is
+        planted so the multi-bucket path actually runs.)"""
         from repro.core.build import nodes_to_intervals
 
-        s = DNA.random_string(1500, seed=41)
+        rng = np.random.default_rng(41)
+        s = np.concatenate([
+            np.zeros(2500, np.uint8),  # long 'A' run -> one huge prefix
+            rng.integers(0, 4, size=1200).astype(np.uint8),
+            [DNA.terminal_code],
+        ]).astype(np.uint8)
         mk = lambda c: EraIndexer(DNA, EraConfig(
-            memory_bytes=8192, r_bytes=128, build_impl="numpy",
+            memory_bytes=64 << 10, r_bytes=128, build_impl="numpy",
             construction=c)).build(s)
         ser, bat = mk("serial"), mk("batched")
         freqs = [st.freq for _, st in sorted(bat.subtrees.items())]
@@ -307,3 +356,222 @@ class TestBucketedNodeBuild:
         for p in ser.subtrees:
             assert nodes_to_intervals(ser.subtrees[p].nodes) == \
                 nodes_to_intervals(bat.subtrees[p].nodes)
+
+
+class TestWordCompareKernels:
+    """PR 5 word-compare kernel family vs its jnp oracles (interpret mode)."""
+
+    @pytest.mark.parametrize("alpha,n,f,w,tile", [
+        (DNA, 900, 33, 16, 32), (DNA, 2000, 64, 64, 64),
+        (PROTEIN_CLASS, 800, 21, 32, 64), (BYTE, 500, 16, 8, 32),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_range_gather_words_matches_ref(self, alpha, n, f, w, tile):
+        rng = np.random.default_rng(n + f)
+        s = alpha.random_string(n, seed=n)
+        pt = packing.pack_text(s, alpha, extra=w + 8)
+        offs = np.concatenate([
+            rng.integers(0, n, size=f),
+            [n - 2, n - 1, n],  # virtual-terminal tail
+        ]).astype(np.int32)
+        got = range_gather_words(pt, jnp.asarray(offs), w, tile=tile,
+                                 interpret=True)
+        want = kref.range_gather_words_ref(pt, jnp.asarray(offs), w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_word_tile_boundary_straddle(self):
+        tile = 32
+        s = DNA.random_string(3 * 32 * 16, seed=8)
+        pt = packing.pack_text(s, DNA, extra=72)
+        spw = pt.syms_per_word
+        offs = np.array([tile * spw - 1, tile * spw - 17, tile * spw,
+                         2 * tile * spw - 3], np.int32)
+        got = range_gather_words(pt, jnp.asarray(offs), 64, tile=tile,
+                                 interpret=True)
+        want = kref.range_gather_words_ref(pt, jnp.asarray(offs), 64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("alpha,n,b,m", [
+        (DNA, 400, 25, 4), (DNA, 900, 40, 16),
+        (PROTEIN_CLASS, 700, 33, 8), (BYTE, 500, 16, 12),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_pattern_probe_words_matches_byte_oracle(self, alpha, n, b, m):
+        """The word probe must agree with BOTH its own jnp ref and the
+        byte probe oracle, terminal tail positions included."""
+        rng = np.random.default_rng(n + b)
+        s = alpha.random_string(n, seed=n)
+        pt = packing.pack_text(s, alpha, extra=32)
+        sp = alpha.pad_string(s, extra=32)
+        pos = np.concatenate([rng.integers(0, n, size=b - 5),
+                              rng.integers(max(0, n - m), n + 1, 5)]
+                             ).astype(np.int32)
+        m_pad = -(-m // 4) * 4
+        lengths = rng.integers(1, m + 1, size=len(pos)).astype(np.int32)
+        sym = rng.integers(0, len(alpha.symbols),
+                           size=(len(pos), m_pad)).astype(np.int32)
+        for i in range(0, len(pos), 3):  # plant exact matches (verdict 0)
+            j = int(rng.integers(0, n - m_pad))
+            sym[i] = sp[j : j + m_pad]
+            pos[i] = j
+        valid = np.arange(m_pad)[None, :] < lengths[:, None]
+        pat_b = kref.pack_words_ref(jnp.asarray(np.where(valid, sym, 0)))
+        mask_b = kref.pack_words_ref(jnp.asarray(np.where(valid, 0xFF, 0)))
+        want = kref.pattern_probe_ref(jnp.asarray(sp), jnp.asarray(pos),
+                                      pat_b, mask_b)
+
+        bits = pt.bits
+        pat_d = packing.pack_pattern_dense(
+            jnp.asarray(np.where(valid, sym, 0)), bits, pt.terminal)
+        mask_d = packing.pack_dense(
+            jnp.asarray(np.where(valid, (1 << bits) - 1, 0)), bits)
+        ref_w = kref.pattern_probe_words_ref(pt, jnp.asarray(pos), pat_d,
+                                             mask_d, jnp.asarray(lengths))
+        got = pattern_probe_words(pt, jnp.asarray(pos), pat_d, mask_d,
+                                  jnp.asarray(lengths), tile=64,
+                                  interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref_w), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("alpha,n,b,w", [
+        (DNA, 900, 40, 16), (DNA, 2000, 64, 64),
+        (PROTEIN_CLASS, 700, 33, 32), (BYTE, 500, 16, 8),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_suffix_lcp_words_matches_byte_oracle(self, alpha, n, b, w):
+        rng = np.random.default_rng(n * b + w)
+        s = alpha.random_string(n, seed=n)
+        pt = packing.pack_text(s, alpha, extra=w + 8)
+        sp = alpha.pad_string(s, extra=w + 8)
+        pos_a = rng.integers(0, n, size=b).astype(np.int32)
+        # deep-LCP pairs: nearby offsets in a repetitive region
+        pos_b = np.where(rng.random(b) < 0.5,
+                         np.clip(pos_a + rng.integers(1, 4, b), 0, n),
+                         rng.integers(0, n, size=b)).astype(np.int32)
+        keep = pos_a != pos_b
+        pos_a, pos_b = pos_a[keep], pos_b[keep]
+        want = kref.suffix_lcp_pairs_ref(jnp.asarray(sp), jnp.asarray(pos_a),
+                                         jnp.asarray(pos_b), w)
+        ref_w = kref.suffix_lcp_words_ref(pt, jnp.asarray(pos_a),
+                                          jnp.asarray(pos_b), w)
+        got = suffix_lcp_words(pt, jnp.asarray(pos_a), jnp.asarray(pos_b), w,
+                               tile=64, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref_w), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_lcp_adjacent_words_matches_byte_lcp_adjacent(self):
+        """The elastic-sort divergence stage: word keys + limits must give
+        the byte path's (lcp, c1, c2), terminal divergences included."""
+        from repro.core.prepare import lcp_adjacent
+
+        for alpha in (DNA, PROTEIN_CLASS, BYTE):
+            rng = np.random.default_rng(3)
+            n, w = 700, 16
+            s = alpha.random_string(n, seed=17)
+            pt = packing.pack_text(s, alpha, extra=w + 8)
+            sp = alpha.pad_string(s, extra=w + 8)
+            # distinct sorted offsets: the contract covers distinct
+            # suffixes only (equal positions tie-break via limits, which
+            # the byte rows resolve by continuing through equal padding)
+            offs = np.unique(np.concatenate([
+                rng.integers(0, n, 60), [n - 3, n - 1, n]])).astype(np.int32)
+            byte_keys = packing.gather_pack(jnp.asarray(sp),
+                                            jnp.asarray(offs), w)
+            lcp_b, c1_b, c2_b = lcp_adjacent(byte_keys, w)
+            keys = packing.gather_words_dense(pt, jnp.asarray(offs), w)
+            lim = packing.word_limit(pt.n_real, jnp.asarray(offs), w)
+            prev = jnp.concatenate([keys[:1], keys[:-1]], axis=0)
+            prev_lim = jnp.concatenate([lim[:1], lim[:-1]])
+            lcp_w, c1_w, c2_w = packing.lcp_adjacent_words(
+                prev, keys, prev_lim, lim, w, pt.bits, pt.terminal)
+            # entry 0 compares a row against itself — garbage in both
+            # paths by contract, callers mask it
+            for bb, ww in ((lcp_b, lcp_w), (c1_b, c1_w), (c2_b, c2_w)):
+                np.testing.assert_array_equal(np.asarray(bb)[1:],
+                                              np.asarray(ww)[1:],
+                                              err_msg=alpha.name)
+
+
+class TestWordCompareEndToEnd:
+    """The word-compare path (default for dense text) vs the byte-key
+    comparison oracle (REPRO_WORD_COMPARE=byte): construction arrays,
+    find_batch, matching statistics and the global LCP must be
+    bit-identical across all four alphabets."""
+
+    @staticmethod
+    def _dense_indexer(alpha, mem):
+        return EraIndexer(alpha, EraConfig(
+            memory_bytes=mem, r_bytes=128, build_impl="none",
+            packing="dense"))
+
+    @pytest.mark.parametrize("alpha,n,mem", [
+        (DNA, 900, 2048), (PROTEIN_CLASS, 700, 4096), (PROTEIN, 600, 4096),
+        (BYTE, 500, 4096),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_construction_word_vs_byte_compare(self, alpha, n, mem,
+                                               monkeypatch):
+        s = alpha.random_string(n, seed=n + 7)
+        monkeypatch.setenv("REPRO_WORD_COMPARE", "byte")
+        idx_byte = self._dense_indexer(alpha, mem).build(s)
+        monkeypatch.setenv("REPRO_WORD_COMPARE", "word")
+        idx_word = self._dense_indexer(alpha, mem).build(s)
+        assert set(idx_byte.subtrees) == set(idx_word.subtrees)
+        for p in idx_byte.subtrees:
+            for field in ("ell", "b_off", "b_c1", "b_c2"):
+                np.testing.assert_array_equal(
+                    getattr(idx_byte.subtrees[p], field),
+                    getattr(idx_word.subtrees[p], field),
+                    err_msg=f"{alpha.name} prefix={p} field={field}")
+
+    @pytest.mark.parametrize("alpha,n,mem", [
+        (DNA, 900, 2048), (PROTEIN_CLASS, 700, 4096), (PROTEIN, 600, 4096),
+        (BYTE, 500, 4096),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_find_batch_word_vs_byte_compare(self, alpha, n, mem,
+                                             monkeypatch):
+        s = alpha.random_string(n, seed=n + 9)
+        idx = self._dense_indexer(alpha, mem).build(s)
+        dev = idx.to_device(packing="dense")
+        assert dev.packed
+        rng = np.random.default_rng(4)
+        pats = [np.asarray(s[i : i + m]) for i, m in zip(
+            rng.integers(0, n - 20, 20), rng.integers(1, 17, 20))]
+        pats += [rng.integers(0, len(alpha.symbols), size=int(m)
+                              ).astype(np.uint8)
+                 for m in rng.integers(1, 9, 8)]
+        monkeypatch.setenv("REPRO_WORD_COMPARE", "byte")
+        res_byte = dev.find_batch(pats)
+        monkeypatch.setenv("REPRO_WORD_COMPARE", "word")
+        res_word = dev.find_batch(pats)
+        for a, b, p in zip(res_word, res_byte, pats):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, idx.find(p))
+
+    def test_terminal_pattern_falls_back_to_byte_probe(self):
+        """A (degenerate) pattern carrying the terminal sentinel code must
+        still resolve — the word path declines it and the byte-key probe
+        serves the batch."""
+        s = DNA.random_string(400, seed=77)
+        idx = self._dense_indexer(DNA, 2048).build(s)
+        dev = idx.to_device(packing="dense")
+        pats = [np.asarray(s[10:16]),
+                np.array([0, DNA.terminal_code], np.uint8)]
+        got = dev.find_batch(pats)
+        np.testing.assert_array_equal(got[0], idx.find(pats[0]))
+        np.testing.assert_array_equal(got[1], idx.find(pats[1]))
+
+    @pytest.mark.parametrize("alpha", [DNA, PROTEIN_CLASS, BYTE],
+                             ids=lambda a: a.name)
+    def test_matching_stats_and_global_lcp(self, alpha, monkeypatch):
+        s = alpha.random_string(800, seed=23)
+        idx = self._dense_indexer(alpha, 4096).build(s)
+        monkeypatch.setenv("REPRO_WORD_COMPARE", "byte")
+        eng_byte = idx.analytics(packing="dense")
+        rng = np.random.default_rng(6)
+        q = np.concatenate([s[100:180],
+                            rng.integers(0, len(alpha.symbols),
+                                         size=60).astype(np.uint8)])
+        ms_b, wit_b = eng_byte.matching_stats(q, window=48)
+        monkeypatch.setenv("REPRO_WORD_COMPARE", "word")
+        eng_word = idx.analytics(packing="dense")
+        ms_w, wit_w = eng_word.matching_stats(q, window=48)
+        np.testing.assert_array_equal(eng_byte.lcp_host, eng_word.lcp_host)
+        np.testing.assert_array_equal(ms_b, ms_w)
+        np.testing.assert_array_equal(wit_b, wit_w)

@@ -7,14 +7,16 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import ref
-from repro.core.alphabet import DNA, PROTEIN
+from repro.core import packing, ref
+from repro.core.alphabet import BYTE, DNA, PROTEIN, PROTEIN_CLASS
 from repro.core.api import EraConfig, EraIndexer
 from repro.core.prepare import pack_words
-from repro.kernels.ref import pack_words_ref
+from repro.kernels.ref import pack_words_ref, suffix_lcp_words_ref
 from repro.runtime.scheduler import WorkQueue
 
 SETTINGS = dict(max_examples=25, deadline=None)
+
+WORD_ALPHAS = [DNA, PROTEIN_CLASS, PROTEIN, BYTE]
 
 
 @st.composite
@@ -86,6 +88,61 @@ class TestPackingOrder:
         np.testing.assert_array_equal(
             np.asarray(pack_words(jnp.asarray(sym))),
             np.asarray(pack_words_ref(jnp.asarray(sym))))
+
+
+class TestDensePackingProperties:
+    """PR 5 word-compare engine invariants: dense round-trips and the
+    XOR+clz word LCP vs a naive symbol scan, across all density tiers
+    (2-bit DNA, 4-bit protein classes, 8-bit protein/byte)."""
+
+    @given(data=st.data())
+    @settings(**SETTINGS)
+    def test_pack_unpack_text_roundtrip(self, data):
+        alpha = data.draw(st.sampled_from(WORD_ALPHAS))
+        n = data.draw(st.integers(1, 300))
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        extra = data.draw(st.integers(0, 64))
+        s = alpha.random_string(n, seed=seed)
+        pt = packing.pack_text(s, alpha, extra=extra)
+        np.testing.assert_array_equal(packing.unpack_text(pt), s)
+
+    @given(data=st.data())
+    @settings(**SETTINGS)
+    def test_pack_dense_extract_sym_roundtrip(self, data):
+        alpha = data.draw(st.sampled_from(WORD_ALPHAS))
+        bits = alpha.dense_bits
+        m = data.draw(st.integers(1, 40))
+        sym = np.array(data.draw(st.lists(
+            st.integers(0, len(alpha.symbols) - 1), min_size=m, max_size=m)),
+            np.int32)
+        words = packing.pack_dense(jnp.asarray(sym[None, :]), bits)
+        for i in range(m):
+            got = packing.extract_sym(words, jnp.asarray([i], jnp.int32),
+                                      bits)
+            assert int(np.asarray(got)[0]) == int(sym[i])
+
+    @given(data=st.data())
+    @settings(**SETTINGS)
+    def test_word_lcp_equals_naive_symbol_lcp(self, data):
+        """XOR + count-leading-zeros + terminal limits == symbol scan."""
+        alpha = data.draw(st.sampled_from(WORD_ALPHAS))
+        n = data.draw(st.integers(8, 200))
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        w = data.draw(st.sampled_from([4, 16, 32]))
+        s = alpha.random_string(n, seed=seed)
+        pt = packing.pack_text(s, alpha, extra=w + 8)
+        sp = alpha.pad_string(s, extra=w + 8)
+        pos_a = data.draw(st.integers(0, n))
+        pos_b = data.draw(st.integers(0, n))
+        if pos_a == pos_b:  # contract covers distinct suffixes
+            pos_b = (pos_b + 1) % (n + 1)
+        got = int(np.asarray(suffix_lcp_words_ref(
+            pt, jnp.asarray([pos_a], jnp.int32),
+            jnp.asarray([pos_b], jnp.int32), w))[0])
+        h = 0
+        while h < w and sp[pos_a + h] == sp[pos_b + h]:
+            h += 1
+        assert got == h
 
 
 class TestSchedulerInvariants:
