@@ -14,12 +14,14 @@ bench:
 
 # Record the per-PR perf trajectory: one smoke pass, rows written to
 # BENCH_$(PR).json at the repo root (commit it with the PR so the next
-# PR's regression check has a baseline).  Example: make bench-smoke PR=PR5
+# PR's regression check has a baseline).  Example: make bench-smoke PR=PR6
+# — uppercase PR<n>, the same scheme CI's record step uses.
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke --json BENCH_$(PR).json
 
 # Compare a fresh smoke run against the newest committed BENCH_*.json:
-# warns on >20% throughput drops in the packed/query rows.
+# warns on >20% throughput drops in the packed/query/serve rows
+# (construction rows report warn-only).
 bench-check:
 	$(PY) -m benchmarks.run --smoke --json bench-results.json
 	$(PY) -m benchmarks.check_regression --current bench-results.json

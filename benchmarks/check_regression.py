@@ -10,8 +10,9 @@ current run against the most recent committed artifact:
     python -m benchmarks.check_regression \
         --baseline BENCH_PR4.json --current BENCH_PR5.json --strict
 
-Only the device-hot suites are gated (``packed/`` and ``query/`` rows —
-bench_packed / bench_query): a row whose ``us_per_call`` grew more than
+Only the device-hot suites are gated (``packed/``, ``query/`` and
+``serve/`` rows; ``build/`` rows are compared warn-only): a row whose
+``us_per_call`` grew more than
 ``--threshold`` (default 20%) over the baseline is reported as a
 throughput drop.  Exit status is 0 unless ``--strict`` (warn-by-default:
 CI runners are noisy; the signal is the printed table and the committed
@@ -28,7 +29,10 @@ import re
 import sys
 
 # suites gated for regressions (prefix of the row name)
-WATCH_PREFIXES = ("packed/", "query/")
+WATCH_PREFIXES = ("packed/", "query/", "serve/")
+# suites compared and reported but NEVER escalated to drops — construction
+# timings are dominated by host-side build work and too noisy to gate
+WARN_PREFIXES = ("build/",)
 
 
 def load_rows(path: str) -> dict[str, float]:
@@ -60,11 +64,16 @@ def latest_baseline(root: str = ".") -> str | None:
 
 def compare(base: dict[str, float], cur: dict[str, float],
             threshold: float) -> tuple[list[str], list[str]]:
-    """(drops, notes): warning lines for watched regressions + info lines."""
+    """(drops, notes): warning lines for watched regressions + info lines.
+
+    Rows under ``WARN_PREFIXES`` are compared and reported (prefixed
+    ``warn`` when past threshold) but land in ``notes`` — they never fail
+    a ``--strict`` run."""
     drops: list[str] = []
     notes: list[str] = []
     for name in sorted(set(base) & set(cur)):
-        if not name.startswith(WATCH_PREFIXES):
+        gated = name.startswith(WATCH_PREFIXES)
+        if not gated and not name.startswith(WARN_PREFIXES):
             continue
         b, c = base[name], cur[name]
         if b <= 0:
@@ -72,7 +81,10 @@ def compare(base: dict[str, float], cur: dict[str, float],
         ratio = c / b
         line = f"{name}: {b:.1f}us -> {c:.1f}us ({ratio:.2f}x)"
         if ratio > 1 + threshold:
-            drops.append(line)
+            if gated:
+                drops.append(line)
+            else:
+                notes.append(f"warn  {line}")
         else:
             notes.append(line)
     missing = [n for n in sorted(base) if n.startswith(WATCH_PREFIXES)

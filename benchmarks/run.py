@@ -39,7 +39,9 @@ def main() -> None:
                          "suite errored")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all emitted rows to PATH as JSON")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run a subset of suites (comma-separated, e.g. "
+                         "--only query,packed)")
     args = ap.parse_args()
     quick = not args.full or args.smoke
 
@@ -73,13 +75,17 @@ def main() -> None:
         "analytics": bench_analytics.run,
         "packed": bench_packed.run,
     }
-    if args.only and args.only not in suites:
-        ap.error(f"unknown suite {args.only!r}; choose from {sorted(suites)}")
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(suites)
+        if unknown:
+            ap.error(f"unknown suite(s) {sorted(unknown)}; "
+                     f"choose from {sorted(suites)}")
     common.RESULTS.clear()  # in-process reruns must not accumulate rows
     print("name,us_per_call,derived")
     errors: list[str] = []
     for key, fn in suites.items():
-        if args.only and key != args.only:
+        if only and key not in only:
             continue
         try:
             if "quick" in inspect.signature(fn).parameters:

@@ -110,6 +110,32 @@ def main():
         assert np.array_equal(a, b)
     print("word-compare probes agree with the byte-key oracle ✓")
 
+    # 5e. sustained serving: repro.launch.serving turns the single-batch
+    #     engine into a continuous-batching server.  Requests are admitted
+    #     into a bounded queue (overflow is rejected and counted), drained
+    #     into pow2-bucketed padded batches, and dispatched WITHOUT
+    #     blocking — JAX's async dispatch lets the host pad/pack batch k+1
+    #     while the device searches batch k; results only synchronize at
+    #     consume time (np.asarray), one dispatch behind.  A hot-prefix
+    #     RouteCache (keyed on the dense top-trie route + exact pattern)
+    #     memoizes materialized responses so the head of a skewed query
+    #     distribution skips search AND result assembly, byte-identically.
+    #     ServeConfig knobs read REPRO_SERVE_* env vars (queue depth, max
+    #     batch, cache size, fused-fetch width, pipeline on/off); fetch>0
+    #     returns a text window per match via the fused probe+gather
+    #     kernel — one launch to verify the match and fetch its context.
+    #     Caveats: the pipeline only overlaps while ≥2 batches are in the
+    #     system, and cache hits land one batch late (a dispatch is in
+    #     flight when its predecessor's results are consumed).
+    from repro.launch.serving import ServeConfig, run_closed_loop
+    stream = [s[i : i + 12] for i in (100, 2_000, 100, 30_000, 100, 2_000)]
+    served, stats = run_closed_loop(
+        dev, stream, ServeConfig(pipeline=True, cache_size=256, max_batch=2))
+    for (pos, _), p in zip(served, stream):
+        assert np.array_equal(pos, idx.find(p))
+    print(f"continuous-batching server agrees ✓ ({stats['batches']} batches, "
+          f"cache hit rate {stats['cache']['hit_rate']:.0%})")
+
     # 6. analytics: the global LCP array over the flattened index unlocks
     #    substring analytics beyond exact search (repro.core.analytics)
     eng = idx.analytics()

@@ -41,6 +41,10 @@ from repro.kernels.packed_gather import (
     suffix_lcp_words as _words_lcp_pallas,
 )
 from repro.kernels.pattern_probe import pattern_probe as _probe_pallas
+from repro.kernels.probe_gather import (
+    probe_gather_packed as _fused_packed_pallas,
+    probe_gather_words as _fused_words_pallas,
+)
 from repro.kernels.range_gather import range_gather_pack as _gather_pallas
 from repro.kernels.suffix_lcp import suffix_lcp_pairs as _suffix_lcp_pallas
 
@@ -182,3 +186,55 @@ def pattern_probe_words(pt: PackedText, pos, pat_dense, mask_dense, lengths,
                         lim_p=None):
     return pattern_probe_words_impl(_use_pallas())(pt, pos, pat_dense,
                                                    mask_dense, lengths, lim_p)
+
+
+def probe_gather_words_impl(use_pallas: bool):
+    """Fused find-and-fetch (word currency) for a STATIC ``use_pallas``:
+    ``fn(pt, pos, pat_dense, mask_dense, lengths, fetch, lim_p=None) ->
+    (cmp int32[B], win uint32[B, ceil(fetch/spw)])`` — one launch for the
+    probe verdict AND the gathered dense word window (PackedText only)."""
+    def fn(pt: PackedText, pos, pat_dense, mask_dense, lengths, fetch: int,
+           lim_p=None):
+        if use_pallas:
+            return _fused_words_pallas(pt, pos, pat_dense, mask_dense,
+                                       lengths, lim_p, fetch=fetch,
+                                       interpret=not _on_tpu())
+        return _ref.probe_gather_words_ref(pt, pos, pat_dense, mask_dense,
+                                           lengths, lim_p, fetch=fetch)
+    return fn
+
+
+def probe_gather_words(pt: PackedText, pos, pat_dense, mask_dense, lengths,
+                       fetch: int, lim_p=None):
+    return probe_gather_words_impl(_use_pallas())(pt, pos, pat_dense,
+                                                  mask_dense, lengths, fetch,
+                                                  lim_p)
+
+
+def probe_gather_impl(use_pallas: bool):
+    """Fused find-and-fetch (byte-key currency) for a STATIC ``use_pallas``:
+    ``fn(s_text, pos, pat_words, mask_words, fetch) ->
+    (cmp int32[B], keys int32[B, fetch//4])``.
+
+    Dense strings run the fused packed kernel / ref; a plain byte string
+    has no fused kernel — it runs the literal two-launch probe→gather
+    composition (which is also the fused kernels' semantic definition, so
+    results are interchangeable across representations)."""
+    def fn(s_text, pos, pat_words, mask_words, fetch: int):
+        if isinstance(s_text, PackedText):
+            if use_pallas:
+                return _fused_packed_pallas(s_text, pos, pat_words,
+                                            mask_words, fetch=fetch,
+                                            interpret=not _on_tpu())
+            return _ref.probe_gather_packed_ref(s_text, pos, pat_words,
+                                                mask_words, fetch=fetch)
+        cmp = pattern_probe_impl(use_pallas)(s_text, pos, pat_words,
+                                             mask_words)
+        win = range_gather_impl(use_pallas)(s_text, pos, fetch)
+        return cmp, win
+    return fn
+
+
+def probe_gather(s_text, pos, pat_words, mask_words, fetch: int):
+    return probe_gather_impl(_use_pallas())(s_text, pos, pat_words,
+                                            mask_words, fetch)

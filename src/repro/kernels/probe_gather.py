@@ -1,0 +1,226 @@
+"""Fused probe+gather Pallas kernels: find-and-fetch in ONE launch.
+
+A serving-shaped "find and fetch" query both *locates* a pattern's
+suffix-array range and *returns* the matched text window.  Composed from
+the existing kernel family that is two launches over the same HBM window:
+a probe (:func:`repro.kernels.packed_gather.pattern_probe_words` /
+``pattern_probe_packed``) followed by a gather
+(:func:`repro.kernels.packed_gather.range_gather_words` /
+``range_gather_packed``) at the same position — the string window is
+DMA'd twice.  These kernels fuse the two: one dense read per row feeds
+BOTH the comparison verdict and the gathered window, halving launches and
+string traffic on the serving hot path (:mod:`repro.launch.serving`).
+
+Two currencies, mirroring the probe family:
+
+* :func:`probe_gather_words`  — word-compare verdict + raw shift-aligned
+  substituted dense uint32 word rows (the PR-5 comparison currency);
+* :func:`probe_gather_packed` — byte-key verdict + big-endian
+  byte-per-symbol int32 sort-key rows (the PR-4 oracle currency).
+
+Both are bit-identical to the two-launch composition of their family's
+probe and gather kernels (the refs in :mod:`repro.kernels.ref` ARE that
+composition; ``tests/test_packed.py`` pins kernel == ref == composition
+under every oracle leg).  The fetch width is independent of the pattern
+width: the kernel reads ``max(pattern, fetch)`` symbols once and slices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import PackedText
+from repro.kernels.packed_gather import (
+    _dense_read,
+    _dense_read_words,
+    _first_diff,
+    _repack_bytes,
+)
+from repro.kernels.tiles import default_interpret as _default_interpret, stage_tiles
+
+
+def _fused_words_kernel(pos_ref, len_ref, limp_ref, nr_ref, s_lo_ref, s_hi_ref,
+                        pat_ref, mask_ref, cmp_ref, win_ref,
+                        *, tile: int, nw_pat: int, nw_out: int, bits: int,
+                        terminal: int):
+    i = pl.program_id(0)
+    spw = 32 // bits
+    nw_rd = max(nw_pat, nw_out)
+    pos = pos_ref[i]
+    sw = _dense_read_words(pos, nr_ref[0], s_lo_ref, s_hi_ref,
+                           tile=tile, nw=nw_rd, bits=bits, terminal=terminal)
+    # gather half: the first nw_out substituted words ARE what
+    # range_gather_words emits (per-word substitution is independent)
+    win_ref[0, :] = sw[:nw_out].astype(jnp.int32)
+    # probe half: identical to packed_gather._words_probe_kernel
+    big = nw_pat * spw
+    mask = jax.lax.bitcast_convert_type(mask_ref[0, :], jnp.uint32)
+    pat = jax.lax.bitcast_convert_type(pat_ref[0, :], jnp.uint32)
+    p, aw, bw, sym = _first_diff(sw[:nw_pat] & mask, pat, nw_pat, bits)
+    sh = (32 - bits * (sym + 1)).astype(jnp.uint32)
+    ones = jnp.uint32((1 << bits) - 1)
+    ca = ((aw >> sh) & ones).astype(jnp.int32)
+    cb = ((bw >> sh) & ones).astype(jnp.int32)
+    sym_sign = jnp.where(ca < cb, -1, 1)
+    cmp_len = len_ref[i]
+    ls = nr_ref[0] - pos
+    lp = limp_ref[i]
+    ls = jnp.where(ls < cmp_len, ls, big)
+    lp = jnp.where(lp < cmp_len, lp, big)
+    lim_sign = jnp.where(ls < lp, 1, jnp.where(lp < ls, -1, 0))
+    cmp_ref[0, 0] = jnp.where(p < jnp.minimum(ls, lp), sym_sign, lim_sign)
+
+
+@functools.partial(jax.jit, static_argnames=("fetch", "tile", "interpret"))
+def probe_gather_words(
+    pt: PackedText,
+    pos: jax.Array,
+    pat_dense: jax.Array,
+    mask_dense: jax.Array,
+    lengths: jax.Array,
+    lim_p: jax.Array | None = None,
+    *,
+    fetch: int,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused word-compare probe + word gather: one read, two results.
+
+    Arguments match :func:`repro.kernels.packed_gather.pattern_probe_words`
+    plus the static ``fetch`` width in symbols.  Returns
+    ``(cmp int32[B], win uint32[B, ceil(fetch/spw)])`` — ``cmp`` equal to
+    the probe kernel, ``win`` equal to ``range_gather_words(pt, pos,
+    fetch)`` (oracle: :func:`repro.kernels.ref.probe_gather_words_ref`).
+    """
+    b, nw_pat = pat_dense.shape
+    spw = pt.syms_per_word
+    nw_out = -(-fetch // spw)
+    nw_rd = max(nw_pat, nw_out)
+    assert mask_dense.shape == (b, nw_pat) and pos.shape == (b,)
+    assert nw_rd + 1 <= tile, (nw_rd, pt.bits, tile)
+    if lim_p is None:
+        lim_p = lengths
+    s_rows, _ = stage_tiles(pt.words, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref:
+                         ((pos_ref[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref:
+                         ((pos_ref[i] // spw) // tile + 1, 0)),
+            pl.BlockSpec((1, nw_pat),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref: (i, 0)),
+            pl.BlockSpec((1, nw_pat),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref: (i, 0)),
+            pl.BlockSpec((1, nw_out),
+                         lambda i, pos_ref, len_ref, limp_ref, nr_ref: (i, 0)),
+        ),
+    )
+    cmp, win = pl.pallas_call(
+        functools.partial(_fused_words_kernel, tile=tile, nw_pat=nw_pat,
+                          nw_out=nw_out, bits=pt.bits, terminal=pt.terminal),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((b, nw_out), jnp.int32)),
+        interpret=_default_interpret(interpret),
+    )(pos.astype(jnp.int32), lengths.astype(jnp.int32),
+      lim_p.astype(jnp.int32),
+      jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
+      s_rows, s_rows,
+      jax.lax.bitcast_convert_type(pat_dense, jnp.int32),
+      jax.lax.bitcast_convert_type(mask_dense, jnp.int32))
+    return cmp[:, 0], jax.lax.bitcast_convert_type(win, jnp.uint32)
+
+
+def _fused_packed_kernel(pos_ref, nr_ref, s_lo_ref, s_hi_ref, pat_ref,
+                         mask_ref, cmp_ref, win_ref,
+                         *, tile: int, w_pat: int, w_out: int, bits: int,
+                         terminal: int):
+    i = pl.program_id(0)
+    w_rd = max(w_pat, w_out)
+    sym = _dense_read(pos_ref[i], nr_ref[0], s_lo_ref, s_hi_ref,
+                      tile=tile, w=w_rd, bits=bits, terminal=terminal)
+    words = _repack_bytes(sym, w_rd)
+    # gather half: first w_out // 4 byte-key words == range_gather_packed
+    win_ref[0, :] = words[: w_out // 4]
+    # probe half: identical to packed_gather._probe_kernel
+    n_words = w_pat // 4
+    pat = pat_ref[0, :]
+    sw = words[:n_words] & mask_ref[0, :]
+    neq = sw != pat
+    iota = jax.lax.iota(jnp.int32, n_words)
+    first = jnp.min(jnp.where(neq, iota, n_words))
+    sel = iota == first
+    sign = jnp.int32(-(1 << 31))
+    a = jnp.sum(jnp.where(sel, sw, 0)) ^ sign
+    b = jnp.sum(jnp.where(sel, pat, 0)) ^ sign
+    cmp_ref[0, 0] = jnp.where(jnp.any(neq), jnp.where(a < b, -1, 1), 0)
+
+
+@functools.partial(jax.jit, static_argnames=("fetch", "tile", "interpret"))
+def probe_gather_packed(
+    pt: PackedText,
+    pos: jax.Array,
+    pat_words: jax.Array,
+    mask_words: jax.Array,
+    *,
+    fetch: int,
+    tile: int = 2048,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused byte-key probe + byte-key gather over dense storage.
+
+    Arguments match :func:`repro.kernels.packed_gather.pattern_probe_packed`
+    plus the static ``fetch`` width (symbols, multiple of 4).  Returns
+    ``(cmp int32[B], keys int32[B, fetch//4])`` — ``cmp`` equal to the
+    packed probe, ``keys`` equal to ``range_gather_packed(pt, pos, fetch)``
+    (oracle: :func:`repro.kernels.ref.probe_gather_packed_ref`).
+    """
+    assert fetch % 4 == 0, fetch
+    b, n_words = pat_words.shape
+    w_pat = n_words * 4
+    spw = pt.syms_per_word
+    nw_rd = -(-max(w_pat, fetch) // spw)
+    assert mask_words.shape == (b, n_words) and pos.shape == (b,)
+    assert nw_rd + 1 <= tile, (nw_rd, pt.bits, tile)
+    s_rows, _ = stage_tiles(pt.words, tile)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, nr_ref: ((pos_ref[i] // spw) // tile, 0)),
+            pl.BlockSpec((1, tile),
+                         lambda i, pos_ref, nr_ref: ((pos_ref[i] // spw) // tile + 1, 0)),
+            pl.BlockSpec((1, n_words), lambda i, pos_ref, nr_ref: (i, 0)),
+            pl.BlockSpec((1, n_words), lambda i, pos_ref, nr_ref: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda i, pos_ref, nr_ref: (i, 0)),
+            pl.BlockSpec((1, fetch // 4), lambda i, pos_ref, nr_ref: (i, 0)),
+        ),
+    )
+    cmp, win = pl.pallas_call(
+        functools.partial(_fused_packed_kernel, tile=tile, w_pat=w_pat,
+                          w_out=fetch, bits=pt.bits, terminal=pt.terminal),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((b, fetch // 4), jnp.int32)),
+        interpret=_default_interpret(interpret),
+    )(pos.astype(jnp.int32), jnp.reshape(pt.n_real, (1,)).astype(jnp.int32),
+      s_rows, s_rows, pat_words, mask_words)
+    return cmp[:, 0], win

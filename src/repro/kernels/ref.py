@@ -121,6 +121,32 @@ def pattern_probe_words_ref(pt: PackedText, pos: jax.Array,
     return probe_words_ref(sw, pat_dense, lim_s, lim_p, lengths, pt.bits)
 
 
+def probe_gather_words_ref(pt: PackedText, pos: jax.Array,
+                           pat_dense: jax.Array, mask_dense: jax.Array,
+                           lengths: jax.Array,
+                           lim_p: jax.Array | None = None, *,
+                           fetch: int) -> tuple[jax.Array, jax.Array]:
+    """Fused word probe + word gather oracle: BY DEFINITION the two-launch
+    composition (:func:`pattern_probe_words_ref` then
+    :func:`range_gather_words_ref` at the same positions) the fused kernel
+    (:mod:`repro.kernels.probe_gather`) must match bit-for-bit."""
+    cmp = pattern_probe_words_ref(pt, pos, pat_dense, mask_dense,
+                                  lengths, lim_p)
+    win = range_gather_words_ref(pt, pos, fetch)
+    return cmp, win
+
+
+def probe_gather_packed_ref(pt: PackedText, pos: jax.Array,
+                            pat_words: jax.Array, mask_words: jax.Array, *,
+                            fetch: int) -> tuple[jax.Array, jax.Array]:
+    """Fused byte-key probe + gather oracle: the two-launch composition
+    (:func:`pattern_probe_packed_ref` then :func:`range_gather_packed_ref`)
+    the fused packed kernel must match bit-for-bit."""
+    cmp = pattern_probe_packed_ref(pt, pos, pat_words, mask_words)
+    win = range_gather_packed_ref(pt, pos, fetch)
+    return cmp, win
+
+
 def suffix_lcp_words_ref(pt: PackedText, pos_a: jax.Array,
                          pos_b: jax.Array, w: int) -> jax.Array:
     """Word-parallel suffix-pair LCP: first differing dense word via XOR,

@@ -84,10 +84,16 @@ def serve_queries(dataset_name: str = "dna", *, n: int = 100_000,
                              n_symbols=len(alphabet.symbols))
         batches.append(dev.pad_batch(pats))
 
-    # warmup: one compile per padded width in the mix
+    # warmup: one compile per padded width in the mix, SYNCED per width —
+    # blocking only on the last batch would let earlier widths still be
+    # compiling/dispatching when the timed loop starts
+    warmed: set[int] = set()
     for padded, lengths, route in batches:
+        if padded.shape[1] in warmed:
+            continue
+        warmed.add(padded.shape[1])
         start, count = dev.find_batch_ranges(padded, lengths, route)
-    jax.block_until_ready((start, count))
+        jax.block_until_ready((start, count))
 
     lat = []
     hits = 0

@@ -1,0 +1,427 @@
+"""Async continuous-batching serving stack (the ROADMAP's serving tier).
+
+:mod:`repro.launch.query_serve` measures the *engine* — pre-padded batches
+through ``find_batch_ranges``, one at a time, blocking on every call.  A
+real serving front-end sees a stream of individual variable-length
+requests and must turn them into sustained qps at bounded tail latency.
+This module adds that tier on top of :class:`repro.core.query.DeviceIndex`:
+
+* **Admission queue + continuous batch coalescing** — incoming requests
+  queue up (bounded depth, rejects counted) and the server drains up to
+  ``max_batch`` of them into the next padded batch.  Pad width and batch
+  rows are bucketed to powers of two (``DeviceIndex.pad_batch`` with
+  pinned ``m_pad``/``b_pad``), so the jit cache sees a handful of shapes
+  instead of one per arrival mix.
+* **Overlapped host/device pipeline** — JAX dispatch is asynchronous: the
+  server pads/packs and ``jax.device_put``-dispatches batch *k+1* while
+  batch *k*'s search is still executing, and only materializes (blocks
+  on) a batch's device results one dispatch later.  The hot path never
+  calls ``block_until_ready``; ``np.asarray`` at consume time is the only
+  synchronization.  ``pipeline=False`` degrades to the synchronous
+  one-batch-at-a-time baseline the benchmark compares against.
+* **Hot-prefix route cache** — a :class:`repro.core.query.RouteCache`
+  keyed on the dense top-trie route (:meth:`DeviceIndex.route_key`)
+  resolves repeated hot patterns at admission, before they cost a batch
+  row; hits skip the whole binary-search descent.  Exact-pattern keys
+  make cache-on results byte-identical to cache-off.
+
+Config knobs follow the env-var GlobalConfig idiom the kernel selection
+already uses (``REPRO_KERNELS``): every :class:`ServeConfig` field reads a
+``REPRO_SERVE_*`` variable as its default, so drivers and CI legs can
+retune the server without plumbing flags.
+
+CPU example:
+  PYTHONPATH=src python -m repro.launch.serving --dataset dna \
+      --n 100000 --requests 4096 --mode all
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.query import DeviceIndex, RouteCache
+from repro.launch.warmstart import load_or_build
+
+
+class ServeConfig:
+    """Serving knobs; each field defaults from a ``REPRO_SERVE_*`` env var
+    (the GlobalConfig idiom), keyword overrides win.
+
+    * ``queue_depth``  — admission queue capacity; arrivals past it are
+      rejected (counted, not raised) [REPRO_SERVE_QUEUE_DEPTH=1024]
+    * ``max_batch``    — most requests coalesced into one padded batch
+      [REPRO_SERVE_MAX_BATCH=256]
+    * ``max_wait_ms``  — how long admission may hold a non-full batch
+      open waiting for more arrivals (closed-loop drivers keep the queue
+      full, so this only matters under trickle load)
+      [REPRO_SERVE_MAX_WAIT_MS=1.0]
+    * ``cache_size``   — hot-prefix route cache entries, 0 disables
+      [REPRO_SERVE_CACHE=4096]
+    * ``fetch``        — text-window symbols returned per match via the
+      fused probe+gather kernel; 0 = ranges only [REPRO_SERVE_FETCH=0]
+    * ``pipeline``     — overlap dispatch of batch k+1 with consumption
+      of batch k; 0 = synchronous baseline [REPRO_SERVE_PIPELINE=1]
+    """
+
+    def __init__(self, **overrides):
+        env = os.environ.get
+        self.queue_depth = int(env("REPRO_SERVE_QUEUE_DEPTH", "1024"))
+        self.max_batch = int(env("REPRO_SERVE_MAX_BATCH", "256"))
+        self.max_wait_ms = float(env("REPRO_SERVE_MAX_WAIT_MS", "1.0"))
+        self.cache_size = int(env("REPRO_SERVE_CACHE", "4096"))
+        self.fetch = int(env("REPRO_SERVE_FETCH", "0"))
+        self.pipeline = bool(int(env("REPRO_SERVE_PIPELINE", "1")))
+        for key, val in overrides.items():
+            if not hasattr(self, key):
+                raise TypeError(f"unknown ServeConfig field {key!r}")
+            setattr(self, key, val)
+        if self.queue_depth < 1 or self.max_batch < 1:
+            raise ValueError("queue_depth and max_batch must be >= 1")
+        if self.fetch and (self.fetch % 4 or self.fetch < 0):
+            raise ValueError(f"fetch={self.fetch} must be 0 or a positive "
+                             "multiple of 4")
+
+
+class _Request:
+    __slots__ = ("rid", "pattern", "pat_max", "t_admit")
+
+    def __init__(self, rid, pattern, t_admit):
+        self.rid = rid
+        self.pattern = np.asarray(pattern, np.int32)
+        self.pat_max = int(self.pattern.max(initial=0))
+        self.t_admit = t_admit
+
+
+class _InFlight:
+    """One dispatched batch: device result handles + the bookkeeping to
+    scatter them back to requests at consume time."""
+
+    __slots__ = ("requests", "keys", "row_of", "handles", "n_rows")
+
+    def __init__(self, requests, keys, row_of, handles, n_rows):
+        self.requests = requests
+        self.keys = keys
+        self.row_of = row_of         # per-request batch row; None = cache hit
+        self.handles = handles       # device arrays (NOT blocked on yet)
+        self.n_rows = n_rows         # real rows before b_pad padding
+
+
+class AsyncServer:
+    """Continuous-batching server over a :class:`DeviceIndex`.
+
+    Single-threaded event loop: ``submit`` admits requests; ``pump`` (or
+    the :meth:`serve` convenience loop) coalesces a batch, dispatches it
+    async, and consumes the PREVIOUS batch's results while the new one
+    runs on device.  Results per request: ``(positions, window)`` —
+    sorted int64 occurrence positions, plus the (fetch,) int32 text
+    window at the first SA-order match when ``config.fetch`` > 0 (else
+    ``None``).
+    """
+
+    def __init__(self, dev: DeviceIndex, config: ServeConfig | None = None):
+        self.dev = dev
+        self.config = config or ServeConfig()
+        self.cache = RouteCache(self.config.cache_size)
+        self.queue: collections.deque[_Request] = collections.deque()
+        self.inflight: _InFlight | None = None
+        self.results: dict[int, tuple] = {}
+        self.latency_s: list[float] = []
+        self.n_admitted = 0
+        self.n_rejected = 0
+        self.n_batches = 0
+        self.n_rows_padded = 0
+        self.shapes: set[tuple[int, int]] = set()
+        cap = dev.max_pattern_len - dev.max_pattern_len % 4
+        self._width_cap = max(4, cap)
+
+    # ---- admission --------------------------------------------------------
+
+    def submit(self, rid, pattern, now: float | None = None) -> bool:
+        """Admit one request; False (and a counter) when the queue is full."""
+        if len(self.queue) >= self.config.queue_depth:
+            self.n_rejected += 1
+            return False
+        self.queue.append(_Request(rid, pattern,
+                                   time.perf_counter() if now is None else now))
+        self.n_admitted += 1
+        return True
+
+    # ---- batching ---------------------------------------------------------
+
+    def _bucket_width(self, m_nat: int) -> int:
+        w = 4
+        while w < m_nat:
+            w *= 2
+        return min(w, self._width_cap)
+
+    def _bucket_rows(self, b: int) -> int:
+        r = 1
+        while r < b:
+            r *= 2
+        return min(r, self.config.max_batch)
+
+    def _dispatch(self) -> _InFlight | None:
+        """Coalesce up to ``max_batch`` queued requests into one padded
+        batch and dispatch it WITHOUT blocking.  Cache hits resolve here
+        (no batch row); duplicate in-batch patterns share one row."""
+        if not self.queue:
+            return None
+        cfg = self.config
+        requests = [self.queue.popleft()
+                    for _ in range(min(len(self.queue), cfg.max_batch))]
+        keys = [self.dev.route_key(r.pattern) for r in requests]
+
+        # with the cache OFF this is the honest one-row-per-request
+        # baseline (what query_serve does); the cache brings both the
+        # cross-batch memo AND in-batch dedup of repeated hot patterns
+        caching = cfg.cache_size > 0
+        row_of: list[int | None] = []
+        key_row: dict[tuple, int] = {}
+        miss_req: list[_Request] = []
+        hit_vals: dict[tuple, tuple] = {}
+        for req, key in zip(requests, keys):
+            if caching:
+                if key in hit_vals:
+                    row_of.append(None)
+                    continue
+                if key in key_row:
+                    row_of.append(key_row[key])
+                    continue
+                val = self.cache.get(key)
+                if val is not None:
+                    hit_vals[key] = val
+                    row_of.append(None)
+                    continue
+                key_row[key] = len(miss_req)
+            row_of.append(len(miss_req))
+            miss_req.append(req)
+
+        handles = (hit_vals,)
+        n_rows = len(miss_req)
+        if miss_req:
+            pats = [r.pattern for r in miss_req]
+            lens = [len(p) for p in pats]
+            m_pad = self._bucket_width(-(-max(lens) // 4) * 4)
+            b_pad = self._bucket_rows(n_rows)
+            padded, lengths, route = self.dev.pad_batch(
+                pats, m_pad=m_pad, b_pad=b_pad)
+            self.shapes.add((m_pad, b_pad))
+            self.n_rows_padded += b_pad
+            # host->device explicitly async, then dispatch; nothing below
+            # blocks — the device chews on this batch while the host
+            # consumes the previous one and pads the next
+            padded = jax.device_put(padded)
+            lengths = jax.device_put(lengths)
+            route = jax.device_put(route)
+            pat_max = max(r.pat_max for r in miss_req)
+            if cfg.fetch:
+                start, count, win, _ = self.dev.find_fetch_ranges(
+                    padded, lengths, route, fetch=cfg.fetch, pat_max=pat_max)
+                handles = (hit_vals, start, count, win)
+            else:
+                start, count = self.dev.find_batch_ranges(
+                    padded, lengths, route, pat_max=pat_max)
+                handles = (hit_vals, start, count)
+        self.n_batches += 1
+        return _InFlight(requests, keys, row_of, handles, n_rows)
+
+    def _consume(self, flight: _InFlight) -> None:
+        """Materialize one batch's device results (the only blocking point)
+        and scatter them back to requests; misses populate the cache."""
+        cfg = self.config
+        hit_vals = flight.handles[0]
+        ell = self.dev.ell_host
+        if flight.n_rows:
+            start = np.asarray(flight.handles[1])[: flight.n_rows]
+            count = np.asarray(flight.handles[2])[: flight.n_rows]
+            win = (np.asarray(flight.handles[3])[: flight.n_rows]
+                   if cfg.fetch else None)
+        done: dict[int, tuple] = {}
+        caching = cfg.cache_size > 0
+        now = time.perf_counter()
+        for req, key, row in zip(flight.requests, flight.keys,
+                                 flight.row_of):
+            if row is None:
+                val = hit_vals[key]
+            elif row in done:  # in-batch duplicate of a shared row
+                val = done[row]
+            else:
+                s, c = int(start[row]), int(count[row])
+                # cache the MATERIALIZED response: hot repeats skip the
+                # ell slice + sort, not just the device search
+                val = (np.sort(ell[s : s + c].astype(np.int64)),
+                       win[row].copy() if cfg.fetch else None)
+                done[row] = val
+                if caching:
+                    self.cache.put(key, val)
+            self.results[req.rid] = val
+            self.latency_s.append(now - req.t_admit)
+
+    # ---- the serving loop -------------------------------------------------
+
+    def pump(self) -> None:
+        """One loop turn: dispatch the next batch, then consume the
+        previous one (which overlapped with this dispatch)."""
+        nxt = self._dispatch()
+        if self.inflight is not None:
+            self._consume(self.inflight)
+        self.inflight = nxt
+        if nxt is not None and not self.config.pipeline:
+            self._consume(nxt)
+            self.inflight = None
+
+    def drain(self) -> None:
+        """Run the loop until queue and pipeline are empty."""
+        while self.queue or self.inflight is not None:
+            self.pump()
+
+    def serve(self, patterns) -> list[tuple]:
+        """Closed-loop convenience: admit ``patterns`` as fast as the queue
+        allows, pump until done, return results aligned with the input."""
+        base = self.n_admitted + self.n_rejected
+        i = 0
+        while i < len(patterns) or self.queue or self.inflight is not None:
+            while i < len(patterns) and self.submit(base + i, patterns[i]):
+                i += 1
+            self.pump()
+        return [self.results.pop(base + j) for j in range(len(patterns))]
+
+    def stats(self) -> dict:
+        lat = np.asarray(self.latency_s) if self.latency_s else np.zeros(1)
+        return {
+            "admitted": self.n_admitted,
+            "rejected": self.n_rejected,
+            "served": len(self.latency_s),
+            "batches": self.n_batches,
+            "rows_padded": self.n_rows_padded,
+            "shapes": sorted(self.shapes),
+            "lat_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "lat_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "cache": self.cache.stats(),
+        }
+
+
+def make_hot_workload(s: np.ndarray, rng: np.random.Generator, *,
+                      n_requests: int, hot_pool: int = 32,
+                      hot_frac: float = 0.8, min_len: int = 4,
+                      max_len: int = 24, n_symbols: int = 4,
+                      ) -> list[np.ndarray]:
+    """A skewed request stream: ``hot_frac`` of requests re-ask one of
+    ``hot_pool`` planted patterns (the cacheable head of the
+    distribution); the rest are fresh planted-or-random patterns."""
+    hot = []
+    for _ in range(hot_pool):
+        m = int(rng.integers(min_len, max_len + 1))
+        i = int(rng.integers(0, len(s) - 1 - m))
+        hot.append(np.asarray(s[i : i + m], np.int32))
+    out = []
+    for _ in range(n_requests):
+        if rng.random() < hot_frac:
+            out.append(hot[int(rng.integers(0, hot_pool))])
+        else:
+            m = int(rng.integers(min_len, max_len + 1))
+            if rng.random() < 0.5:
+                i = int(rng.integers(0, len(s) - 1 - m))
+                out.append(np.asarray(s[i : i + m], np.int32))
+            else:
+                out.append(rng.integers(0, n_symbols, size=m,
+                                        dtype=np.int32))
+    return out
+
+
+def run_closed_loop(dev: DeviceIndex, patterns, config: ServeConfig,
+                    ) -> tuple[list[tuple], dict]:
+    """Serve a whole workload closed-loop; returns (results, stats) with
+    wall-clock qps added.  Warm up the jit cache first (one call per
+    bucketed shape) so the measurement is steady-state serving."""
+    server = AsyncServer(dev, config)
+    t0 = time.perf_counter()
+    results = server.serve(patterns)
+    wall = time.perf_counter() - t0
+    stats = server.stats()
+    stats["wall_s"] = round(wall, 4)
+    stats["qps"] = round(len(patterns) / max(wall, 1e-9), 1)
+    return results, stats
+
+
+def serve_stream(dataset_name: str = "dna", *, n: int = 100_000,
+                 requests: int = 4096, hot_frac: float = 0.8,
+                 hot_pool: int = 32, min_len: int = 4, max_len: int = 24,
+                 memory_bytes: int = 1 << 20, seed: int = 0,
+                 index_path: str | None = None, mode: str = "all"):
+    """Build/load an index, run the serving stack, report stats per mode.
+
+    Modes: ``sync`` (pipeline off, cache off — the one-batch-at-a-time
+    baseline), ``async`` (pipeline on, cache off), ``cached`` (pipeline
+    on, cache on), or ``all``.
+    """
+    max_len4 = -(-max_len // 4) * 4
+
+    def build(s, alphabet):
+        cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
+        return EraIndexer(alphabet, cfg).build_device(
+            s, max_pattern_len=max(64, max_len4))
+
+    dev, s, alphabet, t_build = load_or_build(
+        index_path, dataset_name, n, seed, load=DeviceIndex.load, build=build)
+    rng = np.random.default_rng(seed + 7)
+    pats = make_hot_workload(s, rng, n_requests=requests, hot_pool=hot_pool,
+                             hot_frac=hot_frac, min_len=min_len,
+                             max_len=max_len,
+                             n_symbols=len(alphabet.symbols))
+
+    modes = {
+        "sync": ServeConfig(pipeline=False, cache_size=0),
+        "async": ServeConfig(pipeline=True, cache_size=0),
+        "cached": ServeConfig(pipeline=True),
+    }
+    wanted = modes if mode == "all" else {mode: modes[mode]}
+    report = {"dataset": dataset_name, "n_symbols": len(s),
+              "requests": requests, "t_build_s": round(t_build, 3)}
+    baseline = None
+    for name, cfg in wanted.items():
+        # per-mode warmup: cache-hit shrinkage changes the bucketed batch
+        # shapes each mode sees, so each compiles its own jit shapes ONCE
+        # before the timed steady-state pass
+        run_closed_loop(dev, pats, cfg)
+        _, stats = run_closed_loop(dev, pats, cfg)
+        if name == "sync":
+            baseline = stats["qps"]
+        if baseline:
+            stats["vs_sync"] = round(stats["qps"] / baseline, 2)
+        report[name] = stats
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="dna")
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--requests", type=int, default=4096)
+    ap.add_argument("--hot-frac", type=float, default=0.8)
+    ap.add_argument("--hot-pool", type=int, default=32)
+    ap.add_argument("--min-len", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=24)
+    ap.add_argument("--mode", default="all",
+                    choices=["all", "sync", "async", "cached"])
+    ap.add_argument("--index-path", default=None,
+                    help="npz cache: load the flattened index if the file "
+                         "exists, else build once and save it there")
+    args = ap.parse_args()
+    report = serve_stream(args.dataset, n=args.n, requests=args.requests,
+                          hot_frac=args.hot_frac, hot_pool=args.hot_pool,
+                          min_len=args.min_len, max_len=args.max_len,
+                          index_path=args.index_path, mode=args.mode)
+    for key, val in report.items():
+        print(f"{key}: {val}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ from repro.kernels.packed_gather import (
     range_gather_words,
     suffix_lcp_words,
 )
+from repro.kernels.probe_gather import probe_gather_packed, probe_gather_words
 
 ALPHAS = [DNA, PROTEIN_CLASS, PROTEIN, BYTE]
 
@@ -489,6 +490,132 @@ class TestWordCompareKernels:
                                               err_msg=alpha.name)
 
 
+class TestFusedProbeGather:
+    """PR 6 fused find-and-fetch: ONE launch must be bit-identical to the
+    two-launch probe → gather composition in both currencies, with fetch
+    widths on either side of the pattern width and terminal-tail
+    positions included."""
+
+    @staticmethod
+    def _probe_batch(alpha, n, b, m, seed):
+        """(pt, sp, pos, sym, lengths, m_pad): a probe workload with tail
+        positions and planted exact matches, mirroring the probe tests."""
+        rng = np.random.default_rng(seed)
+        s = alpha.random_string(n, seed=n)
+        pt = packing.pack_text(s, alpha, extra=96)
+        sp = alpha.pad_string(s, extra=96)
+        pos = np.concatenate([rng.integers(0, n, size=b - 4),
+                              rng.integers(max(0, n - m), n + 1, 4)]
+                             ).astype(np.int32)
+        m_pad = -(-m // 4) * 4
+        lengths = rng.integers(1, m + 1, size=len(pos)).astype(np.int32)
+        sym = rng.integers(0, len(alpha.symbols),
+                           size=(len(pos), m_pad)).astype(np.int32)
+        for i in range(0, len(pos), 3):
+            j = int(rng.integers(0, n - m_pad))
+            sym[i] = sp[j : j + m_pad]
+            pos[i] = j
+        return pt, sp, pos, sym, lengths, m_pad
+
+    @pytest.mark.parametrize("alpha,n,b,m,fetch", [
+        (DNA, 900, 24, 8, 32),          # fetch wider than the pattern
+        (DNA, 700, 16, 16, 4),          # fetch narrower than the pattern
+        (PROTEIN_CLASS, 700, 20, 8, 16),
+        (BYTE, 500, 12, 12, 12),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_words_fused_equals_two_launch(self, alpha, n, b, m, fetch):
+        pt, _, pos, sym, lengths, m_pad = self._probe_batch(
+            alpha, n, b, m, seed=n + m)
+        valid = np.arange(m_pad)[None, :] < lengths[:, None]
+        pat_d = packing.pack_pattern_dense(
+            jnp.asarray(np.where(valid, sym, 0)), pt.bits, pt.terminal)
+        mask_d = packing.pack_dense(
+            jnp.asarray(np.where(valid, (1 << pt.bits) - 1, 0)), pt.bits)
+        pos_j, len_j = jnp.asarray(pos), jnp.asarray(lengths)
+
+        cmp_want = kref.pattern_probe_words_ref(pt, pos_j, pat_d, mask_d,
+                                                len_j)
+        win_want = kref.range_gather_words_ref(pt, pos_j, fetch)
+        cmp_ref, win_ref = kref.probe_gather_words_ref(
+            pt, pos_j, pat_d, mask_d, len_j, fetch=fetch)
+        cmp_got, win_got = probe_gather_words(pt, pos_j, pat_d, mask_d,
+                                              len_j, fetch=fetch, tile=64,
+                                              interpret=True)
+        for got in ((cmp_ref, win_ref), (cmp_got, win_got)):
+            np.testing.assert_array_equal(np.asarray(got[0]),
+                                          np.asarray(cmp_want))
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(win_want))
+
+    @pytest.mark.parametrize("alpha,n,b,m,fetch", [
+        (DNA, 900, 24, 8, 32), (DNA, 700, 16, 16, 4),
+        (PROTEIN_CLASS, 700, 20, 8, 16), (BYTE, 500, 12, 12, 12),
+    ], ids=lambda v: getattr(v, "name", v))
+    def test_packed_fused_equals_two_launch(self, alpha, n, b, m, fetch):
+        pt, _, pos, sym, lengths, m_pad = self._probe_batch(
+            alpha, n, b, m, seed=2 * n + m)
+        valid = np.arange(m_pad)[None, :] < lengths[:, None]
+        pat_w = kref.pack_words_ref(jnp.asarray(np.where(valid, sym, 0)))
+        mask_w = kref.pack_words_ref(jnp.asarray(np.where(valid, 0xFF, 0)))
+        pos_j = jnp.asarray(pos)
+
+        cmp_want = kref.pattern_probe_packed_ref(pt, pos_j, pat_w, mask_w)
+        win_want = kref.range_gather_packed_ref(pt, pos_j, fetch)
+        cmp_ref, win_ref = kref.probe_gather_packed_ref(
+            pt, pos_j, pat_w, mask_w, fetch=fetch)
+        cmp_got, win_got = probe_gather_packed(pt, pos_j, pat_w, mask_w,
+                                               fetch=fetch, tile=64,
+                                               interpret=True)
+        for got in ((cmp_ref, win_ref), (cmp_got, win_got)):
+            np.testing.assert_array_equal(np.asarray(got[0]),
+                                          np.asarray(cmp_want))
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(win_want))
+
+    @pytest.mark.parametrize("leg", ["default", "pallas", "byte"])
+    def test_ops_dispatch_three_legs(self, leg, monkeypatch):
+        """The ops-layer fused dispatch equals the composition of the
+        ops-layer probe + gather under every oracle leg (and on the plain
+        byte string, where the fused form IS that composition)."""
+        from repro.kernels import ops as kops
+
+        if leg == "pallas":
+            monkeypatch.setenv("REPRO_KERNELS", "pallas")
+        elif leg == "byte":
+            monkeypatch.setenv("REPRO_WORD_COMPARE", "byte")
+        alpha, n, b, m, fetch = DNA, 600, 16, 8, 16
+        pt, sp, pos, sym, lengths, m_pad = self._probe_batch(
+            alpha, n, b, m, seed=99)
+        valid = np.arange(m_pad)[None, :] < lengths[:, None]
+        pos_j, len_j = jnp.asarray(pos), jnp.asarray(lengths)
+
+        pat_d = packing.pack_pattern_dense(
+            jnp.asarray(np.where(valid, sym, 0)), pt.bits, pt.terminal)
+        mask_d = packing.pack_dense(
+            jnp.asarray(np.where(valid, (1 << pt.bits) - 1, 0)), pt.bits)
+        cmp_f, win_f = kops.probe_gather_words(pt, pos_j, pat_d, mask_d,
+                                               len_j, fetch)
+        np.testing.assert_array_equal(
+            np.asarray(cmp_f),
+            np.asarray(kops.pattern_probe_words(pt, pos_j, pat_d, mask_d,
+                                                len_j)))
+        np.testing.assert_array_equal(
+            np.asarray(win_f),
+            np.asarray(kops.range_gather_words(pt, pos_j, fetch)))
+
+        pat_w = kref.pack_words_ref(jnp.asarray(np.where(valid, sym, 0)))
+        mask_w = kref.pack_words_ref(jnp.asarray(np.where(valid, 0xFF, 0)))
+        for s_text in (pt, jnp.asarray(sp)):
+            cmp_f, win_f = kops.probe_gather(s_text, pos_j, pat_w, mask_w,
+                                             fetch)
+            np.testing.assert_array_equal(
+                np.asarray(cmp_f),
+                np.asarray(kops.pattern_probe(s_text, pos_j, pat_w, mask_w)))
+            np.testing.assert_array_equal(
+                np.asarray(win_f),
+                np.asarray(kops.range_gather_pack(s_text, pos_j, fetch)))
+
+
 class TestWordCompareEndToEnd:
     """The word-compare path (default for dense text) vs the byte-key
     comparison oracle (REPRO_WORD_COMPARE=byte): construction arrays,
@@ -556,6 +683,44 @@ class TestWordCompareEndToEnd:
         got = dev.find_batch(pats)
         np.testing.assert_array_equal(got[0], idx.find(pats[0]))
         np.testing.assert_array_equal(got[1], idx.find(pats[1]))
+
+    @pytest.mark.parametrize("alpha", [DNA, PROTEIN_CLASS, BYTE],
+                             ids=lambda a: a.name)
+    def test_terminal_fallback_mixed_batch(self, alpha, monkeypatch):
+        """A MIXED batch — some patterns carrying the sentinel, some not —
+        takes the byte-probe fallback as a whole; every row must agree
+        with the per-pattern oracle, with the word path's answers for the
+        sentinel-free rows, and with the pinned byte-compare leg."""
+        n = 500
+        s = alpha.random_string(n, seed=31)
+        idx = self._dense_indexer(alpha, 4096).build(s)
+        dev = idx.to_device(packing="dense")
+        rng = np.random.default_rng(13)
+        clean = [np.asarray(s[i : i + m]) for i, m in zip(
+            rng.integers(0, n - 20, 8), rng.integers(1, 12, 8))]
+        term = alpha.terminal_code
+        sentinel = [
+            np.array([term], np.uint8),                 # lone sentinel
+            np.asarray(s[n - 2 :]),                     # true string tail
+            np.concatenate([clean[0],
+                            np.array([term], np.uint8)]),
+        ]
+        mixed = clean[:4] + sentinel + clean[4:]
+
+        got = dev.find_batch(mixed)
+        for g, p in zip(got, mixed):
+            np.testing.assert_array_equal(g, idx.find(p),
+                                          err_msg=alpha.name)
+        # sentinel-free rows must match what the word path answers alone
+        word_only = dev.find_batch(clean)
+        for g, p in zip(word_only, clean):
+            np.testing.assert_array_equal(g, idx.find(p),
+                                          err_msg=alpha.name)
+        # and the whole mixed batch under the pinned byte-compare oracle
+        monkeypatch.setenv("REPRO_WORD_COMPARE", "byte")
+        got_byte = dev.find_batch(mixed)
+        for a, b in zip(got, got_byte):
+            np.testing.assert_array_equal(a, b, err_msg=alpha.name)
 
     @pytest.mark.parametrize("alpha", [DNA, PROTEIN_CLASS, BYTE],
                              ids=lambda a: a.name)

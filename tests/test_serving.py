@@ -1,0 +1,253 @@
+"""Continuous-batching serving stack: correctness and accounting.
+
+The serving tier must be a pure throughput/latency optimization — every
+mode (sync baseline, overlapped pipeline, hot-prefix cache, fused
+find-and-fetch) returns byte-identical results to ``DeviceIndex.find_batch``
+/ the per-pattern oracle.  These tests pin that invariant plus the
+bookkeeping the benchmarks report: admission-queue overflow, cache
+hit/miss/eviction counters, and the env-var ``ServeConfig`` idiom.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.alphabet import DNA, PROTEIN_CLASS
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.query import RouteCache
+from repro.launch.serving import (
+    AsyncServer,
+    ServeConfig,
+    make_hot_workload,
+    run_closed_loop,
+)
+
+
+@pytest.fixture(scope="module")
+def dev_and_s():
+    alpha = DNA
+    s = alpha.random_string(4000, seed=11)
+    dev = EraIndexer(alpha, EraConfig(
+        memory_bytes=1 << 16, build_impl="none",
+        packing="dense")).build_device(s, max_pattern_len=64)
+    return dev, s
+
+
+@pytest.fixture(scope="module")
+def workload(dev_and_s):
+    _, s = dev_and_s
+    rng = np.random.default_rng(3)
+    return make_hot_workload(s, rng, n_requests=300, hot_pool=12,
+                             hot_frac=0.7, min_len=2, max_len=18,
+                             n_symbols=4)
+
+
+class TestServeConfig:
+    def test_env_defaults(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SERVE_MAX_BATCH", "64")
+        monkeypatch.setenv("REPRO_SERVE_CACHE", "17")
+        monkeypatch.setenv("REPRO_SERVE_PIPELINE", "0")
+        monkeypatch.setenv("REPRO_SERVE_FETCH", "8")
+        monkeypatch.setenv("REPRO_SERVE_QUEUE_DEPTH", "99")
+        monkeypatch.setenv("REPRO_SERVE_MAX_WAIT_MS", "2.5")
+        cfg = ServeConfig()
+        assert cfg.max_batch == 64 and cfg.cache_size == 17
+        assert cfg.pipeline is False and cfg.fetch == 8
+        assert cfg.queue_depth == 99 and cfg.max_wait_ms == 2.5
+
+    def test_overrides_beat_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SERVE_MAX_BATCH", "64")
+        assert ServeConfig(max_batch=8).max_batch == 8
+
+    def test_rejects_unknown_and_invalid(self):
+        with pytest.raises(TypeError):
+            ServeConfig(not_a_knob=1)
+        with pytest.raises(ValueError):
+            ServeConfig(max_batch=0)
+        with pytest.raises(ValueError):
+            ServeConfig(fetch=6)  # not a multiple of 4
+
+
+class TestModesByteIdentical:
+    MODES = [
+        dict(pipeline=False, cache_size=0),   # sync baseline
+        dict(pipeline=True, cache_size=0),    # overlapped pipeline
+        dict(pipeline=True, cache_size=256),  # pipeline + cache
+        dict(pipeline=True, cache_size=256, max_batch=16, queue_depth=32),
+    ]
+
+    def test_all_modes_match_find_batch(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        want = dev.find_batch(workload)
+        for kw in self.MODES:
+            res, _ = run_closed_loop(dev, workload, ServeConfig(**kw))
+            assert len(res) == len(workload)
+            for (pos, win), w in zip(res, want):
+                np.testing.assert_array_equal(pos, w, err_msg=str(kw))
+                assert win is None
+
+    def test_fetch_modes_match_find_fetch_batch(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        pats = workload[:80]
+        ranges, wins = dev.find_fetch_batch(pats, fetch=16)
+        for kw in (dict(pipeline=False, cache_size=0, fetch=16),
+                   dict(pipeline=True, cache_size=128, fetch=16)):
+            res, _ = run_closed_loop(dev, pats, ServeConfig(**kw))
+            for i, (pos, win) in enumerate(res):
+                np.testing.assert_array_equal(pos, ranges[i], err_msg=str(kw))
+                np.testing.assert_array_equal(win, wins[i], err_msg=str(kw))
+
+    def test_cache_on_off_identical(self, dev_and_s, workload):
+        # small batches: the pipeline dispatches batch k+1 before batch
+        # k's consume populates the cache, so hits need several batches
+        dev, _ = dev_and_s
+        on, st_on = run_closed_loop(
+            dev, workload, ServeConfig(pipeline=True, cache_size=512,
+                                       max_batch=32))
+        off, _ = run_closed_loop(
+            dev, workload, ServeConfig(pipeline=True, cache_size=0,
+                                       max_batch=32))
+        for (p1, _), (p2, _) in zip(on, off):
+            np.testing.assert_array_equal(p1, p2)
+        assert st_on["cache"]["hits"] > 0
+
+
+class TestAdmissionQueue:
+    def test_overflow_rejects_and_counts(self, dev_and_s):
+        dev, s = dev_and_s
+        server = AsyncServer(dev, ServeConfig(queue_depth=4, pipeline=False,
+                                              cache_size=0))
+        pat = np.asarray(s[:6])
+        accepted = [server.submit(i, pat) for i in range(7)]
+        assert accepted == [True] * 4 + [False] * 3
+        assert server.n_admitted == 4 and server.n_rejected == 3
+        server.drain()
+        assert len(server.results) == 4
+
+    def test_closed_loop_retries_rejections(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        res, stats = run_closed_loop(
+            dev, workload, ServeConfig(queue_depth=8, max_batch=8,
+                                       pipeline=True, cache_size=0))
+        assert stats["served"] == len(workload)
+        want = dev.find_batch(workload)
+        for (pos, _), w in zip(res, want):
+            np.testing.assert_array_equal(pos, w)
+
+    def test_shapes_are_bucketed_pow2(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        _, stats = run_closed_loop(dev, workload,
+                                   ServeConfig(pipeline=True, cache_size=0))
+        for m_pad, b_pad in stats["shapes"]:
+            assert m_pad & (m_pad - 1) == 0 or m_pad == dev.max_pattern_len
+            assert b_pad & (b_pad - 1) == 0
+
+
+class TestRouteCache:
+    def test_lru_eviction_and_counters(self):
+        c = RouteCache(capacity=2)
+        c.put("a", (0, 1))
+        c.put("b", (1, 2))
+        assert c.get("a") == (0, 1)   # refresh a
+        c.put("c", (2, 3))            # evicts b (LRU)
+        assert c.get("b") is None
+        assert c.get("a") == (0, 1) and c.get("c") == (2, 3)
+        assert c.evictions == 1 and c.hits == 3 and c.misses == 1
+        assert 0 < c.hit_rate < 1
+        c.clear()
+        assert len(c) == 0
+
+    def test_zero_capacity_never_stores(self):
+        c = RouteCache(capacity=0)
+        c.put("a", (0, 1))
+        assert c.get("a") is None and len(c) == 0
+
+    def test_find_batch_cached_identity_and_counters(self, dev_and_s,
+                                                     workload):
+        dev, _ = dev_and_s
+        pats = workload[:60]
+        want = dev.find_batch(pats)
+        cache = RouteCache(capacity=128)
+        for _ in range(2):
+            got = dev.find_batch_cached(pats, cache)
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(g, w)
+        assert cache.hits > 0 and cache.misses > 0
+        stats = cache.stats()
+        assert stats["hits"] == cache.hits and stats["size"] == len(cache)
+
+    def test_eviction_pressure_stays_correct(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        pats = workload[:60]
+        want = dev.find_batch(pats)
+        cache = RouteCache(capacity=3)
+        got = dev.find_batch_cached(pats * 2, cache)
+        for g, w in zip(got, want * 2):
+            np.testing.assert_array_equal(g, w)
+        assert cache.evictions > 0 and len(cache) <= 3
+
+
+class TestPadBatchBuckets:
+    def test_pinned_width_and_rows(self, dev_and_s):
+        dev, s = dev_and_s
+        pats = [np.asarray(s[:5]), np.asarray(s[3:10])]
+        padded, lengths, route = dev.pad_batch(pats, m_pad=16, b_pad=8)
+        assert padded.shape == (8, 16) and lengths.shape == (8,)
+        assert (lengths[2:] == 1).all()  # dummy rows
+        st, ct = dev.find_batch_ranges(padded, lengths, route)
+        st2, ct2 = dev.find_batch_ranges(*dev.pad_batch(pats))
+        np.testing.assert_array_equal(np.asarray(st)[:2], np.asarray(st2))
+        np.testing.assert_array_equal(np.asarray(ct)[:2], np.asarray(ct2))
+
+    def test_rejects_bad_buckets(self, dev_and_s):
+        dev, s = dev_and_s
+        pats = [np.asarray(s[:10])]
+        with pytest.raises(ValueError):
+            dev.pad_batch(pats, m_pad=6)    # not a multiple of 4
+        with pytest.raises(ValueError):
+            dev.pad_batch(pats, m_pad=8)    # below the natural width (12)
+        with pytest.raises(ValueError):
+            dev.pad_batch(pats, b_pad=0)    # fewer rows than patterns
+
+
+class TestFindFetch:
+    def test_windows_match_read_symbols(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        pats = workload[:40]
+        padded, lengths, route = dev.pad_batch(pats)
+        start, count = map(np.asarray,
+                           dev.find_batch_ranges(padded, lengths, route))
+        _, wins = dev.find_fetch_batch(pats, fetch=16)
+        pos0 = dev.ell_host[np.clip(start, 0, dev.n_leaves - 1)]
+        ref = np.asarray(dev.read_symbols(pos0, 16))
+        n_real = dev.n_leaves
+        for i in range(len(pats)):
+            if count[i] == 0:
+                assert (wins[i] == -1).all()
+                continue
+            past = pos0[i] + np.arange(16) >= n_real
+            np.testing.assert_array_equal(wins[i][~past], ref[i][~past])
+            assert (wins[i][past] == dev.s_text.terminal).all()
+
+    def test_dense_and_byte_windows_identical(self):
+        alpha = PROTEIN_CLASS
+        s = alpha.random_string(1200, seed=5)
+        idx = EraIndexer(alpha, EraConfig(
+            memory_bytes=1 << 16, build_impl="none")).build(s)
+        rng = np.random.default_rng(8)
+        pats = [np.asarray(s[i : i + m]) for i, m in zip(
+            rng.integers(0, 1100, 12), rng.integers(1, 14, 12))]
+        r_d, w_d = idx.to_device(packing="dense").find_fetch_batch(
+            pats, fetch=20)
+        r_b, w_b = idx.to_device(packing="bytes").find_fetch_batch(
+            pats, fetch=20)
+        for a, b in zip(r_d, r_b):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(w_d, w_b)
+
+    def test_fetch_validation(self, dev_and_s):
+        dev, s = dev_and_s
+        with pytest.raises(ValueError):
+            dev.find_fetch_batch([np.asarray(s[:4])], fetch=6)
+        with pytest.raises(ValueError):
+            dev.find_fetch_batch([np.asarray(s[:4])],
+                                 fetch=dev.max_pattern_len + 4)
