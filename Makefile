@@ -4,7 +4,7 @@
 PR ?= local
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke bench-check
+.PHONY: test bench bench-smoke bench-check trace-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,3 +25,11 @@ bench-smoke:
 bench-check:
 	$(PY) -m benchmarks.run --smoke --json bench-results.json
 	$(PY) -m benchmarks.check_regression --current bench-results.json
+
+# Flight-recorder smoke: traced build + closed-loop serve, validates the
+# Perfetto trace + Prometheus snapshot, gates instrumentation overhead.
+# Artifacts land in trace-artifacts/ (open era_trace.json at
+# https://ui.perfetto.dev).
+trace-smoke:
+	REPRO_TRACE=1 REPRO_METRICS=1 $(PY) -m benchmarks.trace_smoke \
+		--out-dir trace-artifacts

@@ -94,6 +94,47 @@ def compare(base: dict[str, float], cur: dict[str, float],
     return drops, notes
 
 
+def delta_table(base: dict[str, float], cur: dict[str, float],
+                threshold: float) -> list[str]:
+    """Aligned per-row delta table over every compared row — printed on
+    both the warn and the strict path so a red CI run shows the exact
+    numbers it compared, not just the verdict.  Status column: ``ok``,
+    ``DROP`` (gated, past threshold), ``warn`` (warn-only, past
+    threshold), ``new`` (no baseline row), ``missing`` (gone from the
+    current run)."""
+    names = [n for n in sorted(set(base) | set(cur))
+             if n.startswith(WATCH_PREFIXES) or n.startswith(WARN_PREFIXES)]
+    if not names:
+        return []
+    w = max(len(n) for n in names)
+    head = (f"  {'row'.ljust(w)}  {'baseline_us':>11}  {'current_us':>10}"
+            f"  {'ratio':>6}  status")
+    out = [head, "  " + "-" * (len(head) - 2)]
+    for name in names:
+        b, c = base.get(name), cur.get(name)
+        if b is None:
+            out.append(f"  {name.ljust(w)}  {'-':>11}  {c:>10.1f}  "
+                       f"{'-':>6}  new")
+            continue
+        if c is None:
+            status = "missing" if name.startswith(WATCH_PREFIXES) else "warn"
+            out.append(f"  {name.ljust(w)}  {b:>11.1f}  {'-':>10}  "
+                       f"{'-':>6}  {status}")
+            continue
+        if b <= 0:
+            out.append(f"  {name.ljust(w)}  {b:>11.1f}  {c:>10.1f}  "
+                       f"{'-':>6}  ok")
+            continue
+        ratio = c / b
+        if ratio > 1 + threshold:
+            status = ("DROP" if name.startswith(WATCH_PREFIXES) else "warn")
+        else:
+            status = "ok"
+        out.append(f"  {name.ljust(w)}  {b:>11.1f}  {c:>10.1f}  "
+                   f"{ratio:>5.2f}x  {status}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--current", required=True,
@@ -120,21 +161,24 @@ def main() -> None:
 
     base = load_rows(baseline)
     cur = load_rows(args.current)
-    drops, notes = compare(base, cur, args.threshold)
+    drops, _ = compare(base, cur, args.threshold)
 
-    print(f"baseline: {baseline} ({len(base)} rows)")
+    mode = "strict" if args.strict else "warn-only"
+    print(f"check_regression: comparing against baseline {baseline} "
+          f"({len(base)} rows, threshold {args.threshold:.0%}, {mode})")
     print(f"current : {args.current} ({len(cur)} rows)")
-    for line in notes:
-        print(f"  ok    {line}")
-    for line in drops:
-        print(f"  DROP  {line}", file=sys.stderr)
+    for line in delta_table(base, cur, args.threshold):
+        print(line)
     if drops:
+        for line in drops:
+            print(f"  DROP  {line}", file=sys.stderr)
         print(f"check_regression: {len(drops)} watched row(s) regressed "
-              f"more than {args.threshold:.0%}", file=sys.stderr)
+              f"more than {args.threshold:.0%} vs {baseline}",
+              file=sys.stderr)
         if args.strict:
             sys.exit(1)
     else:
-        print("check_regression: no watched regressions")
+        print(f"check_regression: no watched regressions vs {baseline}")
 
 
 if __name__ == "__main__":

@@ -9,10 +9,39 @@ a build artifact to record the perf trajectory per PR.
 
 from __future__ import annotations
 
+import subprocess
 import time
 
 # rows accumulated across suites for --json; reset by the harness
 RESULTS: list[dict] = []
+
+_PROVENANCE: dict | None = None
+
+
+def provenance() -> dict:
+    """Environment stamp for every recorded row: git SHA, jax version,
+    active backend.  Numbers without this are uncomparable across
+    machines/commits — a regression vs a row from a different backend is
+    not a regression.  Cached after the first call (the git subprocess
+    and backend probe are not free)."""
+    global _PROVENANCE
+    if _PROVENANCE is None:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=5,
+            ).stdout.strip() or "unknown"
+        except Exception:
+            sha = "unknown"
+        try:
+            import jax
+            jax_version = jax.__version__
+            backend = jax.default_backend()
+        except Exception:
+            jax_version = backend = "unknown"
+        _PROVENANCE = {"git_sha": sha, "jax": jax_version,
+                       "backend": backend}
+    return dict(_PROVENANCE)
 
 
 def timeit(fn, *, repeats: int = 1, warmup: int = 0):
@@ -27,6 +56,8 @@ def timeit(fn, *, repeats: int = 1, warmup: int = 0):
 
 
 def emit(name: str, seconds: float, derived: str = ""):
-    RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
-                    "derived": derived})
+    row = {"name": name, "us_per_call": round(seconds * 1e6, 1),
+           "derived": derived}
+    row.update(provenance())
+    RESULTS.append(row)
     print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -101,6 +101,7 @@ def main() -> None:
             "mode": "smoke" if args.smoke else ("full" if args.full else "quick"),
             "python": platform.python_version(),
             "platform": platform.platform(),
+            "provenance": common.provenance(),
             "rows": common.RESULTS,
             "errors": errors,
         }

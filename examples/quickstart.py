@@ -158,6 +158,26 @@ def main():
     print(f"matching statistics: planted head matches {ms[0]} symbols, "
           f"random tail averages {ms[40:].mean():.1f}")
 
+    # 7. observability: the flight recorder (repro.obs) traces spans and
+    #    counts metrics across build, kernels, and serving — OFF by
+    #    default (REPRO_TRACE=1 / REPRO_METRICS=1 env knobs, or
+    #    obs.configure for scripts).  Enable BEFORE constructing what you
+    #    want observed: instruments bind at creation time.
+    from repro import obs
+    obs.configure(trace=True, metrics_on=True, clear=True)
+    dev2 = EraIndexer(alphabet, cfg).build_device(s, max_pattern_len=64)
+    run_closed_loop(dev2, stream,
+                    ServeConfig(pipeline=True, cache_size=256, max_batch=2))
+    trace_path, prom_path = obs.export_all(
+        trace_path="era_trace.json", metrics_path="era_metrics.prom")
+    spans = obs.tracer().events()
+    hits_total = obs.metrics().counter("serve_cache_hits_total").value
+    print(f"flight recorder: {len(spans)} spans -> {trace_path} "
+          f"(open at https://ui.perfetto.dev or chrome://tracing)")
+    print(f"metrics snapshot -> {prom_path} "
+          f"(cache hits counted: {hits_total:.0f})")
+    obs.configure(trace=False, metrics_on=False, clear=True)
+
 
 def ref_positions(idx, pattern):
     return idx.find(np.asarray(pattern)).tolist()

@@ -32,6 +32,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import build as build_mod
 from repro.core import packing
 from repro.core.alphabet import Alphabet
@@ -163,14 +164,17 @@ class EraIndexer:
         cfg = self.config
         vstats = report.vertical if report else VerticalStats()
         t0 = time.perf_counter()
-        groups = vertical_partition_grouped(
-            s,
-            base=self.alphabet.base,
-            f_max=cfg.f_max,
-            strategy=cfg.vertical_strategy,
-            group=cfg.group,
-            stats=vstats,
-        )
+        with obs.tracer().span("build/vertical", n=len(s),
+                               f_max=cfg.f_max) as sp:
+            groups = vertical_partition_grouped(
+                s,
+                base=self.alphabet.base,
+                f_max=cfg.f_max,
+                strategy=cfg.vertical_strategy,
+                group=cfg.group,
+                stats=vstats,
+            )
+            sp.set(groups=len(groups))
         if report:
             report.t_vertical = time.perf_counter() - t0
             report.n_groups = len(groups)
@@ -242,9 +246,11 @@ class EraIndexer:
 
     def build(self, s: np.ndarray, report: BuildReport | None = None) -> SuffixTreeIndex:
         report = report if report is not None else BuildReport(VerticalStats(), PrepareStats())
-        if self.config.construction == "batched":
-            return self._build_batched(s, report)
-        return self._build_serial(s, report)
+        with obs.tracer().span("build/total", n=len(s),
+                               engine=self.config.construction):
+            if self.config.construction == "batched":
+                return self._build_batched(s, report)
+            return self._build_serial(s, report)
 
     def _build_serial(self, s: np.ndarray, report: BuildReport) -> SuffixTreeIndex:
         cfg = self.config
@@ -302,7 +308,10 @@ class EraIndexer:
 
             t0 = time.perf_counter()
             if cfg.build_impl != "none":
-                self._attach_nodes_batched(states, groups, subtrees, len(s))
+                with obs.tracer().span("build/nodes",
+                                       subtrees=len(subtrees)):
+                    self._attach_nodes_batched(states, groups, subtrees,
+                                               len(s))
             report.t_build = time.perf_counter() - t0
 
         return SuffixTreeIndex(s=np.asarray(s), alphabet=self.alphabet, subtrees=subtrees)
@@ -325,26 +334,39 @@ class EraIndexer:
         f_cap = states.L.shape[1]
         flat_L = states.L.reshape(-1)
         flat_b = states.b_off.reshape(-1)
+        fill_hist = obs.metrics().histogram(
+            "build_bucket_fill_ratio",
+            buckets=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
+            help="real cells / padded cells per node-build bucket "
+                 "(low = the pow2 padding is wasting vmapped work)")
         for f_pad, rows in build_mod.bucket_pad_widths(
                 [e[3] for e in entries]):
-            idx = np.zeros((len(rows), f_pad), np.int64)
-            mask = np.zeros((len(rows), f_pad), bool)
-            for r, e_i in enumerate(rows):
-                freq = entries[e_i][3]
-                idx[r, :freq] = _entry_flat_idx(entries[e_i], f_cap)
-                mask[r, :freq] = True
-            idx = jnp.asarray(idx, jnp.int32)
-            mask = jnp.asarray(mask)
-            ell_rows = jnp.where(mask, jnp.take(flat_L, idx), n_total)
-            boff_rows = jnp.where(mask, jnp.take(flat_b, idx), 0)
-            nodes = build_mod.build_parallel_batch(ell_rows, boff_rows, n_total)
-            parent = np.asarray(nodes.parent)
-            depth = np.asarray(nodes.depth)
-            witness = np.asarray(nodes.witness)
-            for r, e_i in enumerate(rows):
-                prefix, _, _, freq = entries[e_i]
-                subtrees[prefix].nodes = build_mod.unpad_nodes_row(
-                    parent[r], depth[r], witness[r], freq)
+            fill = 0.0
+            if obs.metrics_enabled() or obs.trace_enabled():
+                real_cells = sum(entries[e_i][3] for e_i in rows)
+                fill = real_cells / (len(rows) * f_pad)
+                fill_hist.observe(fill)
+            with obs.tracer().span("build/node_bucket", f_pad=f_pad,
+                                   rows=len(rows), fill=round(fill, 4)):
+                idx = np.zeros((len(rows), f_pad), np.int64)
+                mask = np.zeros((len(rows), f_pad), bool)
+                for r, e_i in enumerate(rows):
+                    freq = entries[e_i][3]
+                    idx[r, :freq] = _entry_flat_idx(entries[e_i], f_cap)
+                    mask[r, :freq] = True
+                idx = jnp.asarray(idx, jnp.int32)
+                mask = jnp.asarray(mask)
+                ell_rows = jnp.where(mask, jnp.take(flat_L, idx), n_total)
+                boff_rows = jnp.where(mask, jnp.take(flat_b, idx), 0)
+                nodes = build_mod.build_parallel_batch(ell_rows, boff_rows,
+                                                       n_total)
+                parent = np.asarray(nodes.parent)
+                depth = np.asarray(nodes.depth)
+                witness = np.asarray(nodes.witness)
+                for r, e_i in enumerate(rows):
+                    prefix, _, _, freq = entries[e_i]
+                    subtrees[prefix].nodes = build_mod.unpad_nodes_row(
+                        parent[r], depth[r], witness[r], freq)
 
     def build_device(self, s: np.ndarray, report: BuildReport | None = None,
                      **device_kwargs):

@@ -43,12 +43,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import packing
 from repro.core.packing import (  # noqa: F401  (re-exported; shared with build/query)
     PackedText,
@@ -357,6 +359,29 @@ class PrepareStats:
     offsets_history: list = dataclasses.field(default_factory=list)
 
 
+def _record_prepare_metrics(group_iters: list, wall_s: float,
+                            cfg: ElasticConfig) -> None:
+    """Registry rows for one completed prepare run: per-group elastic
+    iteration counts (the paper's convergence constant, a histogram so
+    skew is visible) plus total convergence wall time."""
+    if not obs.metrics_enabled():
+        return
+    m = obs.metrics()
+    h = m.histogram("prepare_group_iterations",
+                    buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256),
+                    help="elastic-range iterations until each virtual "
+                         "tree converged")
+    for it in group_iters:
+        h.observe(it)
+    m.counter("prepare_convergence_seconds_total",
+              "wall time spent in elastic-range loops").inc(wall_s)
+    m.counter("prepare_runs_total",
+              "completed SubTreePrepare loops").inc()
+    m.gauge("prepare_r_budget_symbols",
+            "|R| read-buffer budget of the last run").set(
+        cfg.r_budget_symbols)
+
+
 def subtree_prepare(
     s_padded,
     group: VirtualTree,
@@ -372,27 +397,34 @@ def subtree_prepare(
     word_keys = kops._use_word_compare()
     n_active = int(jnp.sum(state.area >= 0))
     it = 0
-    while n_active > 0:
-        w = elastic_range(cfg, n_active)
-        if it >= max_iters:
-            raise RuntimeError(
-                "SubTreePrepare failed to converge after "
-                f"{it} iterations: group={group_index if group_index is not None else '?'} "
-                f"({len(group.prefixes)} prefixes, total_freq={group.total_freq}), "
-                f"w={w}, n_active={n_active}")
-        if stats is not None and stats.record_offsets:
-            act = np.asarray(state.area) >= 0
-            offs = (np.asarray(state.L) + np.asarray(state.start))[act]
-            stats.offsets_history.append(offs.astype(np.int64))
-        state, n_active_dev = _jit_step(s_padded, state, w, use_pallas,
-                                        word_keys)
-        if stats is not None:
-            stats.iterations += 1
-            stats.ranges.append(w)
-            stats.active_history.append(n_active)
-            stats.symbols_fetched += n_active * w
-        n_active = int(n_active_dev)
-        it += 1
+    t0 = time.perf_counter()
+    with obs.tracer().span("prepare/group",
+                           group=-1 if group_index is None else group_index,
+                           capacity=capacity) as sp:
+        while n_active > 0:
+            w = elastic_range(cfg, n_active)
+            if it >= max_iters:
+                raise RuntimeError(
+                    "SubTreePrepare failed to converge after "
+                    f"{it} iterations: group={group_index if group_index is not None else '?'} "
+                    f"({len(group.prefixes)} prefixes, total_freq={group.total_freq}), "
+                    f"w={w}, n_active={n_active}")
+            if stats is not None and stats.record_offsets:
+                act = np.asarray(state.area) >= 0
+                offs = (np.asarray(state.L) + np.asarray(state.start))[act]
+                stats.offsets_history.append(offs.astype(np.int64))
+            with obs.tracer().span("prepare/step", w=w, n_active=n_active):
+                state, n_active_dev = _jit_step(s_padded, state, w,
+                                                use_pallas, word_keys)
+            if stats is not None:
+                stats.iterations += 1
+                stats.ranges.append(w)
+                stats.active_history.append(n_active)
+                stats.symbols_fetched += n_active * w
+            n_active = int(n_active_dev)
+            it += 1
+        sp.set(iterations=it)
+    _record_prepare_metrics([it], time.perf_counter() - t0, cfg)
     return state
 
 
@@ -421,32 +453,43 @@ def subtree_prepare_batch(
     use_pallas = kops._use_pallas()
     word_keys = kops._use_word_compare()
     n_active = np.asarray(jnp.sum(states.area >= 0, axis=1))
+    group_iters = np.zeros(len(groups), np.int64)
     it = 0
-    while int(n_active.max()) > 0:
-        w = elastic_range(cfg, int(n_active.max()))
-        if it >= max_iters:
-            live = np.nonzero(n_active > 0)[0]
-            detail = "; ".join(
-                f"group {g}: {len(groups[g].prefixes)} prefixes, "
-                f"total_freq={groups[g].total_freq}, n_active={int(n_active[g])}"
-                for g in live[:8])
-            raise RuntimeError(
-                f"SubTreePrepare failed to converge after {it} iterations "
-                f"(w={w}, {len(live)}/{len(groups)} groups active): {detail}")
-        if stats is not None and stats.record_offsets:
-            act = np.asarray(states.area) >= 0
-            offs = (np.asarray(states.L) + np.asarray(states.start))[act]
-            stats.offsets_history.append(offs.astype(np.int64))
-        states, n_active_dev = _jit_step_batch(s_padded, states, w, use_pallas,
-                                               word_keys)
-        if stats is not None:
-            total_active = int(n_active.sum())
-            stats.iterations += 1
-            stats.ranges.append(w)
-            stats.active_history.append(total_active)
-            stats.symbols_fetched += total_active * w
-        n_active = np.asarray(n_active_dev)
-        it += 1
+    t0 = time.perf_counter()
+    with obs.tracer().span("prepare/batch_loop", groups=len(groups),
+                           capacity=capacity) as sp:
+        while int(n_active.max()) > 0:
+            w = elastic_range(cfg, int(n_active.max()))
+            if it >= max_iters:
+                live = np.nonzero(n_active > 0)[0]
+                detail = "; ".join(
+                    f"group {g}: {len(groups[g].prefixes)} prefixes, "
+                    f"total_freq={groups[g].total_freq}, n_active={int(n_active[g])}"
+                    for g in live[:8])
+                raise RuntimeError(
+                    f"SubTreePrepare failed to converge after {it} iterations "
+                    f"(w={w}, {len(live)}/{len(groups)} groups active): {detail}")
+            if stats is not None and stats.record_offsets:
+                act = np.asarray(states.area) >= 0
+                offs = (np.asarray(states.L) + np.asarray(states.start))[act]
+                stats.offsets_history.append(offs.astype(np.int64))
+            group_iters += n_active > 0
+            with obs.tracer().span("prepare/step", w=w,
+                                   n_active=int(n_active.sum()),
+                                   groups_active=int((n_active > 0).sum())):
+                states, n_active_dev = _jit_step_batch(s_padded, states, w,
+                                                       use_pallas, word_keys)
+            if stats is not None:
+                total_active = int(n_active.sum())
+                stats.iterations += 1
+                stats.ranges.append(w)
+                stats.active_history.append(total_active)
+                stats.symbols_fetched += total_active * w
+            n_active = np.asarray(n_active_dev)
+            it += 1
+        sp.set(iterations=it)
+    _record_prepare_metrics(group_iters.tolist(),
+                            time.perf_counter() - t0, cfg)
     return states
 
 

@@ -26,9 +26,11 @@ results either way; tests pin it).
 from __future__ import annotations
 
 import os
+import threading
 
 import jax
 
+from repro import obs
 from repro.core.packing import PackedText
 from repro.kernels import ref as _ref
 from repro.kernels.kmer_histogram import kmer_histogram as _kmer_pallas
@@ -47,6 +49,41 @@ from repro.kernels.probe_gather import (
 )
 from repro.kernels.range_gather import range_gather_pack as _gather_pallas
 from repro.kernels.suffix_lcp import suffix_lcp_pairs as _suffix_lcp_pallas
+
+
+# ---------------------------------------------------------------------------
+# Kernel-dispatch telemetry (REPRO_METRICS).  The record helper runs in the
+# impl closures' Python bodies: under jit that is TRACE time, so the counters
+# count (re)compilations per distinct padded shape — exactly the jit-cache
+# pressure signal the serving/bench layers need — while eager callers count
+# every call.  ``kernel_distinct_shapes_total`` is the recompile proxy: it
+# grows only when a (kernel, currency, shape) triple is first seen.
+# ---------------------------------------------------------------------------
+
+_SHAPES_SEEN: set[tuple] = set()
+_SHAPES_LOCK = threading.Lock()
+
+
+def _record(kernel: str, use_pallas: bool, currency: str, *arrays) -> None:
+    if not obs.metrics_enabled():
+        return
+    m = obs.metrics()
+    impl = "pallas" if use_pallas else "ref"
+    m.counter("kernel_dispatch_total",
+              "kernel impl dispatches (trace-time under jit: counts "
+              "compilations per padded shape)",
+              kernel=kernel, impl=impl, currency=currency).inc()
+    shape = tuple(tuple(getattr(a, "shape", ())) for a in arrays)
+    key = (kernel, currency, shape)
+    with _SHAPES_LOCK:
+        new = key not in _SHAPES_SEEN
+        if new:
+            _SHAPES_SEEN.add(key)
+    if new:
+        m.counter("kernel_distinct_shapes_total",
+                  "distinct padded argument shapes per kernel "
+                  "(jit-recompile proxy)",
+                  kernel=kernel, currency=currency).inc()
 
 
 def _on_tpu() -> bool:
@@ -81,10 +118,12 @@ def range_gather_impl(use_pallas: bool):
     dispatching on the string representation inside the trace."""
     def fn(s_text, offs, w: int):
         if isinstance(s_text, PackedText):
+            _record("range_gather", use_pallas, "packed", offs)
             if use_pallas:
                 return _packed_gather_pallas(s_text, offs, w,
                                              interpret=not _on_tpu())
             return _ref.range_gather_packed_ref(s_text, offs, w)
+        _record("range_gather", use_pallas, "byte", offs)
         if use_pallas:
             return _gather_pallas(s_text, offs, w, interpret=not _on_tpu())
         return _ref.range_gather_pack_ref(s_text, offs, w)
@@ -106,6 +145,7 @@ def range_gather_words_impl(use_pallas: bool):
     (F, ceil(w/spw)) uint32`` substituted dense word rows (PackedText
     only — the word currency has no byte-string form)."""
     def fn(pt: PackedText, offs, w: int):
+        _record("range_gather", use_pallas, "word", offs)
         if use_pallas:
             return _words_gather_pallas(pt, offs, w, interpret=not _on_tpu())
         return _ref.range_gather_words_ref(pt, offs, w)
@@ -120,6 +160,7 @@ def suffix_lcp_pairs(s_text, pos_a, pos_b, w: int):
     if isinstance(s_text, PackedText):
         if _use_word_compare():
             # word path: first differing dense word + clz, no byte repack
+            _record("suffix_lcp", _use_pallas(), "word", pos_a)
             if _use_pallas():
                 return _words_lcp_pallas(s_text, pos_a, pos_b, w,
                                          interpret=not _on_tpu())
@@ -130,6 +171,7 @@ def suffix_lcp_pairs(s_text, pos_a, pos_b, w: int):
         a = gather(s_text, pos_a, w)
         b = gather(s_text, pos_b, w)
         return lcp_pairs(a, b, w)[0]
+    _record("suffix_lcp", _use_pallas(), "byte", pos_a)
     if _use_pallas():
         return _suffix_lcp_pallas(s_text, pos_a, pos_b, w,
                                   interpret=not _on_tpu())
@@ -149,12 +191,14 @@ def pattern_probe_impl(use_pallas: bool):
     trace; the byte-vs-packed branch dispatches on the s_text type."""
     def fn(s_text, pos, pat_words, mask_words):
         if isinstance(s_text, PackedText):
+            _record("pattern_probe", use_pallas, "packed", pos, pat_words)
             if use_pallas:
                 return _packed_probe_pallas(s_text, pos, pat_words,
                                             mask_words,
                                             interpret=not _on_tpu())
             return _ref.pattern_probe_packed_ref(s_text, pos, pat_words,
                                                  mask_words)
+        _record("pattern_probe", use_pallas, "byte", pos, pat_words)
         if use_pallas:
             return _probe_pallas(s_text, pos, pat_words, mask_words,
                                  interpret=not _on_tpu())
@@ -173,6 +217,7 @@ def pattern_probe_words_impl(use_pallas: bool):
     terminal-padded tail described by ``lim_p`` — callers fall back to
     :func:`pattern_probe_impl` for other terminal-bearing batches)."""
     def fn(pt: PackedText, pos, pat_dense, mask_dense, lengths, lim_p=None):
+        _record("pattern_probe", use_pallas, "word", pos, pat_dense)
         if use_pallas:
             return _words_probe_pallas(pt, pos, pat_dense, mask_dense,
                                        lengths, lim_p,
@@ -195,6 +240,7 @@ def probe_gather_words_impl(use_pallas: bool):
     probe verdict AND the gathered dense word window (PackedText only)."""
     def fn(pt: PackedText, pos, pat_dense, mask_dense, lengths, fetch: int,
            lim_p=None):
+        _record("probe_gather", use_pallas, "word", pos, pat_dense)
         if use_pallas:
             return _fused_words_pallas(pt, pos, pat_dense, mask_dense,
                                        lengths, lim_p, fetch=fetch,
@@ -222,6 +268,7 @@ def probe_gather_impl(use_pallas: bool):
     results are interchangeable across representations)."""
     def fn(s_text, pos, pat_words, mask_words, fetch: int):
         if isinstance(s_text, PackedText):
+            _record("probe_gather", use_pallas, "packed", pos, pat_words)
             if use_pallas:
                 return _fused_packed_pallas(s_text, pos, pat_words,
                                             mask_words, fetch=fetch,

@@ -45,6 +45,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.api import EraConfig, EraIndexer
 from repro.core.query import DeviceIndex, RouteCache
 from repro.launch.warmstart import load_or_build
@@ -58,10 +59,11 @@ class ServeConfig:
       rejected (counted, not raised) [REPRO_SERVE_QUEUE_DEPTH=1024]
     * ``max_batch``    — most requests coalesced into one padded batch
       [REPRO_SERVE_MAX_BATCH=256]
-    * ``max_wait_ms``  — how long admission may hold a non-full batch
-      open waiting for more arrivals (closed-loop drivers keep the queue
-      full, so this only matters under trickle load)
-      [REPRO_SERVE_MAX_WAIT_MS=1.0]
+    * ``max_wait_ms``  — per-request batch aging: a non-full batch is
+      held open for more arrivals until the OLDEST queued request has
+      waited this long, then dispatches regardless of fill (closed-loop
+      drivers keep the queue full, so this only matters under trickle
+      load) [REPRO_SERVE_MAX_WAIT_MS=1.0]
     * ``cache_size``   — hot-prefix route cache entries, 0 disables
       [REPRO_SERVE_CACHE=4096]
     * ``fetch``        — text-window symbols returned per match via the
@@ -140,6 +142,52 @@ class AsyncServer:
         self.shapes: set[tuple[int, int]] = set()
         cap = dev.max_pattern_len - dev.max_pattern_len % 4
         self._width_cap = max(4, cap)
+        self._bind_obs()
+
+    def _bind_obs(self) -> None:
+        """Bind tracer + registry instruments ONCE at construction: the
+        per-batch hot path then costs an attribute access and (when obs
+        is off) a no-op method call — the documented overhead budget."""
+        tr, m = obs.tracer(), obs.metrics()
+        self._tr = tr
+        self._trace_on = tr.enabled
+        self._metrics_on = m.enabled
+        self._m_requests = m.counter(
+            "serve_requests_total", "requests admitted")
+        self._m_rejected = m.counter(
+            "serve_rejected_total", "requests rejected at admission")
+        self._m_batches = m.counter(
+            "serve_batches_total", "padded batches dispatched")
+        self._m_rows_real = m.counter(
+            "serve_rows_real_total", "real (non-padding) batch rows")
+        self._m_rows_padded = m.counter(
+            "serve_rows_padded_total", "batch rows incl. pow2 padding")
+        self._m_cache_hits = m.counter(
+            "serve_cache_hits_total", "route-cache hits at admission")
+        self._m_cache_misses = m.counter(
+            "serve_cache_misses_total", "route-cache misses at admission")
+        self._h_queue_depth = m.histogram(
+            "serve_queue_depth",
+            buckets=obs.pow2_buckets(1, self.config.queue_depth),
+            help="admission-queue depth sampled at each pump")
+        self._h_batch_fill = m.histogram(
+            "serve_batch_fill", buckets=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0),
+            help="real rows / padded rows per dispatched batch")
+        self._h_queue_wait = m.histogram(
+            "serve_queue_wait_ms",
+            help="per-request wait from admission to batch dispatch")
+        self._h_batch_age = m.histogram(
+            "serve_batch_age_ms",
+            help="oldest queued request's age at dispatch (the "
+                 "max_wait_ms batch-aging signal)")
+        # callback gauges read live server state at snapshot time; on
+        # re-registration the newest server's callbacks win
+        m.gauge("serve_cache_size", fn=lambda: len(self.cache),
+                help="route-cache entries")
+        m.gauge("serve_cache_hit_rate", fn=lambda: self.cache.hit_rate,
+                help="route-cache lifetime hit rate")
+        m.gauge("serve_queue_depth_now", fn=lambda: len(self.queue),
+                help="admission-queue depth right now")
 
     # ---- admission --------------------------------------------------------
 
@@ -147,10 +195,12 @@ class AsyncServer:
         """Admit one request; False (and a counter) when the queue is full."""
         if len(self.queue) >= self.config.queue_depth:
             self.n_rejected += 1
+            self._m_rejected.inc()
             return False
         self.queue.append(_Request(rid, pattern,
                                    time.perf_counter() if now is None else now))
         self.n_admitted += 1
+        self._m_requests.inc()
         return True
 
     # ---- batching ---------------------------------------------------------
@@ -170,12 +220,31 @@ class AsyncServer:
     def _dispatch(self) -> _InFlight | None:
         """Coalesce up to ``max_batch`` queued requests into one padded
         batch and dispatch it WITHOUT blocking.  Cache hits resolve here
-        (no batch row); duplicate in-batch patterns share one row."""
+        (no batch row); duplicate in-batch patterns share one row.
+
+        Batch aging (``max_wait_ms``): a non-full batch is held open —
+        returns None — until the OLDEST queued request has waited
+        ``max_wait_ms``, so trickle load coalesces without unbounded
+        per-request staleness (previously the knob only bounded the
+        drain poll, never the request's own wait)."""
         if not self.queue:
             return None
         cfg = self.config
+        now = time.perf_counter()
+        oldest_age_ms = (now - self.queue[0].t_admit) * 1e3
+        if len(self.queue) < cfg.max_batch and oldest_age_ms < cfg.max_wait_ms:
+            return None
         requests = [self.queue.popleft()
                     for _ in range(min(len(self.queue), cfg.max_batch))]
+        if self._metrics_on:
+            self._h_batch_age.observe(oldest_age_ms)
+            for r in requests:
+                self._h_queue_wait.observe((now - r.t_admit) * 1e3)
+        if self._trace_on:
+            self._tr.complete("serve/queue_wait",
+                              int(requests[0].t_admit * 1e9),
+                              int(oldest_age_ms * 1e6),
+                              rows=len(requests))
         keys = [self.dev.route_key(r.pattern) for r in requests]
 
         # with the cache OFF this is the honest one-row-per-request
@@ -196,9 +265,11 @@ class AsyncServer:
                     continue
                 val = self.cache.get(key)
                 if val is not None:
+                    self._m_cache_hits.inc()
                     hit_vals[key] = val
                     row_of.append(None)
                     continue
+                self._m_cache_misses.inc()
                 key_row[key] = len(miss_req)
             row_of.append(len(miss_req))
             miss_req.append(req)
@@ -210,26 +281,36 @@ class AsyncServer:
             lens = [len(p) for p in pats]
             m_pad = self._bucket_width(-(-max(lens) // 4) * 4)
             b_pad = self._bucket_rows(n_rows)
-            padded, lengths, route = self.dev.pad_batch(
-                pats, m_pad=m_pad, b_pad=b_pad)
-            self.shapes.add((m_pad, b_pad))
-            self.n_rows_padded += b_pad
-            # host->device explicitly async, then dispatch; nothing below
-            # blocks — the device chews on this batch while the host
-            # consumes the previous one and pads the next
-            padded = jax.device_put(padded)
-            lengths = jax.device_put(lengths)
-            route = jax.device_put(route)
+            with self._tr.span("serve/pad_pack", rows=n_rows, b_pad=b_pad,
+                               m_pad=m_pad):
+                padded, lengths, route = self.dev.pad_batch(
+                    pats, m_pad=m_pad, b_pad=b_pad)
+                self.shapes.add((m_pad, b_pad))
+                self.n_rows_padded += b_pad
+                # host->device explicitly async, then dispatch; nothing
+                # below blocks — the device chews on this batch while the
+                # host consumes the previous one and pads the next
+                padded = jax.device_put(padded)
+                lengths = jax.device_put(lengths)
+                route = jax.device_put(route)
+            self._m_rows_real.inc(n_rows)
+            self._m_rows_padded.inc(b_pad)
+            self._h_batch_fill.observe(n_rows / b_pad)
             pat_max = max(r.pat_max for r in miss_req)
-            if cfg.fetch:
-                start, count, win, _ = self.dev.find_fetch_ranges(
-                    padded, lengths, route, fetch=cfg.fetch, pat_max=pat_max)
-                handles = (hit_vals, start, count, win)
-            else:
-                start, count = self.dev.find_batch_ranges(
-                    padded, lengths, route, pat_max=pat_max)
-                handles = (hit_vals, start, count)
+            with self._tr.span("serve/device_dispatch", rows=n_rows,
+                               b_pad=b_pad, m_pad=m_pad,
+                               fetch=cfg.fetch):
+                if cfg.fetch:
+                    start, count, win, _ = self.dev.find_fetch_ranges(
+                        padded, lengths, route, fetch=cfg.fetch,
+                        pat_max=pat_max)
+                    handles = (hit_vals, start, count, win)
+                else:
+                    start, count = self.dev.find_batch_ranges(
+                        padded, lengths, route, pat_max=pat_max)
+                    handles = (hit_vals, start, count)
         self.n_batches += 1
+        self._m_batches.inc()
         return _InFlight(requests, keys, row_of, handles, n_rows)
 
     def _consume(self, flight: _InFlight) -> None:
@@ -239,10 +320,11 @@ class AsyncServer:
         hit_vals = flight.handles[0]
         ell = self.dev.ell_host
         if flight.n_rows:
-            start = np.asarray(flight.handles[1])[: flight.n_rows]
-            count = np.asarray(flight.handles[2])[: flight.n_rows]
-            win = (np.asarray(flight.handles[3])[: flight.n_rows]
-                   if cfg.fetch else None)
+            with self._tr.span("serve/consume_sync", rows=flight.n_rows):
+                start = np.asarray(flight.handles[1])[: flight.n_rows]
+                count = np.asarray(flight.handles[2])[: flight.n_rows]
+                win = (np.asarray(flight.handles[3])[: flight.n_rows]
+                       if cfg.fetch else None)
         done: dict[int, tuple] = {}
         caching = cfg.cache_size > 0
         now = time.perf_counter()
@@ -266,21 +348,29 @@ class AsyncServer:
 
     # ---- the serving loop -------------------------------------------------
 
-    def pump(self) -> None:
+    def pump(self) -> bool:
         """One loop turn: dispatch the next batch, then consume the
-        previous one (which overlapped with this dispatch)."""
+        previous one (which overlapped with this dispatch).  Returns
+        whether anything happened — False means the loop is idle (empty,
+        or holding a partial batch open for aging)."""
+        if self.queue:
+            self._h_queue_depth.observe(len(self.queue))
         nxt = self._dispatch()
+        did = nxt is not None
         if self.inflight is not None:
             self._consume(self.inflight)
+            did = True
         self.inflight = nxt
         if nxt is not None and not self.config.pipeline:
             self._consume(nxt)
             self.inflight = None
+        return did
 
     def drain(self) -> None:
         """Run the loop until queue and pipeline are empty."""
         while self.queue or self.inflight is not None:
-            self.pump()
+            if not self.pump():
+                time.sleep(50e-6)  # holding a partial batch for aging
 
     def serve(self, patterns) -> list[tuple]:
         """Closed-loop convenience: admit ``patterns`` as fast as the queue
@@ -290,7 +380,8 @@ class AsyncServer:
         while i < len(patterns) or self.queue or self.inflight is not None:
             while i < len(patterns) and self.submit(base + i, patterns[i]):
                 i += 1
-            self.pump()
+            if not self.pump() and i >= len(patterns):
+                time.sleep(50e-6)  # only aging can unblock now
         return [self.results.pop(base + j) for j in range(len(patterns))]
 
     def stats(self) -> dict:
@@ -421,6 +512,8 @@ def main():
                           index_path=args.index_path, mode=args.mode)
     for key, val in report.items():
         print(f"{key}: {val}")
+    for path in obs.export_all():
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,8 @@ bookkeeping the benchmarks report: admission-queue overflow, cache
 hit/miss/eviction counters, and the env-var ``ServeConfig`` idiom.
 """
 
+import time
+
 import numpy as np
 import pytest
 
@@ -251,3 +253,107 @@ class TestFindFetch:
         with pytest.raises(ValueError):
             dev.find_fetch_batch([np.asarray(s[:4])],
                                  fetch=dev.max_pattern_len + 4)
+
+
+class TestBatchAging:
+    """``max_wait_ms`` is per-request batch aging: a partial batch is held
+    open until the OLDEST queued request has waited that long, then
+    dispatched whatever its size.  (It used to be dead config.)"""
+
+    def test_partial_batch_held_until_age(self, dev_and_s):
+        dev, s = dev_and_s
+        server = AsyncServer(dev, ServeConfig(
+            pipeline=False, cache_size=0, max_batch=8, max_wait_ms=60.0))
+        server.submit(0, np.asarray(s[:6]))
+        server.submit(1, np.asarray(s[2:8]))
+        assert server.pump() is False          # young partial batch: held
+        assert server.results == {} and len(server.queue) == 2
+        time.sleep(0.08)                       # let the oldest request age
+        assert server.pump() is True
+        assert sorted(server.results) == [0, 1]
+        assert server.n_batches == 1
+
+    def test_full_batch_dispatches_immediately(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        server = AsyncServer(dev, ServeConfig(
+            pipeline=False, cache_size=0, max_batch=4, max_wait_ms=1e6))
+        for i, p in enumerate(workload[:4]):
+            server.submit(i, p)
+        assert server.pump() is True           # full: aging never consulted
+        assert len(server.results) == 4
+
+    def test_drain_terminates_on_aging(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        server = AsyncServer(dev, ServeConfig(
+            pipeline=True, cache_size=0, max_batch=64, max_wait_ms=5.0))
+        for i, p in enumerate(workload[:10]):  # never fills max_batch
+            server.submit(i, p)
+        server.drain()
+        assert len(server.results) == 10 and server.inflight is None
+
+    def test_aged_results_byte_identical(self, dev_and_s, workload):
+        dev, _ = dev_and_s
+        pats = workload[:10]
+        want = dev.find_batch(pats)
+        res, _ = run_closed_loop(dev, pats, ServeConfig(
+            pipeline=True, cache_size=0, max_batch=64, max_wait_ms=2.0))
+        for (pos, _), w in zip(res, want):
+            np.testing.assert_array_equal(pos, w)
+
+
+class TestObservabilityWiring:
+    """The serving loop's instrumentation: counters/histograms/spans land
+    in the global registry when obs is on, results stay byte-identical,
+    and with obs off the server binds only null instruments."""
+
+    @pytest.fixture()
+    def obs_on(self):
+        from repro import obs
+        was_t, was_m = obs.trace_enabled(), obs.metrics_enabled()
+        obs.configure(trace=True, metrics_on=True, clear=True)
+        yield obs
+        obs.configure(trace=was_t, metrics_on=was_m, clear=True)
+
+    def test_registry_wiring_closed_loop(self, dev_and_s, workload, obs_on):
+        dev, _ = dev_and_s
+        res, stats = run_closed_loop(dev, workload, ServeConfig(
+            pipeline=True, cache_size=512, max_batch=32))
+        m = obs_on.metrics()
+        assert m.counter("serve_requests_total").value >= len(workload)
+        assert m.counter("serve_batches_total").value == stats["batches"]
+        assert m.counter("serve_cache_hits_total").value \
+            == stats["cache"]["hits"]
+        fill = m.histogram("serve_batch_fill")
+        assert fill.count == stats["batches"]
+        assert m.histogram("serve_batch_age_ms").count > 0
+        assert m.histogram("serve_queue_wait_ms").count >= len(workload)
+        prom = m.to_prometheus()
+        assert "serve_cache_hit_rate" in prom
+        assert "serve_batch_fill_bucket" in prom
+
+    def test_spans_and_byte_identity(self, dev_and_s, workload, obs_on):
+        dev, _ = dev_and_s
+        want = dev.find_batch(workload)
+        res, _ = run_closed_loop(dev, workload, ServeConfig(
+            pipeline=True, cache_size=0, max_batch=32))
+        for (pos, _), w in zip(res, want):
+            np.testing.assert_array_equal(pos, w)
+        names = {e["name"] for e in obs_on.tracer().events()}
+        for want_span in ("serve/queue_wait", "serve/pad_pack",
+                          "serve/device_dispatch", "serve/consume_sync"):
+            assert want_span in names, names
+        assert obs_on.validate_chrome_trace(
+            obs_on.tracer().to_chrome()) == []
+
+    def test_obs_off_binds_null_instruments(self, dev_and_s):
+        from repro import obs
+        was_t, was_m = obs.trace_enabled(), obs.metrics_enabled()
+        obs.configure(trace=False, metrics_on=False)
+        try:
+            dev, _ = dev_and_s
+            server = AsyncServer(dev, ServeConfig(pipeline=True))
+            assert server._m_requests is obs.NULL_INSTRUMENT
+            assert server._h_batch_fill is obs.NULL_INSTRUMENT
+            assert server._trace_on is False and server._metrics_on is False
+        finally:
+            obs.configure(trace=was_t, metrics_on=was_m)
