@@ -13,6 +13,7 @@
   query      bench_query      batched device query engine vs per-pattern Python
   analytics  bench_analytics  LCP analytics engine vs per-position Python
   packed     bench_packed     dense k-bit string gather/probe vs byte path
+  fabric     bench_fabric     sharded SPMD construction vs single-device
 
 ``python -m benchmarks.run``            — quick pass over everything
 ``python -m benchmarks.run --full``     — paper-scale (slower) settings
@@ -51,6 +52,7 @@ def main() -> None:
         bench_baselines,
         bench_build,
         bench_elastic,
+        bench_fabric,
         bench_horizontal,
         bench_packed,
         bench_query,
@@ -74,6 +76,7 @@ def main() -> None:
         "query": bench_query.run,
         "analytics": bench_analytics.run,
         "packed": bench_packed.run,
+        "fabric": bench_fabric.run,
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

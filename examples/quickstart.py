@@ -178,6 +178,29 @@ def main():
           f"(cache hits counted: {hits_total:.0f})")
     obs.configure(trace=False, metrics_on=False, clear=True)
 
+    # 8. sharded index fabric: on a multi-device mesh (or a simulated one:
+    #    XLA_FLAGS=--xla_force_host_platform_device_count=N, set BEFORE
+    #    jax imports — `python -m repro.launch.shard_run` owns that for
+    #    you) construction runs SPMD via shard_map: virtual-tree groups
+    #    are partitioned across the mesh, the string is replicated, and a
+    #    per-shard convergence mask lets each shard leave the elastic-
+    #    range loop independently.  build_sharded returns a ShardedIndex:
+    #    leaf arrays sharded by top-trie route key with a replicated
+    #    route→shard table, so find_batch splits each batch by route and
+    #    dispatches per shard.  Results are bit-identical to the single-
+    #    device engine; save() writes one archive per shard
+    #    ({path}_shard{k}.npz) so each host can load only its slice.
+    import jax
+    n_shards = min(2, jax.device_count())
+    sh = EraIndexer(alphabet, cfg).build_sharded(
+        s, n_shards=n_shards, max_pattern_len=64)
+    for a, b in zip(sh.find_batch(batch), dev.find_batch(batch)):
+        assert np.array_equal(a, b)
+    print(f"sharded fabric agrees ✓ ({sh.n_shards} shard(s) over "
+          f"{jax.device_count()} device(s), route depth k={sh.k_route}; "
+          f"serve with: python -m repro.launch.serving --shards N, "
+          f"bench with: python -m repro.launch.shard_run --mode bench)")
+
 
 def ref_positions(idx, pattern):
     return idx.find(np.asarray(pattern)).tolist()

@@ -404,6 +404,48 @@ class EraIndexer:
             **device_kwargs,
         )
 
+    def build_sharded(self, s: np.ndarray, n_shards: int | None = None,
+                      report: BuildReport | None = None, *,
+                      mesh=None, sort_fuse: bool = True, **device_kwargs):
+        """String → :class:`repro.core.fabric.ShardedIndex`: SPMD
+        construction over the device mesh, then the flattened leaf
+        arrays sharded by top-trie route key.
+
+        ``n_shards`` defaults to the mesh size (all local devices); the
+        construction mesh and the index shard count are independent —
+        group blocks parallelize the elastic loop, route-key shards
+        partition the query fabric.  Results are bit-identical to
+        :meth:`build_device` (same flatten, same probe) — see
+        tests/test_fabric.py.
+        """
+        from repro.core import fabric  # local: avoid import cycle
+
+        report = report if report is not None else BuildReport(
+            VerticalStats(), PrepareStats())
+        device_kwargs.setdefault("packing", self.config.packing)
+        mesh = mesh or fabric.fabric_mesh()
+        if n_shards is None:
+            n_shards = mesh.devices.size
+        groups = self.partition(s, report)
+        if not groups:
+            raise ValueError("cannot shard an empty index")
+        capacity = self._capacity(groups)
+        s_padded = self._device_text(s)
+        t0 = time.perf_counter()
+        states = fabric.sharded_prepare(
+            s_padded, groups, capacity, self.config.elastic_config(),
+            mesh=mesh, stats=report.prepare, sort_fuse=sort_fuse)
+        report.t_prepare = time.perf_counter() - t0
+        entries = _sorted_segments(groups)
+        f_cap = states.L.shape[1]
+        flat_idx = np.concatenate([_entry_flat_idx(e, f_cap) for e in entries])
+        ell = jnp.take(states.L.reshape(-1), jnp.asarray(flat_idx, jnp.int32))
+        return fabric.ShardedIndex.from_flat(
+            alphabet=self.alphabet, s=np.asarray(s),
+            prefixes=[e[0] for e in entries],
+            freqs=np.array([e[3] for e in entries], np.int32),
+            ell=ell, n_shards=n_shards, **device_kwargs)
+
     def build_analytics(self, s: np.ndarray, report: BuildReport | None = None,
                         **device_kwargs):
         """Build + flatten + LCP in one step: returns ``(index, engine)``

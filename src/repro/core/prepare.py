@@ -195,9 +195,61 @@ def _kernel_impls(use_pallas: bool):
     return kops.range_gather_impl(False), kref.lcp_pairs_ref
 
 
+def _fused_sort_order(major, keys, tie, *, w: int, bits: int,
+                      f: int) -> jax.Array | None:
+    """Stable sort order on (major, window, tie) packed into the fewest
+    uint32 lanes — the fabric engine's sort-key fusion.
+
+    The lexsort path compares ``2 + n_words`` operands (tie + every dense
+    word + the area major).  But the triple is just one big integer:
+    ``major`` needs ceil(log2 F) bits, the window exactly ``w*bits``
+    meaningful bits (top-aligned in the words), ``tie`` ceil(log2(w+1)).
+    Bit-concatenating them yields ceil(total/32) lanes — ONE lane for the
+    hot small-``w`` iterations of a 2-bit alphabet, and always at least
+    one fewer comparator operand than lexsort.
+
+    The fused key drops each word's bits BEYOND ``w`` symbols, which the
+    lexsort path does feed to the comparator; by the step's documented
+    invariant those extra bits only reorder rows INSIDE still-active
+    equal-window blocks, which later iterations re-sort before anything
+    observable is emitted — final construction arrays are bit-identical
+    (pinned by tests/test_fabric.py).
+
+    Returns None when the packing cannot beat lexsort (major + tie alone
+    overflow one lane — F beyond ~2^26 with w = 64).
+    """
+    mb = max(1, int(np.ceil(np.log2(max(f, 2)))))
+    tb = max(1, int(np.ceil(np.log2(w + 2))))
+    if mb + tb > 32:
+        return None
+    kw = w * bits
+    total = mb + kw + tb
+    n_lanes = -(-total // 32)
+    lanes = [jnp.zeros(major.shape, jnp.uint32) for _ in range(n_lanes)]
+
+    def place(value, pos, width):
+        # OR a right-aligned ``width``-bit field into the conceptual
+        # bitstring at MSB-offset ``pos`` (lane bitrange [32j, 32j+32))
+        end = pos + width
+        lane0, lane1 = pos // 32, (end - 1) // 32
+        if lane0 == lane1:
+            lanes[lane0] = lanes[lane0] | (value << (32 * (lane0 + 1) - end))
+        else:  # field straddles a lane boundary: split high/low
+            lanes[lane0] = lanes[lane0] | (value >> (end - 32 * (lane0 + 1)))
+            lanes[lane1] = lanes[lane1] | (value << (32 * (lane1 + 1) - end))
+
+    place(major.astype(jnp.uint32), 0, mb)
+    for j in range(keys.shape[1]):
+        m_j = min(32, kw - 32 * j)  # meaningful top bits of word j
+        place(keys[:, j] >> (32 - m_j), mb + 32 * j, m_j)
+    place(tie.astype(jnp.uint32), mb + kw, tb)
+    return jnp.lexsort(tuple(lanes[::-1]))
+
+
 def prepare_step(s_padded, state: PrepareState, *, w: int,
                  use_pallas: bool = False,
                  word_keys: bool | None = None,
+                 sort_fuse: bool = False,
                  gather_fn=None) -> tuple[PrepareState, jax.Array]:
     """One iteration of SubTreePrepare for static range ``w``.
 
@@ -210,6 +262,12 @@ def prepare_step(s_padded, state: PrepareState, *, w: int,
     construction arrays (intermediate orders may differ only INSIDE
     still-active equal-key blocks, which the segmented sort re-orders
     before anything observable is emitted).
+
+    ``sort_fuse`` (the sharded fabric's default) packs the whole
+    (major, window, tie) triple into the fewest uint32 sort lanes
+    (:func:`_fused_sort_order`) — same final arrays, fewer comparator
+    operands; it applies only on the word-key path and silently falls
+    back to lexsort elsewhere.
     Returns (new_state, n_active).
     """
     f = state.L.shape[0]
@@ -235,10 +293,15 @@ def prepare_step(s_padded, state: PrepareState, *, w: int,
 
         # 2w. segmented stable sort on ``8/bits``x fewer minor words; the
         #     tiebreak lane is the LEAST significant key.
-        n_words = keys.shape[1]
-        minor_keys = (tie,) + tuple(keys[:, j]
-                                    for j in range(n_words - 1, -1, -1))
-        order = jnp.lexsort(minor_keys + (major,))
+        order = None
+        if sort_fuse:
+            order = _fused_sort_order(major, keys, tie, w=w,
+                                      bits=s_padded.bits, f=f)
+        if order is None:
+            n_words = keys.shape[1]
+            minor_keys = (tie,) + tuple(keys[:, j]
+                                        for j in range(n_words - 1, -1, -1))
+            order = jnp.lexsort(minor_keys + (major,))
         L = state.L[order]
         start = state.start[order]
         keys = keys[order]
@@ -315,7 +378,8 @@ def _jit_step(s_padded, state, w, use_pallas=False, word_keys=None):
 
 def prepare_step_batch(s_padded, states: PrepareState, *, w: int,
                        use_pallas: bool = False,
-                       word_keys: bool | None = None):
+                       word_keys: bool | None = None,
+                       sort_fuse: bool = False):
     """One elastic-range iteration for a (G, F) batch of virtual trees.
 
     Groups are independent, so the step is a plain vmap over the leading
@@ -323,22 +387,26 @@ def prepare_step_batch(s_padded, states: PrepareState, *, w: int,
     are exact fixed points of the step.  Callers may shard_map G over the
     mesh — the only cross-device data is the replicated string read
     (byte array or dense PackedText; the latter replicates ``8/bits``x
-    fewer bytes per device).
+    fewer bytes per device); :func:`repro.core.fabric.sharded_prepare`
+    is that driver.
 
     Returns (new_states, n_active) with ``n_active`` int32[G].
     """
     step = lambda st: prepare_step(s_padded, st, w=w, use_pallas=use_pallas,
-                                   word_keys=word_keys)
+                                   word_keys=word_keys, sort_fuse=sort_fuse)
     return jax.vmap(step)(states)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "use_pallas", "word_keys"),
+@functools.partial(jax.jit,
+                   static_argnames=("w", "use_pallas", "word_keys",
+                                    "sort_fuse"),
                    donate_argnums=(1,))
-def _jit_step_batch(s_padded, states, w, use_pallas=False, word_keys=None):
+def _jit_step_batch(s_padded, states, w, use_pallas=False, word_keys=None,
+                    sort_fuse=False):
     # donated state buffers: the host loop re-binds the result, so the
     # whole elastic loop runs in-place on device.
     return prepare_step_batch(s_padded, states, w=w, use_pallas=use_pallas,
-                              word_keys=word_keys)
+                              word_keys=word_keys, sort_fuse=sort_fuse)
 
 
 def elastic_range(cfg: ElasticConfig, n_active: int) -> int:
@@ -435,6 +503,7 @@ def subtree_prepare_batch(
     cfg: ElasticConfig = ElasticConfig(),
     stats: PrepareStats | None = None,
     max_iters: int = 10_000,
+    sort_fuse: bool = False,
 ) -> PrepareState:
     """Run SubTreePrepare to completion for ALL virtual trees at once.
 
@@ -478,7 +547,8 @@ def subtree_prepare_batch(
                                    n_active=int(n_active.sum()),
                                    groups_active=int((n_active > 0).sum())):
                 states, n_active_dev = _jit_step_batch(s_padded, states, w,
-                                                       use_pallas, word_keys)
+                                                       use_pallas, word_keys,
+                                                       sort_fuse)
             if stats is not None:
                 total_active = int(n_active.sum())
                 stats.iterations += 1

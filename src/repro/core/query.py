@@ -58,6 +58,25 @@ def npz_path(path: str) -> str:
     return path if path.endswith(".npz") else path + ".npz"
 
 
+def shard_npz_path(path: str, k: int) -> str:
+    """Per-shard archive path: the ``_shard{k}`` suffix goes BEFORE the
+    ``.npz`` extension (``idx.npz`` → ``idx_shard2.npz``), so sharded
+    saves never collide with the base archive or each other."""
+    base = npz_path(path)
+    return f"{base[:-4]}_shard{k}.npz"
+
+
+def route_depth(base: int, max_plen: int, route_cap: int) -> int:
+    """Depth of the dense top-trie routing table: the deepest ``k`` with
+    ``base**k`` cells under ``route_cap`` (and within the shallowest
+    prefix).  Shared by :meth:`DeviceIndex.from_prepare` and the sharded
+    fabric, which must pin ONE global depth across every shard."""
+    k_route = 1
+    while base ** (k_route + 1) <= route_cap and k_route < max_plen:
+        k_route += 1
+    return k_route
+
+
 def _pack_query_batch(s_text, patterns, lengths, word: bool):
     """Pattern packing (once per batch): zero symbols past each length in
     both the pattern and the all-ones mask, so masked suffix words compare
@@ -322,7 +341,8 @@ class DeviceIndex:
     def from_prepare(cls, *, alphabet, s: np.ndarray, prefixes, freqs,
                      ell, route_cap: int = 1 << 18,
                      max_pattern_len: int = 512,
-                     packing: str = "auto") -> "DeviceIndex":
+                     packing: str = "auto",
+                     k_route: int | None = None) -> "DeviceIndex":
         """Assemble directly from construction output — no SubTree dict.
 
         ``prefixes``: sorted (lexicographic) prefix tuples; ``freqs``: the
@@ -330,6 +350,11 @@ class DeviceIndex:
         same order (a device array from the batched engine stays on device;
         only the routing tables are computed host-side from the prefix
         metadata).  This is the ``EraIndexer.build_device`` fast path.
+
+        ``k_route`` overrides the routing-table depth: the sharded fabric
+        builds one DeviceIndex per shard over a SUBSET of the sub-trees
+        and every shard must share the GLOBAL depth (else route codes
+        would not be comparable across shards).
         """
         base = alphabet.base
         if not prefixes:
@@ -344,9 +369,8 @@ class DeviceIndex:
         for t, p in enumerate(prefixes):
             pref[t, : len(p)] = p
 
-        k_route = 1
-        while base ** (k_route + 1) <= route_cap and k_route < max_plen:
-            k_route += 1
+        if k_route is None:
+            k_route = route_depth(base, max_plen, route_cap)
         n_cells = base**k_route
 
         # each sub-tree owns the depth-k_route code interval [clo, chi] of

@@ -28,3 +28,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests (1x1, same axis names)."""
     return _make_mesh((1, 1), ("data", "model"))
+
+
+def make_fabric_mesh(n_shards: int | None = None):
+    """1-D ``("shard",)`` mesh for the sharded index fabric
+    (:mod:`repro.core.fabric`): the batched construction loop shard_maps
+    its G axis over it and ``ShardedIndex`` places one route-key shard
+    per device.  CPU-testable via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax import — ``repro.launch.shard_run`` handles that)."""
+    n = jax.device_count() if n_shards is None else n_shards
+    if not 1 <= n <= jax.device_count():
+        raise ValueError(
+            f"n_shards={n} needs 1..{jax.device_count()} devices")
+    return _make_mesh((n,), ("shard",))

@@ -24,6 +24,13 @@ This module adds that tier on top of :class:`repro.core.query.DeviceIndex`:
   resolves repeated hot patterns at admission, before they cost a batch
   row; hits skip the whole binary-search descent.  Exact-pattern keys
   make cache-on results byte-identical to cache-off.
+* **Sharded backend** — hand the server a
+  :class:`repro.core.fabric.ShardedIndex` and each admitted batch splits
+  by route key into per-shard sub-batches (own pow2 pad/pack, own
+  RouteCache, dispatched next to each shard's arrays); results merge
+  bit-identical to the single-index path.  ``--shards`` turns it on;
+  ``--metrics-port`` additionally exposes the live registry as a
+  pull-based Prometheus endpoint (:func:`start_metrics_server`).
 
 Config knobs follow the env-var GlobalConfig idiom the kernel selection
 already uses (``REPRO_KERNELS``): every :class:`ServeConfig` field reads a
@@ -40,6 +47,7 @@ from __future__ import annotations
 import argparse
 import collections
 import os
+import threading
 import time
 
 import jax
@@ -130,7 +138,15 @@ class AsyncServer:
     def __init__(self, dev: DeviceIndex, config: ServeConfig | None = None):
         self.dev = dev
         self.config = config or ServeConfig()
-        self.cache = RouteCache(self.config.cache_size)
+        # a ShardedIndex (repro.core.fabric) swaps in the sharded backend:
+        # each admitted batch splits by route key and every shard keeps
+        # its own pow2-bucketed pad/pack and RouteCache (duck-typed so the
+        # DeviceIndex path never imports the fabric)
+        self.sharded = hasattr(dev, "shards") and hasattr(dev, "shard_span")
+        n_caches = len(dev.shards) if self.sharded else 1
+        self.caches = [RouteCache(self.config.cache_size)
+                       for _ in range(n_caches)]
+        self.cache = self.caches[0]
         self.queue: collections.deque[_Request] = collections.deque()
         self.inflight: _InFlight | None = None
         self.results: dict[int, tuple] = {}
@@ -182,10 +198,11 @@ class AsyncServer:
                  "max_wait_ms batch-aging signal)")
         # callback gauges read live server state at snapshot time; on
         # re-registration the newest server's callbacks win
-        m.gauge("serve_cache_size", fn=lambda: len(self.cache),
-                help="route-cache entries")
-        m.gauge("serve_cache_hit_rate", fn=lambda: self.cache.hit_rate,
-                help="route-cache lifetime hit rate")
+        m.gauge("serve_cache_size",
+                fn=lambda: sum(len(c) for c in self.caches),
+                help="route-cache entries (all shards)")
+        m.gauge("serve_cache_hit_rate", fn=lambda: self._cache_hit_rate(),
+                help="route-cache lifetime hit rate (all shards)")
         m.gauge("serve_queue_depth_now", fn=lambda: len(self.queue),
                 help="admission-queue depth right now")
 
@@ -217,16 +234,28 @@ class AsyncServer:
             r *= 2
         return min(r, self.config.max_batch)
 
-    def _dispatch(self) -> _InFlight | None:
-        """Coalesce up to ``max_batch`` queued requests into one padded
-        batch and dispatch it WITHOUT blocking.  Cache hits resolve here
-        (no batch row); duplicate in-batch patterns share one row.
+    def _cache_hit_rate(self) -> float:
+        hits = sum(c.hits for c in self.caches)
+        total = hits + sum(c.misses for c in self.caches)
+        return hits / total if total else 0.0
 
-        Batch aging (``max_wait_ms``): a non-full batch is held open —
-        returns None — until the OLDEST queued request has waited
-        ``max_wait_ms``, so trickle load coalesces without unbounded
-        per-request staleness (previously the knob only bounded the
-        drain poll, never the request's own wait)."""
+    def _cache_stats(self) -> dict:
+        if not self.sharded:
+            return self.cache.stats()
+        agg = {"size": sum(len(c) for c in self.caches),
+               "capacity": sum(c.capacity for c in self.caches),
+               "hits": sum(c.hits for c in self.caches),
+               "misses": sum(c.misses for c in self.caches),
+               "evictions": sum(c.evictions for c in self.caches),
+               "hit_rate": self._cache_hit_rate()}
+        agg["per_shard"] = [c.stats() for c in self.caches]
+        return agg
+
+    def _take_batch(self) -> list[_Request] | None:
+        """Pop up to ``max_batch`` requests, honoring batch aging: a
+        non-full batch is held open — returns None — until the OLDEST
+        queued request has waited ``max_wait_ms``, so trickle load
+        coalesces without unbounded per-request staleness."""
         if not self.queue:
             return None
         cfg = self.config
@@ -245,6 +274,18 @@ class AsyncServer:
                               int(requests[0].t_admit * 1e9),
                               int(oldest_age_ms * 1e6),
                               rows=len(requests))
+        return requests
+
+    def _dispatch(self) -> _InFlight | None:
+        """Coalesce up to ``max_batch`` queued requests into one padded
+        batch and dispatch it WITHOUT blocking.  Cache hits resolve here
+        (no batch row); duplicate in-batch patterns share one row."""
+        requests = self._take_batch()
+        if requests is None:
+            return None
+        if self.sharded:
+            return self._dispatch_sharded(requests)
+        cfg = self.config
         keys = [self.dev.route_key(r.pattern) for r in requests]
 
         # with the cache OFF this is the honest one-row-per-request
@@ -313,9 +354,93 @@ class AsyncServer:
         self._m_batches.inc()
         return _InFlight(requests, keys, row_of, handles, n_rows)
 
+    def _dispatch_sharded(self, requests: list[_Request]) -> _InFlight:
+        """The ShardedIndex backend: split the batch by route key, then
+        pad/pack and dispatch one pow2-bucketed sub-batch PER SHARD (each
+        placed next to its shard's arrays).  Patterns shorter than
+        ``k_route`` may span shards; they take one row in every covered
+        shard and merge at consume time.  Cache lookups go to the primary
+        (lowest covered) shard's RouteCache — route→shard is
+        deterministic, so the per-shard caches partition the key space."""
+        cfg = self.config
+        keys = [self.dev.route_key(r.pattern) for r in requests]
+        caching = cfg.cache_size > 0
+        # per request: None = cache hit, else [(shard, local row), ...]
+        row_of: list[list | None] = []
+        key_rows: dict[tuple, list] = {}
+        hit_vals: dict[tuple, tuple] = {}
+        shard_req: dict[int, list[_Request]] = {}
+        for req, key in zip(requests, keys):
+            if caching:
+                if key in hit_vals:
+                    row_of.append(None)
+                    continue
+                if key in key_rows:  # in-batch duplicate: share the rows
+                    row_of.append(key_rows[key])
+                    continue
+            lo, hi = self.dev.shard_span(req.pattern)
+            if caching:
+                val = self.caches[lo].get(key)
+                if val is not None:
+                    self._m_cache_hits.inc()
+                    hit_vals[key] = val
+                    row_of.append(None)
+                    continue
+                self._m_cache_misses.inc()
+            rows = []
+            for k in range(lo, hi + 1):
+                local = shard_req.setdefault(k, [])
+                rows.append((k, len(local)))
+                local.append(req)
+            if caching:
+                key_rows[key] = rows
+            row_of.append(rows)
+
+        # shard k -> (real rows, start, count, win) device handles
+        shard_handles: dict[int, tuple] = {}
+        n_rows = 0
+        for k, reqs in sorted(shard_req.items()):
+            dev = self.dev.shards[k]
+            pats = [r.pattern for r in reqs]
+            m_pad = self._bucket_width(-(-max(len(p) for p in pats) // 4) * 4)
+            b_pad = self._bucket_rows(len(reqs))
+            with self._tr.span("serve/pad_pack", shard=k, rows=len(reqs),
+                               b_pad=b_pad, m_pad=m_pad):
+                padded, lengths, route = dev.pad_batch(
+                    pats, m_pad=m_pad, b_pad=b_pad)
+                self.shapes.add((m_pad, b_pad))
+                self.n_rows_padded += b_pad
+                target = next(iter(dev.ell.devices()))
+                padded = jax.device_put(padded, target)
+                lengths = jax.device_put(lengths, target)
+                route = jax.device_put(route, target)
+            self._m_rows_real.inc(len(reqs))
+            self._m_rows_padded.inc(b_pad)
+            self._h_batch_fill.observe(len(reqs) / b_pad)
+            pat_max = max(r.pat_max for r in reqs)
+            with self._tr.span("serve/device_dispatch", shard=k,
+                               rows=len(reqs), b_pad=b_pad, m_pad=m_pad,
+                               fetch=cfg.fetch):
+                if cfg.fetch:
+                    start, count, win, _ = dev.find_fetch_ranges(
+                        padded, lengths, route, fetch=cfg.fetch,
+                        pat_max=pat_max)
+                else:
+                    start, count = dev.find_batch_ranges(
+                        padded, lengths, route, pat_max=pat_max)
+                    win = None
+                shard_handles[k] = (len(reqs), start, count, win)
+            n_rows += len(reqs)
+        self.n_batches += 1
+        self._m_batches.inc()
+        return _InFlight(requests, keys, row_of, (hit_vals, shard_handles),
+                         n_rows)
+
     def _consume(self, flight: _InFlight) -> None:
         """Materialize one batch's device results (the only blocking point)
         and scatter them back to requests; misses populate the cache."""
+        if self.sharded:
+            return self._consume_sharded(flight)
         cfg = self.config
         hit_vals = flight.handles[0]
         ell = self.dev.ell_host
@@ -343,6 +468,50 @@ class AsyncServer:
                 done[row] = val
                 if caching:
                     self.cache.put(key, val)
+            self.results[req.rid] = val
+            self.latency_s.append(now - req.t_admit)
+
+    def _consume_sharded(self, flight: _InFlight) -> None:
+        """Materialize every shard's sub-batch and merge per request:
+        positions concatenate and sort (shards own disjoint leaf ranges,
+        so the merge is associative and bit-identical to the unsharded
+        engine); the fetch window comes from the first route-ordered
+        shard with a hit — the same rule as
+        :meth:`repro.core.fabric.ShardedIndex.find_fetch_batch`."""
+        cfg = self.config
+        hit_vals, shard_handles = flight.handles
+        mats: dict[int, tuple] = {}
+        for k, (n_k, start, count, win) in sorted(shard_handles.items()):
+            with self._tr.span("serve/consume_sync", shard=k, rows=n_k):
+                mats[k] = (np.asarray(start)[:n_k], np.asarray(count)[:n_k],
+                           np.asarray(win)[:n_k] if cfg.fetch else None)
+        done: dict[tuple, tuple] = {}
+        caching = cfg.cache_size > 0
+        now = time.perf_counter()
+        for req, key, rows in zip(flight.requests, flight.keys,
+                                  flight.row_of):
+            if rows is None:
+                val = hit_vals[key]
+            elif tuple(rows) in done:
+                val = done[tuple(rows)]
+            else:
+                parts, win_out = [], None
+                for k, row in rows:
+                    start, count, win = mats[k]
+                    s, c = int(start[row]), int(count[row])
+                    if c:
+                        ell = self.dev.shards[k].ell_host
+                        parts.append(ell[s : s + c].astype(np.int64))
+                        if cfg.fetch and win_out is None:
+                            win_out = win[row].copy()
+                if cfg.fetch and win_out is None:
+                    win_out = np.full(cfg.fetch, -1, np.int32)
+                pos = (np.sort(np.concatenate(parts)) if parts
+                       else np.empty(0, np.int64))
+                val = (pos, win_out if cfg.fetch else None)
+                done[tuple(rows)] = val
+                if caching:
+                    self.caches[rows[0][0]].put(key, val)
             self.results[req.rid] = val
             self.latency_s.append(now - req.t_admit)
 
@@ -395,8 +564,43 @@ class AsyncServer:
             "shapes": sorted(self.shapes),
             "lat_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
             "lat_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
-            "cache": self.cache.stats(),
+            "cache": self._cache_stats(),
         }
+
+
+def start_metrics_server(port: int, host: str = "127.0.0.1"):
+    """A pull-based metrics endpoint on a stdlib ``http.server`` daemon
+    thread: GET ``/`` or ``/metrics`` returns the live registry in the
+    Prometheus text exposition format (the same payload
+    ``obs.export_all`` writes to ``era_metrics.prom``), so a scraper can
+    poll a long-lived serving process instead of waiting for the exit
+    snapshot.  ``port=0`` binds an ephemeral port (tests); the bound port
+    is ``server.server_address[1]``.  Returns the server — call
+    ``shutdown()`` to stop it; off unless a driver opts in
+    (``--metrics-port``)."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.split("?", 1)[0].rstrip("/") not in ("", "/metrics"):
+                self.send_error(404)
+                return
+            body = obs.metrics().to_prometheus().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):  # keep the serving loop's stdout clean
+            pass
+
+    server = ThreadingHTTPServer((host, port), Handler)
+    thread = threading.Thread(target=server.serve_forever,
+                              name="era-metrics", daemon=True)
+    thread.start()
+    return server
 
 
 def make_hot_workload(s: np.ndarray, rng: np.random.Generator, *,
@@ -446,22 +650,38 @@ def serve_stream(dataset_name: str = "dna", *, n: int = 100_000,
                  requests: int = 4096, hot_frac: float = 0.8,
                  hot_pool: int = 32, min_len: int = 4, max_len: int = 24,
                  memory_bytes: int = 1 << 20, seed: int = 0,
-                 index_path: str | None = None, mode: str = "all"):
+                 index_path: str | None = None, mode: str = "all",
+                 shards: int = 0):
     """Build/load an index, run the serving stack, report stats per mode.
 
     Modes: ``sync`` (pipeline off, cache off — the one-batch-at-a-time
     baseline), ``async`` (pipeline on, cache off), ``cached`` (pipeline
-    on, cache on), or ``all``.
+    on, cache on), or ``all``.  ``shards`` > 0 serves a
+    :class:`repro.core.fabric.ShardedIndex` with that many route-key
+    shards (0 = the single DeviceIndex path).
     """
     max_len4 = -(-max_len // 4) * 4
 
-    def build(s, alphabet):
-        cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
-        return EraIndexer(alphabet, cfg).build_device(
-            s, max_pattern_len=max(64, max_len4))
+    if shards > 0:
+        from repro.core.fabric import ShardedIndex
 
-    dev, s, alphabet, t_build = load_or_build(
-        index_path, dataset_name, n, seed, load=DeviceIndex.load, build=build)
+        def build(s, alphabet):
+            cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
+            return EraIndexer(alphabet, cfg).build_sharded(
+                s, n_shards=shards, max_pattern_len=max(64, max_len4))
+
+        dev, s, alphabet, t_build = load_or_build(
+            index_path, dataset_name, n, seed, load=ShardedIndex.load,
+            build=build, sharded=True)
+    else:
+        def build(s, alphabet):
+            cfg = EraConfig(memory_bytes=memory_bytes, build_impl="none")
+            return EraIndexer(alphabet, cfg).build_device(
+                s, max_pattern_len=max(64, max_len4))
+
+        dev, s, alphabet, t_build = load_or_build(
+            index_path, dataset_name, n, seed, load=DeviceIndex.load,
+            build=build)
     rng = np.random.default_rng(seed + 7)
     pats = make_hot_workload(s, rng, n_requests=requests, hot_pool=hot_pool,
                              hot_frac=hot_frac, min_len=min_len,
@@ -504,16 +724,31 @@ def main():
                     choices=["all", "sync", "async", "cached"])
     ap.add_argument("--index-path", default=None,
                     help="npz cache: load the flattened index if the file "
-                         "exists, else build once and save it there")
+                         "exists, else build once and save it there "
+                         "(per-shard _shard{k}.npz archives with --shards)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve a ShardedIndex with this many route-key "
+                         "shards (0 = single DeviceIndex)")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="expose the live metrics registry as a Prometheus "
+                         "text endpoint on this port (0 = off)")
     args = ap.parse_args()
+    metrics_srv = None
+    if args.metrics_port:
+        metrics_srv = start_metrics_server(args.metrics_port)
+        print(f"metrics: http://127.0.0.1:"
+              f"{metrics_srv.server_address[1]}/metrics")
     report = serve_stream(args.dataset, n=args.n, requests=args.requests,
                           hot_frac=args.hot_frac, hot_pool=args.hot_pool,
                           min_len=args.min_len, max_len=args.max_len,
-                          index_path=args.index_path, mode=args.mode)
+                          index_path=args.index_path, mode=args.mode,
+                          shards=args.shards)
     for key, val in report.items():
         print(f"{key}: {val}")
     for path in obs.export_all():
         print(f"wrote {path}")
+    if metrics_srv is not None:
+        metrics_srv.shutdown()
 
 
 if __name__ == "__main__":

@@ -26,16 +26,35 @@ def normalize_npz(path: str | None) -> str | None:
     return None if path is None else npz_path(path)
 
 
-def will_load(index_path: str | None) -> bool:
+def shard_archives(index_path: str | None) -> list:
+    """The ``{path}_shard{k}.npz`` siblings a sharded index saved under
+    ``index_path``, in shard order (empty when there are none)."""
+    if index_path is None:
+        return []
+    from repro.core.fabric import ShardedIndex
+    return ShardedIndex.shard_files(index_path)
+
+
+def will_load(index_path: str | None, *, sharded: bool = False) -> bool:
     """True when :func:`load_or_build` would take the cache path — lets
-    drivers run cold-path preconditions before paying the build."""
+    drivers run cold-path preconditions before paying the build.
+
+    A sharded index never writes the base ``{path}.npz`` — it saves
+    ``{path}_shard{k}.npz`` per shard — so the existence check must
+    normalize the per-shard suffix rather than collide on the base name
+    (a DeviceIndex cache and a ShardedIndex cache under the same path
+    are distinct archives).
+    """
+    if sharded:
+        return bool(shard_archives(index_path))
     path = normalize_npz(index_path)
     return path is not None and os.path.exists(path)
 
 
 def load_or_build(index_path: str | None, dataset_name: str, n: int,
                   seed: int, *, load: Callable, build: Callable,
-                  dev_of: Callable = lambda obj: obj):
+                  dev_of: Callable = lambda obj: obj,
+                  sharded: bool = False):
     """Load ``load(path)`` from the npz cache, else ``build(s, alphabet)``
     and save.  ``dev_of`` extracts the underlying DeviceIndex (identity for
     query_serve, ``eng.dev`` for analytics_serve) for validation and string
@@ -46,10 +65,16 @@ def load_or_build(index_path: str | None, dataset_name: str, n: int,
     ``seed`` is deliberately not validated: the cache's purpose is reusing
     one built index across runs, and the served string is always recovered
     from the npz itself, so results stay self-consistent.
+
+    ``sharded`` switches the cache discipline to per-shard archives
+    (``{path}_shard{k}.npz``): existence means "any shard archive
+    present", and ``load``/``build(...).save`` are expected to be the
+    :class:`repro.core.fabric.ShardedIndex` pair, which handle the
+    suffixing themselves.
     """
-    path = normalize_npz(index_path)
+    path = index_path if sharded else normalize_npz(index_path)
     t0 = time.perf_counter()
-    if path and os.path.exists(path):
+    if path and will_load(index_path, sharded=sharded):
         obj = load(path)
         dev = dev_of(obj)
         s = dev.string_codes()  # n_leaves symbols == |S|, any representation

@@ -166,18 +166,32 @@ class Tracer:
             self.n_dropped = 0
 
     def to_chrome(self) -> dict:
-        """The Chrome ``trace_event`` object format (Perfetto-loadable)."""
+        """The Chrome ``trace_event`` object format (Perfetto-loadable).
+
+        Spans carrying a ``shard`` attribute (the sharded index fabric
+        stamps one on every per-shard dispatch) get that shard id as
+        their ``pid``, so a multi-shard run renders as one process track
+        per shard and traces from different shards merge side by side;
+        everything else stays on the host process track.
+        """
         pid = os.getpid()
         out = [{"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
                 "args": {"name": "repro-era"}}]
+        shard_pids: set[int] = set()
         for e in self.events():
             cat = e["name"].split("/", 1)[0]
+            shard = e["args"].get("shard")
+            if isinstance(shard, (int, float)) and not isinstance(shard, bool):
+                evt_pid = int(shard)
+                shard_pids.add(evt_pid)
+            else:
+                evt_pid = pid
             evt = {
                 "name": e["name"],
                 "cat": cat,
                 "ph": e["ph"],
                 "ts": e["ts_ns"] / 1e3,   # trace_event ts is microseconds
-                "pid": pid,
+                "pid": evt_pid,
                 "tid": e["tid"],
                 "args": {k: _jsonable(v) for k, v in e["args"].items()},
             }
@@ -186,6 +200,9 @@ class Tracer:
             else:
                 evt["s"] = "t"            # instant scope: thread
             out.append(evt)
+        for k in sorted(shard_pids):
+            out.insert(1, {"name": "process_name", "ph": "M", "pid": k,
+                           "tid": 0, "args": {"name": f"repro-era shard {k}"}})
         return {"traceEvents": out, "displayTimeUnit": "ms"}
 
     def to_jsonl(self) -> str:
