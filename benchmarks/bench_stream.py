@@ -1,0 +1,113 @@
+"""Out-of-core streaming construction + incremental append throughput.
+
+Four rows:
+
+* ``stream/build_sync``     — chunked build, standby buffer DISABLED (the
+  synchronous baseline: every chunk's host→device copy is on the critical
+  path).
+* ``stream/build_overlap``  — same plan with the double-buffered pipeline;
+  derived carries ``overlap_frac`` (fraction of copy seconds hidden
+  behind the previous chunk's elastic loop — the ISSUE gate is ≥ 0.5).
+* ``stream/rebuild``        — full one-shot rebuild of an appended string
+  (the baseline an incremental append competes with).
+* ``stream/append``         — ``EraIndexer.append_device``: terminal-tail
+  scan + incremental re-partition + elastic loop over only the affected
+  sub-trees; derived carries the speedup vs the rebuild row (ISSUE gate:
+  ≥ 5x for a ≤ 10% append), ``reuse_frac`` of leaf segments carried over
+  verbatim, and whether the incremental partition fell back to a full
+  scan (it must not at these settings).
+
+Both legs are warmed once before timing so jit compilation and the query
+kernels' dispatch are off the clock — the steady-state regime is the one
+that matters for a long-lived index absorbing appends.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+
+def _bench_stream_build(quick: bool) -> None:
+    from repro.core.api import EraConfig, EraIndexer
+    from repro.data.strings import dataset
+
+    n = 60_000 if quick else 200_000
+    budget = 48 << 10
+    repeats = 2 if quick else 3
+    s, alphabet = dataset("dna", n, seed=0)
+    ix = EraIndexer(alphabet, EraConfig(memory_bytes=1 << 20,
+                                        build_impl="none"))
+
+    reports: dict[str, object] = {}
+
+    def build(overlap: bool):
+        dev, sr = ix.build_stream(s, device_budget=budget, overlap=overlap)
+        reports["on" if overlap else "off"] = sr
+        return dev
+
+    t_sync = timeit(lambda: build(False), repeats=repeats, warmup=1)
+    t_over = timeit(lambda: build(True), repeats=repeats, warmup=1)
+    sr_off, sr_on = reports["off"], reports["on"]
+    emit(f"stream/build_sync/n={n}", t_sync,
+         f"chunks={sr_off.n_chunks} copied_mb={sr_off.bytes_copied / 1e6:.1f} "
+         f"overlap_frac={sr_off.overlap_frac:.2f}")
+    emit(f"stream/build_overlap/n={n}", t_over,
+         f"chunks={sr_on.n_chunks} overlap_frac={sr_on.overlap_frac:.2f} "
+         f"copy_ms={sr_on.copy_s * 1e3:.1f} "
+         f"hidden_ms={sr_on.copy_hidden_s * 1e3:.1f} "
+         f"speedup_vs_sync={t_sync / max(t_over, 1e-9):.2f}x")
+
+
+def _bench_append(quick: bool) -> None:
+    from repro.core.api import AppendReport, EraConfig, EraIndexer
+    from repro.data.strings import dataset
+
+    # the proven ≥5x regime: many small sub-trees (tiny f_max) so the
+    # affected set is a thin slice of the partition; the appended run is
+    # 0.5% of the string, far under the ISSUE's ≤10% bound
+    n = 120_000 if quick else 240_000
+    m = 300 if quick else 600
+    mem = 4 << 10
+    repeats = 3
+    s_old, alphabet = dataset("dna", n, seed=0)
+    rng = np.random.default_rng(3)
+    extra = rng.integers(0, alphabet.base - 1, size=m).astype(s_old.dtype)
+    s_new = np.concatenate([s_old[:-1], extra, s_old[-1:]])
+
+    ix = EraIndexer(alphabet, EraConfig(memory_bytes=mem, build_impl="none"))
+    dev_old = ix.build_device(s_old)
+
+    reports: dict[str, AppendReport] = {}
+
+    def rebuild():
+        ix.build_device(s_new)
+
+    def append():
+        rep = AppendReport()
+        ix.append_device(dev_old, s_new, rep)
+        reports["last"] = rep
+
+    t_full = timeit(rebuild, repeats=repeats, warmup=1)
+    t_inc = timeit(append, repeats=repeats, warmup=1)
+    rep = reports["last"]
+    emit(f"stream/rebuild/n={n + m}", t_full,
+         f"prefixes={rep.n_prefixes} engine=one_shot")
+    emit(f"stream/append/n={n}+{m}", t_inc,
+         f"speedup={t_full / max(t_inc, 1e-9):.2f}x "
+         f"reuse_frac={rep.reuse_frac:.2f} "
+         f"affected={rep.n_affected}/{rep.n_prefixes} "
+         f"partition_fallback={rep.partition_fallback} "
+         f"scan_ms={rep.t_scan * 1e3:.1f} part_ms={rep.t_partition * 1e3:.1f} "
+         f"prep_ms={rep.t_prepare * 1e3:.1f} merge_ms={rep.t_merge * 1e3:.1f}")
+
+
+def run(quick: bool = True) -> None:
+    _bench_stream_build(quick)
+    _bench_append(quick)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -10,8 +10,9 @@ current run against the most recent committed artifact:
     python -m benchmarks.check_regression \
         --baseline BENCH_PR4.json --current BENCH_PR5.json --strict
 
-Only the device-hot suites are gated (``packed/``, ``query/`` and
-``serve/`` rows; ``build/`` rows are compared warn-only): a row whose
+Only the device-hot suites are gated (``packed/``, ``query/``,
+``serve/`` and ``stream/`` rows; ``build/`` rows are compared
+warn-only): a row whose
 ``us_per_call`` grew more than
 ``--threshold`` (default 20%) over the baseline is reported as a
 throughput drop.  Exit status is 0 unless ``--strict`` (warn-by-default:
@@ -29,7 +30,7 @@ import re
 import sys
 
 # suites gated for regressions (prefix of the row name)
-WATCH_PREFIXES = ("packed/", "query/", "serve/")
+WATCH_PREFIXES = ("packed/", "query/", "serve/", "stream/")
 # suites compared and reported but NEVER escalated to drops — construction
 # timings are dominated by host-side build work and too noisy to gate
 WARN_PREFIXES = ("build/",)

@@ -14,6 +14,7 @@
   analytics  bench_analytics  LCP analytics engine vs per-position Python
   packed     bench_packed     dense k-bit string gather/probe vs byte path
   fabric     bench_fabric     sharded SPMD construction vs single-device
+  stream     bench_stream     out-of-core streaming build + incremental append
 
 ``python -m benchmarks.run``            — quick pass over everything
 ``python -m benchmarks.run --full``     — paper-scale (slower) settings
@@ -59,6 +60,7 @@ def main() -> None:
         bench_roofline,
         bench_rtuning,
         bench_scaling,
+        bench_stream,
         bench_vertical,
         common,
     )
@@ -77,6 +79,7 @@ def main() -> None:
         "analytics": bench_analytics.run,
         "packed": bench_packed.run,
         "fabric": bench_fabric.run,
+        "stream": bench_stream.run,
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

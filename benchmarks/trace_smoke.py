@@ -33,6 +33,8 @@ import numpy as np
 REQUIRED_SPANS = (
     "build/vertical",
     "prepare/step",
+    "stream/pipeline",
+    "stream/chunk",
     "serve/queue_wait",
     "serve/pad_pack",
     "serve/device_dispatch",
@@ -82,9 +84,14 @@ def main() -> None:
     # ---- instrumented arm: build + serve with the recorder on -------------
     obs.configure(trace=True, metrics_on=True, clear=True)
     s = DNA.random_string(args.n, seed=0)
-    dev = EraIndexer(DNA, EraConfig(
-        memory_bytes=1 << 20, build_impl="none")).build_device(
-            s, max_pattern_len=64)
+    # the streaming builder (budget forces several chunks) exercises the
+    # stream/* spans and emits the same index the one-shot path would
+    indexer = EraIndexer(DNA, EraConfig(
+        memory_bytes=1 << 20, build_impl="none"))
+    dev, sreport = indexer.build_stream(
+        s, device_budget=64 << 10, max_pattern_len=64)
+    print(f"stream build: {sreport.n_chunks} chunks, "
+          f"overlap_frac={sreport.overlap_frac:.2f}")
     rng = np.random.default_rng(7)
     pats = make_hot_workload(s, rng, n_requests=args.requests, hot_pool=32,
                              hot_frac=0.8, min_len=4, max_len=24,
@@ -109,6 +116,23 @@ def main() -> None:
     for span in REQUIRED_SPANS:
         if span not in names:
             problems.append(f"trace missing required span {span!r}")
+
+    # span links: every serving batch's device_dispatch span must carry a
+    # link id that some serve/queue_wait span also carries — the join key
+    # that attributes device work back to the admission wait that fed it
+    link_of = lambda e: (e.get("args") or {}).get("link")
+    qw_links = {link_of(e) for e in trace["traceEvents"]
+                if e["name"] == "serve/queue_wait"} - {None}
+    dd_links = [link_of(e) for e in trace["traceEvents"]
+                if e["name"] == "serve/device_dispatch"]
+    if not dd_links or None in dd_links:
+        problems.append("device_dispatch spans missing link attribute")
+    elif not set(dd_links) <= qw_links:
+        problems.append(
+            f"device_dispatch links {sorted(set(dd_links) - qw_links)} "
+            "have no matching serve/queue_wait span")
+    elif not qw_links:
+        problems.append("no linked serve/queue_wait spans in trace")
 
     with open(prom_path) as f:
         prom = f.read()

@@ -361,7 +361,8 @@ class ShardedIndex:
     def from_flat(cls, *, alphabet, s, prefixes, freqs, ell,
                   n_shards: int, route_cap: int = 1 << 18,
                   max_pattern_len: int = 512, packing: str = "auto",
-                  place: bool | None = None) -> "ShardedIndex":
+                  place: bool | None = None,
+                  epoch: int = 0) -> "ShardedIndex":
         """Build from flattened construction output (the same inputs as
         :meth:`DeviceIndex.from_prepare`) split into ≤ ``n_shards``
         route-contiguous shards.  ``place`` distributes shard arrays
@@ -383,7 +384,7 @@ class ShardedIndex:
                 alphabet=alphabet, s=s, prefixes=prefixes[sl],
                 freqs=freqs[sl], ell=ell[offs[sl.start]:offs[sl.stop]],
                 route_cap=route_cap, max_pattern_len=max_pattern_len,
-                packing=packing, k_route=k_route)
+                packing=packing, k_route=k_route, epoch=epoch)
             if place:
                 dev = _place_index(dev, devices[k % len(devices)])
             shards.append(dev)
@@ -467,6 +468,32 @@ class ShardedIndex:
     @property
     def n_leaves(self) -> int:
         return sum(int(d.ell.shape[0]) for d in self.shards)
+
+    @property
+    def epoch(self) -> int:
+        """Mutation generation (uniform across shards — every append
+        rebuilds all shards from the merged flat layout)."""
+        return self.shards[0].epoch
+
+    def flat_table(self):
+        """The global flattened view ``(prefixes, freqs, ell)``.
+
+        Shards are route-ordered and each shard's sub-trees are sorted, so
+        concatenating the per-shard tables reproduces EXACTLY the layout
+        :meth:`DeviceIndex.from_prepare` flattens — this is what the
+        incremental-append merge consumes to reuse unaffected leaf
+        segments before re-sharding with :meth:`from_flat`."""
+        prefixes: list[tuple] = []
+        freq_parts, ell_parts = [], []
+        for dev in self.shards:
+            plen = np.asarray(dev.sub_plen)
+            pref = np.asarray(dev.sub_prefix)
+            prefixes += [tuple(int(c) for c in pref[t, :plen[t]])
+                         for t in range(len(plen))]
+            freq_parts.append(np.asarray(dev.sub_freq))
+            ell_parts.append(dev.ell_host)
+        return (prefixes, np.concatenate(freq_parts).astype(np.int32),
+                np.concatenate(ell_parts).astype(np.int32))
 
     def string_codes(self) -> np.ndarray:
         # every shard replicates the FULL string in s_text, but a shard's

@@ -217,6 +217,69 @@ def pack_text(codes: np.ndarray, alphabet, *, extra: int = 8) -> PackedText:
                       bits=bits, terminal=alphabet.terminal_code)
 
 
+def pack_text_stream(chunks, alphabet, *, extra: int = 8) -> PackedText:
+    """Dense-pack a terminated code string delivered in CHUNKS.
+
+    ``chunks`` is any iterable of uint8 code arrays whose concatenation is
+    a terminated code string (the :func:`pack_text` input contract); the
+    chunks may have arbitrary sizes and are consumed one at a time, so the
+    peak host footprint is one chunk plus a ``< syms_per_word`` carry —
+    this is what lets :mod:`repro.launch.warmstart` migrate legacy byte
+    archives to dense storage without materializing the decoded string.
+
+    Bit-identical to ``pack_text`` on the concatenated string: symbols are
+    committed to words only on ``syms_per_word``-aligned boundaries, the
+    final symbol of the stream is held back one step (it must be the
+    terminal, which is virtual and never stored), and the zero tail is
+    sized by the same ``n_real + extra`` formula.
+    """
+    bits = alphabet.dense_bits
+    spw = 32 // bits
+    shifts = (32 - bits * (np.arange(spw, dtype=np.uint32) + 1))
+    word_parts: list[np.ndarray] = []
+    carry = np.zeros(0, np.uint32)   # committed symbols short of a word
+    pending = None                   # last symbol seen; terminal candidate
+    n_real = 0
+
+    def commit(sym: np.ndarray) -> None:
+        nonlocal carry, n_real
+        if sym.size and sym.max() >= (1 << bits):
+            raise ValueError(
+                f"codes exceed {bits}-bit dense range for alphabet "
+                f"{alphabet.name!r} (max code {int(sym.max())})")
+        n_real += sym.size
+        buf = np.concatenate([carry, sym]) if carry.size else sym
+        n_full = buf.size // spw
+        if n_full:
+            head = buf[:n_full * spw].reshape(n_full, spw)
+            word_parts.append(
+                (head << shifts[None, :]).sum(axis=1, dtype=np.uint32))
+        carry = buf[n_full * spw:]
+
+    for chunk in chunks:
+        c = np.asarray(chunk, np.uint8).astype(np.uint32)
+        if c.size == 0:
+            continue
+        if pending is not None:
+            c = np.concatenate([[pending], c])
+        pending = int(c[-1])
+        commit(c[:-1])
+    if pending is None or pending != alphabet.terminal_code:
+        raise ValueError("pack_text_stream needs a terminated code string")
+
+    n_words = -(-(n_real + extra) // spw) + 1  # same formula as pack_text
+    tail = np.zeros(n_words * spw - n_real, np.uint32)
+    commit_real = n_real                       # commit() would double-count
+    commit(tail)
+    n_real = commit_real
+    assert carry.size == 0
+    words = (np.concatenate(word_parts) if word_parts
+             else np.zeros(0, np.uint32))
+    return PackedText(words=jnp.asarray(words),
+                      n_real=jnp.asarray(n_real, jnp.int32),
+                      bits=bits, terminal=alphabet.terminal_code)
+
+
 def gather_symbols_dense(pt: PackedText, offs: jax.Array, w: int) -> jax.Array:
     """Read ``w`` symbol codes at each offset from dense storage.
 

@@ -125,20 +125,27 @@ def init_state(group: VirtualTree, capacity: int) -> PrepareState:
     )
 
 
-def init_batch(groups: list[VirtualTree], capacity: int) -> PrepareState:
-    """Stack ALL groups into one padded (G, F) state for the batched engine."""
+def _host_init_batch(groups: list[VirtualTree], capacity: int) -> PrepareState:
+    """Host-side (numpy) stacked (G, F) state — the unit the streaming
+    pipeline stages through pinned buffers before ``jax.device_put``."""
     if not groups:
         raise ValueError("init_batch needs at least one group")
     cols = [_init_arrays(g, capacity) for g in groups]
     g = len(groups)
     return PrepareState(
-        L=jnp.asarray(np.stack([c[0] for c in cols])),
-        start=jnp.asarray(np.stack([c[1] for c in cols])),
-        area=jnp.asarray(np.stack([c[2] for c in cols])),
-        b_off=jnp.full((g, capacity), -1, jnp.int32),
-        b_c1=jnp.zeros((g, capacity), jnp.int32),
-        b_c2=jnp.zeros((g, capacity), jnp.int32),
+        L=np.stack([c[0] for c in cols]),
+        start=np.stack([c[1] for c in cols]),
+        area=np.stack([c[2] for c in cols]),
+        b_off=np.full((g, capacity), -1, np.int32),
+        b_c1=np.zeros((g, capacity), np.int32),
+        b_c2=np.zeros((g, capacity), np.int32),
     )
+
+
+def init_batch(groups: list[VirtualTree], capacity: int) -> PrepareState:
+    """Stack ALL groups into one padded (G, F) state for the batched engine."""
+    host = _host_init_batch(groups, capacity)
+    return PrepareState(*(jnp.asarray(a) for a in host))
 
 
 # ---------------------------------------------------------------------------
@@ -561,6 +568,191 @@ def subtree_prepare_batch(
     _record_prepare_metrics(group_iters.tolist(),
                             time.perf_counter() - t0, cfg)
     return states
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Accounting for one out-of-core streaming build (paper §4.1 scaled
+    to device memory): how many chunks the planner cut, how much
+    host→device traffic the pipeline moved, and how much of it was hidden
+    behind the elastic-range loop of the previous chunk."""
+
+    n_chunks: int = 0
+    overlap: bool = True
+    groups: int = 0
+    iterations: int = 0            # summed over chunk loops
+    bytes_copied: int = 0          # host->device state traffic
+    copy_s: float = 0.0            # estimated total copy wall time
+    copy_hidden_s: float = 0.0     # portion overlapped with compute
+    copy_wait_s: float = 0.0       # blocking remainder actually observed
+    chunk_iters: list = dataclasses.field(default_factory=list)
+
+    @property
+    def overlap_frac(self) -> float:
+        """Fraction of host→device transfer hidden behind compute."""
+        return self.copy_hidden_s / self.copy_s if self.copy_s > 0 else 0.0
+
+
+def _state_nbytes(state: PrepareState) -> int:
+    return sum(int(np.asarray(a).nbytes) for a in state)
+
+
+def subtree_prepare_stream(
+    s_padded,
+    groups: list[VirtualTree],
+    capacity: int,
+    cfg: ElasticConfig = ElasticConfig(),
+    *,
+    plan=None,
+    device_budget: int | None = None,
+    overlap: bool = True,
+    stats: PrepareStats | None = None,
+    report: StreamReport | None = None,
+    max_iters: int = 10_000,
+    sort_fuse: bool = False,
+) -> tuple[PrepareState, StreamReport]:
+    """Out-of-core SubTreePrepare: pipeline group chunks through a device
+    memory budget with double-buffered host→device copies.
+
+    The planner (:func:`repro.core.iomodel.plan_stream`, or an explicit
+    ``plan``) slices the group list into contiguous chunks whose
+    double-buffered (G_chunk, F) state fits ``device_budget``.  Each chunk
+    runs the same donated elastic-range loop as
+    :func:`subtree_prepare_batch`; while chunk k iterates, chunk k+1's
+    host-initialized state is ``jax.device_put`` into a standby buffer
+    right after the first step is dispatched, so the copy proceeds behind
+    the in-flight compute — the construction-side mirror of the serving
+    tier hiding pad/pack behind dispatch.  ``overlap=False`` degrades to
+    synchronous copy-then-compute (the benchmark baseline).
+
+    The elastic range is keyed per chunk to the chunk's busiest group.
+    Range choice never changes results (Fig. 9b invariant), so the final
+    arrays are bit-identical to the one-shot batched build; with the
+    default budget (``r_budget_symbols >= w_max * F``) the schedule is
+    moreover the same constant ``w_max`` both ways.
+
+    Returns ``(state, report)`` where ``state`` is the full host-resident
+    (G, F) :class:`PrepareState` (numpy arrays, original group order) and
+    ``report`` carries the copy-overlap accounting.
+    """
+    from repro.core import iomodel
+
+    if not groups:
+        raise ValueError("subtree_prepare_stream needs at least one group")
+    if plan is None:
+        plan = iomodel.plan_stream(len(groups), capacity,
+                                   budget_bytes=device_budget,
+                                   double_buffer=overlap)
+    rep = report if report is not None else StreamReport()
+    rep.n_chunks = plan.n_chunks
+    rep.overlap = overlap
+    rep.groups = len(groups)
+
+    use_pallas = kops._use_pallas()
+    word_keys = kops._use_word_compare()
+    g_total = len(groups)
+    out = PrepareState(*(np.empty((g_total, capacity), np.int32)
+                         for _ in range(6)))
+    chunks = list(plan.chunks)
+    group_iters = np.zeros(g_total, np.int64)
+    copy_rate = None  # bytes/s, calibrated by the chunk-0 synchronous copy
+    t0 = time.perf_counter()
+
+    def _copy_sync(host_state: PrepareState) -> PrepareState:
+        nonlocal copy_rate
+        nb = _state_nbytes(host_state)
+        t = time.perf_counter()
+        dev = jax.device_put(host_state)
+        dev = jax.block_until_ready(dev)
+        dt = max(time.perf_counter() - t, 1e-9)
+        rep.copy_s += dt
+        rep.bytes_copied += nb
+        if copy_rate is None:
+            copy_rate = nb / dt
+        return dev
+
+    with obs.tracer().span("stream/pipeline", chunks=plan.n_chunks,
+                           groups=g_total, capacity=capacity,
+                           overlap=overlap) as sp_pipe:
+        # chunk 0 has no in-flight compute to hide behind: copy it
+        # synchronously, which also calibrates the copy-rate estimate
+        # used for the prefetched chunks.
+        lo0, hi0 = chunks[0]
+        states = _copy_sync(_host_init_batch(groups[lo0:hi0], capacity))
+        for ci, (lo, hi) in enumerate(chunks):
+            nxt = chunks[ci + 1] if ci + 1 < len(chunks) else None
+            host_next = (_host_init_batch(groups[nxt[0]:nxt[1]], capacity)
+                         if nxt is not None else None)
+            standby = None
+            t_issue = 0.0
+            n_active = np.asarray(jnp.sum(states.area >= 0, axis=1))
+            it = 0
+            with obs.tracer().span("stream/chunk", chunk=ci,
+                                   groups=hi - lo) as sp:
+                while int(n_active.max()) > 0:
+                    w = elastic_range(cfg, int(n_active.max()))
+                    if it >= max_iters:
+                        raise RuntimeError(
+                            f"SubTreePrepare (stream chunk {ci}, groups "
+                            f"[{lo}, {hi})) failed to converge after {it} "
+                            f"iterations (w={w})")
+                    group_iters[lo:hi] += n_active > 0
+                    with obs.tracer().span(
+                            "prepare/step", w=w,
+                            n_active=int(n_active.sum()),
+                            groups_active=int((n_active > 0).sum())):
+                        states, n_active_dev = _jit_step_batch(
+                            s_padded, states, w, use_pallas, word_keys,
+                            sort_fuse)
+                    if overlap and standby is None and host_next is not None:
+                        # the step above is dispatched asynchronously —
+                        # issue the standby copy now so it transfers
+                        # behind the chunk's in-flight elastic loop
+                        t_issue = time.perf_counter()
+                        standby = jax.device_put(host_next)
+                    if stats is not None:
+                        total_active = int(n_active.sum())
+                        stats.iterations += 1
+                        stats.ranges.append(w)
+                        stats.active_history.append(total_active)
+                        stats.symbols_fetched += total_active * w
+                    n_active = np.asarray(n_active_dev)
+                    it += 1
+                sp.set(iterations=it)
+            rep.iterations += it
+            rep.chunk_iters.append(it)
+            # drain this chunk's results to the host output slice (blocks
+            # on the chunk's compute, NOT on the standby copy)
+            for o, d in zip(out, states):
+                o[lo:hi] = np.asarray(d)
+            if host_next is None:
+                continue
+            if not overlap or standby is None:
+                # synchronous mode, or a chunk that converged at init
+                # (zero iterations -> nothing to hide the copy behind)
+                states = _copy_sync(host_next)
+                continue
+            nb = _state_nbytes(host_next)
+            t_wait = time.perf_counter()
+            states = jax.block_until_ready(standby)
+            wait = time.perf_counter() - t_wait
+            est = max(nb / copy_rate, wait)  # >= observed blocking time
+            rep.bytes_copied += nb
+            rep.copy_s += est
+            rep.copy_wait_s += wait
+            rep.copy_hidden_s += est - wait
+            obs.tracer().complete(
+                "stream/standby_copy", int(t_issue * 1e9),
+                int(max(time.perf_counter() - t_issue, 1e-9) * 1e9),
+                chunk=ci + 1, bytes=nb, wait_ms=round(wait * 1e3, 3),
+                hidden_frac=round((est - wait) / est, 4) if est > 0 else 1.0)
+        sp_pipe.set(iterations=rep.iterations,
+                    copy_ms=round(rep.copy_s * 1e3, 3),
+                    hidden_ms=round(rep.copy_hidden_s * 1e3, 3),
+                    overlap_frac=round(rep.overlap_frac, 4))
+    _record_prepare_metrics(group_iters.tolist(),
+                            time.perf_counter() - t0, cfg)
+    return out, rep
 
 
 def segments_of(group: VirtualTree) -> list[tuple[int, int]]:

@@ -259,6 +259,8 @@ class DeviceIndex:
     win_hi: jax.Array         # int32[base**k_route] routing slice ends
     pows: jax.Array           # int32[k_route] base**(k_route-1-j)
     spans: jax.Array          # int32[k_route+1] base**(k_route-k) - 1
+    epoch: int = 0            # mutation generation: bumped by incremental
+    #                           append; serving flushes RouteCaches on change
 
     @property
     def n_leaves(self) -> int:
@@ -342,7 +344,8 @@ class DeviceIndex:
                      ell, route_cap: int = 1 << 18,
                      max_pattern_len: int = 512,
                      packing: str = "auto",
-                     k_route: int | None = None) -> "DeviceIndex":
+                     k_route: int | None = None,
+                     epoch: int = 0) -> "DeviceIndex":
         """Assemble directly from construction output — no SubTree dict.
 
         ``prefixes``: sorted (lexicographic) prefix tuples; ``freqs``: the
@@ -416,6 +419,7 @@ class DeviceIndex:
             win_hi=jnp.asarray(win_hi),
             pows=jnp.asarray(pows),
             spans=jnp.asarray(spans),
+            epoch=int(epoch),
         )
 
     # ---- persistence ------------------------------------------------------
@@ -428,7 +432,9 @@ class DeviceIndex:
     # 4-entry-meta + ``s_padded`` layout (so pre-packing archives load
     # unchanged and byte saves stay readable by older code); dense saves
     # write ``s_words`` (uint32) and extend ``meta`` with
-    # ``[s_bits, n_real]``.
+    # ``[s_bits, n_real]``.  The mutation ``epoch`` rides as ONE trailing
+    # meta entry on both layouts — archives written before the append era
+    # are shorter and load as epoch 0.
 
     _BLOB_FIELDS = ("ell", "sub_off", "sub_freq", "sub_prefix",
                     "sub_plen", "win_lo", "win_hi", "pows", "spans")
@@ -440,6 +446,7 @@ class DeviceIndex:
             blobs = {"s_words": np.asarray(self.s_text.words)}
         else:
             blobs = {"s_padded": np.asarray(self.s_text)}
+        meta.append(self.epoch)
         blobs["meta"] = np.array(meta, np.int64)
         for name in self._BLOB_FIELDS:
             blobs[name] = np.asarray(getattr(self, name))
@@ -454,12 +461,14 @@ class DeviceIndex:
                 words=jnp.asarray(np.asarray(data["s_words"], np.uint32)),
                 n_real=jnp.asarray(int(meta[5]), jnp.int32),
                 bits=int(meta[4]), terminal=int(meta[0]) - 1)
+            epoch = int(meta[6]) if meta.size > 6 else 0
         else:  # byte-format archive (including every pre-packing save)
             s_text = jnp.asarray(data["s_padded"])
+            epoch = int(meta[4]) if meta.size > 4 else 0
         fields = {name: jnp.asarray(data[name]) for name in cls._BLOB_FIELDS}
         return cls(base=int(meta[0]), k_route=int(meta[1]), n_iter=int(meta[2]),
                    max_pattern_len=int(meta[3]), s_text=s_text, ell_host=ell,
-                   **fields)
+                   epoch=epoch, **fields)
 
     def save(self, path: str) -> None:
         """Persist the flattened index (npz); ``load`` restores it exactly."""

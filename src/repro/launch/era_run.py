@@ -169,10 +169,37 @@ def main():
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--batch-groups", type=int, default=4,
                     help="virtual trees per worker pull (batched engine width)")
+    ap.add_argument("--stream", action="store_true",
+                    help="out-of-core single-host build: double-buffered "
+                         "chunk pipeline instead of the worker pool")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="device bytes the streaming PrepareState may "
+                         "occupy (with --stream; default unbounded = one "
+                         "chunk)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the standby-buffer copy/compute overlap "
+                         "(with --stream; the synchronous baseline)")
     args = ap.parse_args()
 
     s, alpha = dataset(args.dataset, args.n)
     cfg = EraConfig(memory_bytes=int(args.memory_mb * (1 << 20)), build_impl="none")
+    if args.stream:
+        budget = (None if args.device_budget_mb is None
+                  else int(args.device_budget_mb * (1 << 20)))
+        report = BuildReport(VerticalStats(), PrepareStats())
+        t0 = time.perf_counter()
+        dev, sr = EraIndexer(alpha, cfg).build_stream(
+            s, report, device_budget=budget, overlap=not args.no_overlap)
+        dt = time.perf_counter() - t0
+        print(f"indexed {args.n} symbols in {dt:.2f}s streaming "
+              f"({sr.n_chunks} chunks, overlap={'on' if sr.overlap else 'off'})")
+        print(f"stream: groups={sr.groups} iterations={sr.iterations} "
+              f"copied={sr.bytes_copied / 1e6:.1f}MB "
+              f"copy={sr.copy_s * 1e3:.1f}ms "
+              f"hidden={sr.copy_hidden_s * 1e3:.1f}ms "
+              f"(overlap_frac={sr.overlap_frac:.2f})")
+        print(f"leaves={dev.n_leaves} subtrees={dev.n_subtrees}")
+        return
     t0 = time.perf_counter()
     idx, qstats, workers = build_distributed(
         s, alpha, cfg, n_workers=args.workers, checkpoint_path=args.checkpoint,

@@ -156,6 +156,13 @@ class AsyncServer:
         self.n_batches = 0
         self.n_rows_padded = 0
         self.shapes: set[tuple[int, int]] = set()
+        self.n_index_swaps = 0
+        # span-link plumbing: each taken batch gets a fresh link id that is
+        # stamped on BOTH its serve/queue_wait span and the device_dispatch
+        # span(s) it becomes, so a trace viewer (and trace_smoke) can join
+        # the admission-side wait to the device-side work it fed
+        self._link_seq = 0
+        self._cur_link = 0
         cap = dev.max_pattern_len - dev.max_pattern_len % 4
         self._width_cap = max(4, cap)
         self._bind_obs()
@@ -182,6 +189,11 @@ class AsyncServer:
             "serve_cache_hits_total", "route-cache hits at admission")
         self._m_cache_misses = m.counter(
             "serve_cache_misses_total", "route-cache misses at admission")
+        self._m_index_swaps = m.counter(
+            "serve_index_swaps_total", "live index generation swaps")
+        self._m_cache_flushes = m.counter(
+            "serve_cache_flushes_total",
+            "route-cache flushes forced by an index epoch change")
         self._h_queue_depth = m.histogram(
             "serve_queue_depth",
             buckets=obs.pow2_buckets(1, self.config.queue_depth),
@@ -265,6 +277,8 @@ class AsyncServer:
             return None
         requests = [self.queue.popleft()
                     for _ in range(min(len(self.queue), cfg.max_batch))]
+        self._link_seq += 1
+        self._cur_link = self._link_seq
         if self._metrics_on:
             self._h_batch_age.observe(oldest_age_ms)
             for r in requests:
@@ -273,7 +287,7 @@ class AsyncServer:
             self._tr.complete("serve/queue_wait",
                               int(requests[0].t_admit * 1e9),
                               int(oldest_age_ms * 1e6),
-                              rows=len(requests))
+                              rows=len(requests), link=self._cur_link)
         return requests
 
     def _dispatch(self) -> _InFlight | None:
@@ -340,7 +354,7 @@ class AsyncServer:
             pat_max = max(r.pat_max for r in miss_req)
             with self._tr.span("serve/device_dispatch", rows=n_rows,
                                b_pad=b_pad, m_pad=m_pad,
-                               fetch=cfg.fetch):
+                               fetch=cfg.fetch, link=self._cur_link):
                 if cfg.fetch:
                     start, count, win, _ = self.dev.find_fetch_ranges(
                         padded, lengths, route, fetch=cfg.fetch,
@@ -420,7 +434,7 @@ class AsyncServer:
             pat_max = max(r.pat_max for r in reqs)
             with self._tr.span("serve/device_dispatch", shard=k,
                                rows=len(reqs), b_pad=b_pad, m_pad=m_pad,
-                               fetch=cfg.fetch):
+                               fetch=cfg.fetch, link=self._cur_link):
                 if cfg.fetch:
                     start, count, win, _ = dev.find_fetch_ranges(
                         padded, lengths, route, fetch=cfg.fetch,
@@ -514,6 +528,50 @@ class AsyncServer:
                     self.caches[rows[0][0]].put(key, val)
             self.results[req.rid] = val
             self.latency_s.append(now - req.t_admit)
+
+    # ---- live index swap --------------------------------------------------
+
+    def update_index(self, dev) -> dict:
+        """Swap in a new index generation (e.g. the output of
+        ``EraIndexer.append_device``) without dropping queued requests.
+
+        The in-flight batch was dispatched against the OLD index, so it is
+        consumed first — its device handles and row bookkeeping are only
+        meaningful there; queued-but-undispatched requests simply ride
+        into the next batch against the new index.  RouteCaches memoize
+        materialized positions, which an append invalidates wholesale, so
+        they are flushed whenever the index ``epoch`` changes (and rebuilt
+        when the shard count changes); a same-epoch swap — a replica of
+        the identical index, e.g. after re-placement — keeps them warm.
+        """
+        if self.inflight is not None:
+            self._consume(self.inflight)
+            self.inflight = None
+        old_epoch = int(getattr(self.dev, "epoch", 0))
+        new_epoch = int(getattr(dev, "epoch", 0))
+        self.dev = dev
+        self.sharded = hasattr(dev, "shards") and hasattr(dev, "shard_span")
+        n_caches = len(dev.shards) if self.sharded else 1
+        flushed = False
+        if len(self.caches) != n_caches:
+            self.caches = [RouteCache(self.config.cache_size)
+                           for _ in range(n_caches)]
+            flushed = True
+        elif new_epoch != old_epoch:
+            for c in self.caches:
+                c.clear()
+            flushed = True
+        self.cache = self.caches[0]
+        cap = dev.max_pattern_len - dev.max_pattern_len % 4
+        self._width_cap = max(4, cap)
+        self.n_index_swaps += 1
+        self._m_index_swaps.inc()
+        if flushed:
+            self._m_cache_flushes.inc()
+        if self._trace_on:
+            self._tr.instant("serve/index_swap", epoch=new_epoch,
+                             flushed=int(flushed), shards=n_caches)
+        return {"epoch": new_epoch, "flushed": flushed, "shards": n_caches}
 
     # ---- the serving loop -------------------------------------------------
 

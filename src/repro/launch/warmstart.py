@@ -51,6 +51,93 @@ def will_load(index_path: str | None, *, sharded: bool = False) -> bool:
     return path is not None and os.path.exists(path)
 
 
+def _alphabet_by_base(base: int):
+    from repro.core.alphabet import ALPHABETS
+    for al in ALPHABETS.values():
+        if al.base == base:
+            return al
+    raise ValueError(f"no registered alphabet has base {base}")
+
+
+def migrate_archive(path: str, *, chunk_symbols: int = 1 << 20,
+                    verify: bool = True) -> bool:
+    """Re-pack one legacy byte-layout npz archive to dense storage IN
+    PLACE, chunk by chunk, without rebuilding the index.
+
+    A byte archive stores the terminal-padded string as ``s_padded`` and a
+    4(+epoch)-entry ``meta``; the dense layout stores ``s_words`` (uint32,
+    ``Alphabet.dense_bits`` bits/symbol) and extends ``meta`` with
+    ``[s_bits, n_real]`` before the trailing epoch.  All routing/leaf
+    blobs are representation-independent and are carried over verbatim —
+    only the string representation changes, so the migrated archive loads
+    into a :class:`~repro.core.query.DeviceIndex` that answers every query
+    identically (``tests/test_stream.py`` holds that equivalence).
+
+    The string is fed to :func:`repro.core.packing.pack_text_stream` in
+    ``chunk_symbols``-sized chunks — peak extra host memory is one chunk,
+    not the decoded string.  ``verify`` additionally packs the full string
+    with :func:`pack_text` and insists on word-for-word bit identity
+    before anything is written (cheap next to the npz re-compression, and
+    the whole point of a trustworthy migration).
+
+    Returns True when the archive was migrated, False when it was already
+    dense (no-op).  Raises on a missing or unrecognizable archive.
+    """
+    from repro.core import packing
+
+    path = npz_path(path)
+    with np.load(path) as data:
+        if "s_words" in data:
+            return False
+        if "s_padded" not in data or "meta" not in data:
+            raise ValueError(f"{path} is not a DeviceIndex archive")
+        blobs = {k: data[k] for k in data.files}
+    meta = np.asarray(blobs.pop("meta"), np.int64)
+    base, max_plen = int(meta[0]), int(meta[3])
+    epoch = int(meta[4]) if meta.size > 4 else 0
+    alphabet = _alphabet_by_base(base)
+    s_padded = np.asarray(blobs.pop("s_padded"), np.uint8)
+    # the stored string is terminal-PADDED and shard archives carry the
+    # full string regardless of their leaf count, so the real length is
+    # where the terminal first appears (it only ever occurs at the end)
+    term = np.flatnonzero(s_padded == alphabet.terminal_code)
+    if term.size == 0:
+        raise ValueError(f"{path} stores an unterminated string")
+    codes = s_padded[:int(term[0]) + 1]  # real symbols + one terminal
+    chunks = (codes[i:i + chunk_symbols]
+              for i in range(0, codes.size, chunk_symbols))
+    pt = packing.pack_text_stream(chunks, alphabet, extra=max_plen + 8)
+    if verify:
+        ref = packing.pack_text(codes, alphabet, extra=max_plen + 8)
+        if not (np.array_equal(np.asarray(pt.words), np.asarray(ref.words))
+                and int(pt.n_real) == int(ref.n_real)):
+            raise AssertionError(
+                f"streamed re-pack of {path} diverged from pack_text")
+    blobs["s_words"] = np.asarray(pt.words)
+    blobs["meta"] = np.array(
+        [base, int(meta[1]), int(meta[2]), max_plen,
+         pt.bits, int(pt.n_real), epoch], np.int64)
+    tmp = path + ".tmp.npz"   # already .npz-suffixed: savez won't rename it
+    np.savez_compressed(tmp, **blobs)
+    os.replace(tmp, path)
+    return True
+
+
+def migrate_archives(index_path: str, *, chunk_symbols: int = 1 << 20,
+                     verify: bool = True) -> list[str]:
+    """Migrate a cache path's byte archives to dense storage: the base
+    ``{path}.npz`` (if present) and every ``{path}_shard{k}.npz`` sibling.
+    Returns the list of archive files actually migrated."""
+    done = []
+    base = normalize_npz(index_path)
+    targets = ([base] if base and os.path.exists(base) else [])
+    targets += shard_archives(index_path)
+    for f in targets:
+        if migrate_archive(f, chunk_symbols=chunk_symbols, verify=verify):
+            done.append(f)
+    return done
+
+
 def load_or_build(index_path: str | None, dataset_name: str, n: int,
                   seed: int, *, load: Callable, build: Callable,
                   dev_of: Callable = lambda obj: obj,

@@ -253,7 +253,9 @@ class TestPackedPersistence:
         dev_b = idx_b.to_device(packing="bytes")
         blobs = dev_b.to_blobs()
         assert "s_padded" in blobs and "s_words" not in blobs
-        assert blobs["meta"].shape == (4,)  # the pre-packing meta layout
+        # pre-packing meta layout + the trailing epoch entry (archives
+        # without it still load — tests/test_stream.py holds that)
+        assert blobs["meta"].shape == (5,)
         p = str(tmp_path / "dev_legacy.npz")
         dev_b.save(p)
         dev2 = DeviceIndex.load(p)

@@ -1,0 +1,383 @@
+"""Out-of-core streaming construction and incremental append.
+
+The streaming pipeline (:func:`repro.core.prepare.subtree_prepare_stream`)
+must be a pure SCHEDULING transform: slicing the vertical-partition groups
+into device-budget-sized chunks and double-buffering the host→device state
+copies may change when work happens, never what it produces.  With the
+default elastic config the per-chunk range schedule coincides with the
+one-shot schedule (the range saturates at ``w_max`` whenever the active
+row count is below the budget), so ALL six PrepareState fields are
+bit-identical; with a tiny range budget the schedules diverge and only the
+schedule-dependent ``start`` cursor may differ — every field the flattened
+index reads stays bit-identical either way (Fig. 9b: range choice never
+changes results).
+
+Incremental append (:meth:`EraIndexer.append_device`) must produce an
+index bit-identical to a full rebuild of the extended string while
+rebuilding only the affected sub-trees, and must bump ``epoch`` so the
+serving tier's RouteCaches invalidate (:meth:`AsyncServer.update_index`).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import iomodel, packing
+from repro.core.alphabet import ALPHABETS
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.prepare import subtree_prepare_batch, subtree_prepare_stream
+from repro.core.query import DeviceIndex
+from repro.data.strings import dataset
+
+ALL_FIELDS = ("L", "start", "area", "b_off", "b_c1", "b_c2")
+# `start` is a per-row cursor advanced by the (schedule-dependent) range
+# width and dead once the row resolves; every other field is
+# schedule-invariant by the Fig. 9b argument.
+RESULT_FIELDS = tuple(f for f in ALL_FIELDS if f != "start")
+INDEX_FIELDS = ("ell", "sub_off", "sub_freq", "sub_prefix", "sub_plen",
+                "win_lo", "win_hi")
+
+
+def _workload(name, n, mem, **cfg_kw):
+    s, alpha = dataset(name, n, seed=0)
+    cfg = EraConfig(memory_bytes=mem, build_impl="none", **cfg_kw)
+    ix = EraIndexer(alpha, cfg)
+    groups = ix.partition(s)
+    return s, alpha, ix, groups, ix._capacity(groups), ix._device_text(s)
+
+
+def _assert_fields(ref, got, fields):
+    for field in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, field)), np.asarray(getattr(got, field)),
+            err_msg=field)
+
+
+def _appended(s, alphabet, m, seed=3):
+    """s_new = S_old's real symbols + m fresh symbols + terminal."""
+    rng = np.random.default_rng(seed)
+    extra = rng.integers(0, alphabet.base - 1, size=m, dtype=np.uint8)
+    return np.concatenate([s[:-1], extra, s[-1:]])
+
+
+class TestPlanner:
+    def test_unbounded_is_one_chunk(self):
+        plan = iomodel.plan_stream(37, 100)
+        assert plan.chunks == ((0, 37),)
+        assert plan.peak_bytes == 2 * 37 * iomodel.state_bytes_per_group(100)
+
+    def test_tiny_budget_floors_at_one_group(self):
+        plan = iomodel.plan_stream(10, 100, budget_bytes=1)
+        assert plan.n_chunks == 10
+        assert all(hi - lo == 1 for lo, hi in plan.chunks)
+        # the floor overshoots a 1-byte budget; peak_bytes reports it
+        assert plan.peak_bytes > plan.budget_bytes
+
+    def test_chunks_tile_the_group_range(self):
+        per = iomodel.state_bytes_per_group(64)
+        plan = iomodel.plan_stream(11, 64, budget_bytes=2 * 3 * per)
+        assert plan.groups_per_chunk == 3
+        flat = [g for lo, hi in plan.chunks for g in range(lo, hi)]
+        assert flat == list(range(11))
+        assert plan.peak_bytes <= plan.budget_bytes
+
+    def test_single_buffer_doubles_chunk_size(self):
+        per = iomodel.state_bytes_per_group(64)
+        double = iomodel.plan_stream(12, 64, budget_bytes=4 * per)
+        single = iomodel.plan_stream(12, 64, budget_bytes=4 * per,
+                                     double_buffer=False)
+        assert double.groups_per_chunk == 2
+        assert single.groups_per_chunk == 4
+        assert single.buffers == 1
+
+    def test_reserved_bytes_shrink_chunks(self):
+        per = iomodel.state_bytes_per_group(64)
+        plan = iomodel.plan_stream(12, 64, budget_bytes=2 * 4 * per,
+                                   reserved_bytes=2 * 2 * per)
+        assert plan.groups_per_chunk == 2
+        assert plan.peak_bytes <= plan.budget_bytes
+
+    def test_empty(self):
+        assert iomodel.plan_stream(0, 64).n_chunks == 0
+        assert iomodel.plan_stream(0, 64).groups_per_chunk == 0
+
+
+class TestStreamBitIdentity:
+    """Budget <= 1/8 of total state, saturated range schedule: every
+    PrepareState field must match the one-shot batched engine exactly."""
+
+    @pytest.mark.parametrize("name,n", [
+        ("dna", 30_000),
+        ("protein", 16_000),
+        ("byte", 9_000),
+    ])
+    def test_all_six_fields(self, name, n):
+        # memory 128KB -> f_max = 2457 < 4096: the elastic range saturates
+        # at w_max every iteration, so chunk schedules == global schedule
+        _, _, ix, groups, cap, sp = _workload(name, n, 128 << 10)
+        assert len(groups) >= 2
+        ecfg = ix.config.elastic_config()
+        total = len(groups) * iomodel.state_bytes_per_group(cap)
+        ref = subtree_prepare_batch(sp, groups, cap, ecfg)
+        got, sr = subtree_prepare_stream(sp, groups, cap, ecfg,
+                                         device_budget=total // 8)
+        assert sr.n_chunks >= 2
+        assert sr.bytes_copied > 0
+        _assert_fields(ref, got, ALL_FIELDS)
+
+    def test_divergent_schedule_keeps_results(self):
+        # r_bytes=512: the range depends on each chunk's OWN active count,
+        # so per-chunk schedules diverge from the global one — `start`
+        # may differ, every result field must not (Fig. 9b)
+        _, _, ix, groups, cap, sp = _workload("dna", 12_000, 16 << 10,
+                                              r_bytes=512)
+        ecfg = ix.config.elastic_config()
+        total = len(groups) * iomodel.state_bytes_per_group(cap)
+        ref = subtree_prepare_batch(sp, groups, cap, ecfg)
+        got, sr = subtree_prepare_stream(sp, groups, cap, ecfg,
+                                         device_budget=total // 8)
+        assert sr.n_chunks >= 2
+        _assert_fields(ref, got, RESULT_FIELDS)
+
+    def test_degenerate_budgets(self):
+        _, _, ix, groups, cap, sp = _workload("dna", 8_000, 64 << 10)
+        ecfg = ix.config.elastic_config()
+        ref = subtree_prepare_batch(sp, groups, cap, ecfg)
+        # unbounded -> one chunk (the streaming build IS the one-shot)
+        one, sr1 = subtree_prepare_stream(sp, groups, cap, ecfg)
+        assert sr1.n_chunks == 1
+        _assert_fields(ref, one, ALL_FIELDS)
+        # 1-byte budget -> one group per chunk (the planner's floor)
+        per, srn = subtree_prepare_stream(sp, groups, cap, ecfg,
+                                          device_budget=1)
+        assert srn.n_chunks == len(groups)
+        _assert_fields(ref, per, ALL_FIELDS)
+        # overlap off -> synchronous copies, same results, nothing hidden
+        sync, srs = subtree_prepare_stream(sp, groups, cap, ecfg,
+                                           device_budget=1, overlap=False)
+        assert srs.copy_hidden_s == 0.0
+        _assert_fields(ref, sync, ALL_FIELDS)
+
+    def test_empty_groups_raise(self):
+        _, _, ix, groups, cap, sp = _workload("dna", 2_000, 64 << 10)
+        with pytest.raises(ValueError):
+            subtree_prepare_stream(sp, [], cap, ix.config.elastic_config())
+
+
+class TestBuildStream:
+    def test_index_matches_one_shot(self):
+        s, alpha = dataset("dna", 30_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=128 << 10,
+                                         build_impl="none"))
+        ref = ix.build_device(s, max_pattern_len=64)
+        total = ref.n_leaves * iomodel.STATE_CELL_BYTES  # >= true state size
+        dev, sr = ix.build_stream(s, device_budget=total // 8,
+                                  max_pattern_len=64)
+        assert sr.n_chunks >= 2
+        for f in INDEX_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(dev, f)),
+                err_msg=f)
+        pats = [s[i:i + 9] for i in range(0, 256, 4)]
+        for a, b in zip(ref.find_batch(pats), dev.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestAppend:
+    def test_device_bit_identity(self):
+        s, alpha = dataset("dna", 24_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=128 << 10,
+                                         build_impl="none"))
+        dev = ix.build_device(s, max_pattern_len=64)
+        s_new = _appended(s, alpha, 1_500)
+        dev2, arep = ix.append_device(dev, s_new)
+        full = ix.build_device(s_new, max_pattern_len=64)
+        for f in INDEX_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(full, f)), np.asarray(getattr(dev2, f)),
+                err_msg=f)
+        np.testing.assert_array_equal(full.string_codes(),
+                                      dev2.string_codes())
+        assert dev2.epoch == dev.epoch + 1
+        assert arep.n_new == arep.n_old + 1_500
+        assert arep.leaves_rebuilt + arep.leaves_reused == dev2.n_leaves
+        pats = [s_new[i:i + 8] for i in range(0, 200, 2)]
+        for a, b in zip(full.find_batch(pats), dev2.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_sharded_append_matches_rebuild(self):
+        s, alpha = dataset("dna", 16_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        sh = ix.build_sharded(s, n_shards=2, max_pattern_len=64)
+        s_new = _appended(s, alpha, 900)
+        sh2, arep = ix.append_sharded(sh, s_new)
+        full = ix.build_sharded(s_new, n_shards=2, max_pattern_len=64)
+        assert sh2.epoch == sh.epoch + 1
+        p_a, f_a, e_a = sh2.flat_table()
+        p_b, f_b, e_b = full.flat_table()
+        assert p_a == p_b
+        np.testing.assert_array_equal(f_a, f_b)
+        np.testing.assert_array_equal(e_a, e_b)
+        pats = [s_new[i:i + 7] for i in range(0, 128, 2)]
+        for a, b in zip(full.find_batch(pats), sh2.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_rejects_non_extension(self):
+        s, alpha = dataset("dna", 4_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        dev = ix.build_device(s, max_pattern_len=64)
+        mutated = _appended(s, alpha, 100)
+        mutated[5] = (mutated[5] + 1) % (alpha.base - 1)  # not a prefix
+        with pytest.raises(ValueError):
+            ix.append_device(dev, mutated)
+        with pytest.raises(ValueError):
+            ix.append_device(dev, s)  # not strictly longer
+
+
+class TestEpochPersistence:
+    @pytest.mark.parametrize("pack", ["bytes", "dense"])
+    def test_roundtrip(self, tmp_path, pack):
+        s, alpha = dataset("dna", 6_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        dev = ix.build_device(s, max_pattern_len=64, packing=pack)
+        dev2, _ = ix.append_device(dev, _appended(s, alpha, 200))
+        assert dev2.epoch == 1
+        path = str(tmp_path / f"idx_{pack}")
+        dev2.save(path)
+        assert DeviceIndex.load(path).epoch == 1
+
+    @pytest.mark.parametrize("pack,legacy_meta", [
+        ("bytes", 4),   # pre-append byte layout: 4 meta entries
+        ("dense", 6),   # pre-append dense layout: 6 meta entries
+    ])
+    def test_legacy_archives_load_as_epoch_zero(self, tmp_path, pack,
+                                                legacy_meta):
+        s, alpha = dataset("dna", 6_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        dev = ix.build_device(s, max_pattern_len=64, packing=pack)
+        blobs = dev.to_blobs()
+        blobs["meta"] = blobs["meta"][:legacy_meta]
+        path = str(tmp_path / "legacy.npz")
+        np.savez_compressed(path, **blobs)
+        assert DeviceIndex.load(path).epoch == 0
+
+
+class TestServingSwap:
+    def _server(self, dev):
+        from repro.launch.serving import AsyncServer, ServeConfig
+        return AsyncServer(dev, ServeConfig(pipeline=True, cache_size=256,
+                                            max_batch=64))
+
+    def test_epoch_change_flushes_caches(self):
+        s, alpha = dataset("dna", 10_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        dev = ix.build_device(s, max_pattern_len=64)
+        srv = self._server(dev)
+        pats = [np.asarray(s[i:i + 8], np.int32) for i in range(100)]
+        srv.serve(pats)
+        assert sum(len(c) for c in srv.caches) > 0
+        s_new = _appended(s, alpha, 300)
+        dev2, _ = ix.append_device(dev, s_new)
+        info = srv.update_index(dev2)
+        assert info["flushed"] and info["epoch"] == 1
+        assert sum(len(c) for c in srv.caches) == 0
+        # post-swap results match a fresh server over a full rebuild
+        full = ix.build_device(s_new, max_pattern_len=64)
+        got = srv.serve(pats)
+        want = self._server(full).serve(pats)
+        for (a, _), (b, _) in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+        # same-epoch swap keeps the (re-warmed) caches
+        warm = sum(len(c) for c in srv.caches)
+        assert warm > 0
+        info2 = srv.update_index(dev2)
+        assert not info2["flushed"]
+        assert sum(len(c) for c in srv.caches) == warm
+
+    def test_shard_count_change_rebuilds_caches(self):
+        s, alpha = dataset("dna", 10_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        dev = ix.build_device(s, max_pattern_len=64)
+        srv = self._server(dev)
+        srv.serve([np.asarray(s[i:i + 8], np.int32) for i in range(32)])
+        sh = ix.build_sharded(s, n_shards=2, max_pattern_len=64)
+        info = srv.update_index(sh)
+        assert info["flushed"] and info["shards"] == 2
+        assert len(srv.caches) == 2 and srv.sharded
+
+
+class TestPackStream:
+    @pytest.mark.parametrize("name", ["dna", "protein", "byte"])
+    @pytest.mark.parametrize("chunk", [1, 7, 4096])
+    def test_bit_identical_to_pack_text(self, name, chunk):
+        alpha = ALPHABETS[name]
+        rng = np.random.default_rng(0)
+        codes = rng.integers(0, alpha.terminal_code, size=3_333,
+                             dtype=np.uint8)
+        codes = np.concatenate([codes, [alpha.terminal_code]]).astype(np.uint8)
+        ref = packing.pack_text(codes, alpha)
+        got = packing.pack_text_stream(
+            (codes[i:i + chunk] for i in range(0, codes.size, chunk)), alpha)
+        np.testing.assert_array_equal(np.asarray(ref.words),
+                                      np.asarray(got.words))
+        assert int(ref.n_real) == int(got.n_real)
+        assert (ref.bits, ref.terminal) == (got.bits, got.terminal)
+
+    def test_rejects_unterminated(self):
+        alpha = ALPHABETS["dna"]
+        with pytest.raises(ValueError):
+            packing.pack_text_stream([np.zeros(5, np.uint8)], alpha)
+        with pytest.raises(ValueError):
+            packing.pack_text_stream([], alpha)
+
+
+class TestMigration:
+    def test_byte_archive_migrates_to_dense(self, tmp_path):
+        from repro.launch.warmstart import migrate_archive
+
+        s, alpha = dataset("dna", 8_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        dev_b = ix.build_device(s, max_pattern_len=64, packing="bytes")
+        dev_d = ix.build_device(s, max_pattern_len=64, packing="dense")
+        path = str(tmp_path / "idx")
+        dev_b.save(path)
+        assert migrate_archive(path, chunk_symbols=1_000) is True
+        assert migrate_archive(path) is False  # already dense: no-op
+        mig = DeviceIndex.load(path)
+        assert mig.packed
+        np.testing.assert_array_equal(np.asarray(mig.s_text.words),
+                                      np.asarray(dev_d.s_text.words))
+        for f in INDEX_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(mig, f)), np.asarray(getattr(dev_d, f)),
+                err_msg=f)
+        pats = [s[i:i + 9] for i in range(0, 64, 2)]
+        for a, b in zip(dev_b.find_batch(pats), mig.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_migrate_archives_covers_shards(self, tmp_path):
+        from repro.launch.warmstart import migrate_archives
+
+        s, alpha = dataset("dna", 8_000, seed=0)
+        ix = EraIndexer(alpha, EraConfig(memory_bytes=64 << 10,
+                                         build_impl="none"))
+        sh = ix.build_sharded(s, n_shards=2, max_pattern_len=64,
+                              packing="bytes")
+        base = str(tmp_path / "shidx")
+        sh.save(base)
+        done = migrate_archives(base)
+        assert len(done) == 2
+        from repro.core.fabric import ShardedIndex
+        mig = ShardedIndex.load(base)
+        assert all(d.packed for d in mig.shards)
+        pats = [s[i:i + 7] for i in range(0, 64, 2)]
+        for a, b in zip(sh.find_batch(pats), mig.find_batch(pats)):
+            np.testing.assert_array_equal(a, b)
