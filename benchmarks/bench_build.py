@@ -8,16 +8,29 @@ with no intermediate SubTree dict) against serial build + flatten.
 
 from __future__ import annotations
 
+import os
+
 from benchmarks.common import emit, timeit
 from repro.core.api import BuildReport, EraConfig, EraIndexer
 from repro.core.prepare import PrepareStats
 from repro.core.vertical import VerticalStats
 from repro.data.strings import dataset
+from repro.kernels import ops as kops
 
 
 def _cfg(construction: str, memory_bytes: int) -> EraConfig:
     return EraConfig(memory_bytes=memory_bytes, r_bytes=4096,
                      build_impl="none", construction=construction)
+
+
+def engine_stamp(node_lcp: str = "state") -> str:
+    """Engine-config attribution for every construction row: a number
+    without the sort/compaction/autotune mode it ran under is
+    uncomparable across PRs."""
+    return (f"fused_sort={'on' if kops._use_sort_fuse() else 'off'} "
+            f"compaction={'tail' if kops._use_compaction() else 'off'} "
+            f"word_node_build={node_lcp} "
+            f"autotune={os.environ.get('REPRO_AUTOTUNE', 'off')}")
 
 
 def run(quick: bool = True) -> None:
@@ -39,17 +52,18 @@ def run(quick: bool = True) -> None:
         rep_ser, rep_bat = last_rep["serial"], last_rep["batched"]
         g = rep_bat.n_groups
         prep_speedup = rep_ser.t_prepare / max(rep_bat.t_prepare, 1e-9)
-        emit(f"build/serial/n={n}", t_ser, f"groups={g}")
+        stamp = engine_stamp()
+        emit(f"build/serial/n={n}", t_ser, f"groups={g} {stamp}")
         emit(f"build/batched/n={n}", t_bat,
              f"groups={g} leaves_per_s={n / max(t_bat, 1e-9):.0f} "
              f"speedup={t_ser / max(t_bat, 1e-9):.2f}x "
-             f"prepare_speedup={prep_speedup:.2f}x")
+             f"prepare_speedup={prep_speedup:.2f}x {stamp}")
 
         t_dev = timeit(
             lambda: EraIndexer(alphabet, _cfg("batched", memory_bytes)).build_device(s),
             repeats=2, warmup=1)
         emit(f"build/device_direct/n={n}", t_dev,
-             f"vs_serial={t_ser / max(t_dev, 1e-9):.2f}x")
+             f"vs_serial={t_ser / max(t_dev, 1e-9):.2f}x {stamp}")
 
 
 if __name__ == "__main__":

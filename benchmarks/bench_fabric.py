@@ -4,13 +4,12 @@ One baseline row (``subtree_prepare_batch``, the default batched engine)
 and one sharded row (:func:`repro.core.fabric.sharded_prepare` over the
 device mesh) at a G ≈ 100 workload, derived carrying the speedup and its
 attribution.  On the CI host the mesh is SIMULATED
-(``--xla_force_host_platform_device_count``) on one physical core, so the
-speedup is NOT device parallelism — it comes from the fabric engine's
-fused sort key (one uint32 lane instead of 3 lexsort operands on the hot
-small-``w`` iterations) and tail compaction (sorting only still-active
-rows once activity decays); the per-shard convergence mask contributes
-the last few tail iterations.  On a real multi-device mesh the same
-program adds actual parallel speedup on top.
+(``--xla_force_host_platform_device_count``) on one physical core, so any
+speedup is NOT device parallelism.  The fused sort key and tail
+compaction that used to be fabric-only are now the default batched
+engine too (both rows run them), so the remaining delta is the fabric's
+per-shard convergence mask on the tail iterations.  On a real
+multi-device mesh the same program adds actual parallel speedup on top.
 
 If the current process has a single device, the sharded leg runs in a
 subprocess (``python -m repro.launch.shard_run --mode bench --json``)
@@ -83,13 +82,16 @@ def run(quick: bool = True) -> None:
     else:
         res = _bench_subprocess(n, memory_bytes, repeats)
 
+    from benchmarks.bench_build import engine_stamp
+
     g, cap = res.get("groups", "?"), res.get("capacity", "?")
+    stamp = engine_stamp()
     emit(f"fabric/baseline/n={n}", res["t_baseline_s"],
-         f"groups={g} capacity={cap} engine=batched_lexsort")
+         f"groups={g} capacity={cap} engine=batched {stamp}")
     emit(f"fabric/sharded/n={n}", res["t_sharded_s"],
          f"devices={res['devices']} groups={g} "
          f"speedup={res['speedup']:.2f}x "
-         f"attribution=fused_sort_key+tail_compaction+shard_mask "
+         f"attribution=shard_mask {stamp} "
          f"simulated_mesh={jax.default_backend() == 'cpu'}")
 
 

@@ -31,9 +31,19 @@ import sys
 
 # suites gated for regressions (prefix of the row name)
 WATCH_PREFIXES = ("packed/", "query/", "serve/", "stream/")
-# suites compared and reported but NEVER escalated to drops — construction
-# timings are dominated by host-side build work and too noisy to gate
+# suites compared and reported but not escalated to drops by default —
+# construction timings carry more host-side noise; ``--gate-build``
+# promotes them to the watched set now that the batched engine rows are
+# attributed (engine stamp in derived) and stable enough to gate
 WARN_PREFIXES = ("build/",)
+
+
+def split_prefixes(gate_build: bool) -> tuple[tuple[str, ...],
+                                              tuple[str, ...]]:
+    """(watched, warn-only) row-name prefixes for this run."""
+    if gate_build:
+        return WATCH_PREFIXES + WARN_PREFIXES, ()
+    return WATCH_PREFIXES, WARN_PREFIXES
 
 
 def load_rows(path: str) -> dict[str, float]:
@@ -64,17 +74,20 @@ def latest_baseline(root: str = ".") -> str | None:
 
 
 def compare(base: dict[str, float], cur: dict[str, float],
-            threshold: float) -> tuple[list[str], list[str]]:
+            threshold: float, *,
+            gate_build: bool = False) -> tuple[list[str], list[str]]:
     """(drops, notes): warning lines for watched regressions + info lines.
 
-    Rows under ``WARN_PREFIXES`` are compared and reported (prefixed
+    Rows under the warn-only prefixes are compared and reported (prefixed
     ``warn`` when past threshold) but land in ``notes`` — they never fail
-    a ``--strict`` run."""
+    a ``--strict`` run.  ``gate_build`` moves ``build/`` rows into the
+    watched set."""
+    watch, warn = split_prefixes(gate_build)
     drops: list[str] = []
     notes: list[str] = []
     for name in sorted(set(base) & set(cur)):
-        gated = name.startswith(WATCH_PREFIXES)
-        if not gated and not name.startswith(WARN_PREFIXES):
+        gated = name.startswith(watch)
+        if not gated and not (warn and name.startswith(warn)):
             continue
         b, c = base[name], cur[name]
         if b <= 0:
@@ -88,7 +101,7 @@ def compare(base: dict[str, float], cur: dict[str, float],
                 notes.append(f"warn  {line}")
         else:
             notes.append(line)
-    missing = [n for n in sorted(base) if n.startswith(WATCH_PREFIXES)
+    missing = [n for n in sorted(base) if n.startswith(watch)
                and n not in cur]
     for n in missing:
         drops.append(f"{n}: present in baseline, missing from current run")
@@ -96,15 +109,16 @@ def compare(base: dict[str, float], cur: dict[str, float],
 
 
 def delta_table(base: dict[str, float], cur: dict[str, float],
-                threshold: float) -> list[str]:
+                threshold: float, *, gate_build: bool = False) -> list[str]:
     """Aligned per-row delta table over every compared row — printed on
     both the warn and the strict path so a red CI run shows the exact
     numbers it compared, not just the verdict.  Status column: ``ok``,
     ``DROP`` (gated, past threshold), ``warn`` (warn-only, past
     threshold), ``new`` (no baseline row), ``missing`` (gone from the
     current run)."""
+    watch, warn = split_prefixes(gate_build)
     names = [n for n in sorted(set(base) | set(cur))
-             if n.startswith(WATCH_PREFIXES) or n.startswith(WARN_PREFIXES)]
+             if n.startswith(watch) or (warn and n.startswith(warn))]
     if not names:
         return []
     w = max(len(n) for n in names)
@@ -118,7 +132,7 @@ def delta_table(base: dict[str, float], cur: dict[str, float],
                        f"{'-':>6}  new")
             continue
         if c is None:
-            status = "missing" if name.startswith(WATCH_PREFIXES) else "warn"
+            status = "missing" if name.startswith(watch) else "warn"
             out.append(f"  {name.ljust(w)}  {b:>11.1f}  {'-':>10}  "
                        f"{'-':>6}  {status}")
             continue
@@ -128,7 +142,7 @@ def delta_table(base: dict[str, float], cur: dict[str, float],
             continue
         ratio = c / b
         if ratio > 1 + threshold:
-            status = ("DROP" if name.startswith(WATCH_PREFIXES) else "warn")
+            status = "DROP" if name.startswith(watch) else "warn"
         else:
             status = "ok"
         out.append(f"  {name.ljust(w)}  {b:>11.1f}  {c:>10.1f}  "
@@ -148,6 +162,9 @@ def main() -> None:
                          "drop (default 0.20 = 20%%)")
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero when any watched row dropped")
+    ap.add_argument("--gate-build", action="store_true",
+                    help="promote build/ construction rows from warn-only "
+                         "to the watched (gated) set")
     args = ap.parse_args()
 
     baseline = args.baseline or latest_baseline()
@@ -162,13 +179,17 @@ def main() -> None:
 
     base = load_rows(baseline)
     cur = load_rows(args.current)
-    drops, _ = compare(base, cur, args.threshold)
+    drops, _ = compare(base, cur, args.threshold,
+                       gate_build=args.gate_build)
 
     mode = "strict" if args.strict else "warn-only"
+    if args.gate_build:
+        mode += "+gate-build"
     print(f"check_regression: comparing against baseline {baseline} "
           f"({len(base)} rows, threshold {args.threshold:.0%}, {mode})")
     print(f"current : {args.current} ({len(cur)} rows)")
-    for line in delta_table(base, cur, args.threshold):
+    for line in delta_table(base, cur, args.threshold,
+                            gate_build=args.gate_build):
         print(line)
     if drops:
         for line in drops:

@@ -239,6 +239,41 @@ def main():
           f"{arep.n_prefixes} sub-trees, reuse_frac={arep.reuse_frac:.2f}, "
           f"epoch {dev_t.epoch}→{dev_g.epoch})")
 
+    # 10. engine tuning knobs: every construction path above ran the
+    #     PROMOTED hot-path defaults — fused single-lane sort keys (the
+    #     (area, key, tie) triple packed into one uint32 lane when the
+    #     bit budget fits) and tail compaction (once most rows have
+    #     converged, each iteration gathers only the still-active rows
+    #     into a narrow (G, f') state, steps there, and scatters back).
+    #     Both are exact transforms with escape hatches for A/B runs and
+    #     bisection: REPRO_SORT=lexsort and REPRO_COMPACT=off pin the
+    #     reference engines (or EraConfig(sort_fuse=..., compaction=...)
+    #     / the --sort / --no-compact driver flags per run); CI keeps the
+    #     lexsort oracle leg green on every PR.  EraConfig(
+    #     node_lcp="words") additionally rebuilds the node-build
+    #     divergence rows from the packed text via the word-compare LCP
+    #     kernel instead of the stored construction state — same nodes.
+    #
+    #     Kernel tile shapes come from repro.roofline.autotune: dispatch
+    #     resolves each (backend, kernel, dtype-bits, n-bucket) through
+    #     an on-disk autotune table when one exists (REPRO_AUTOTUNE_TABLE,
+    #     default .repro_autotune.json — written only by explicit sweeps,
+    #     never at import), else the VMEM/HBM roofline model when
+    #     REPRO_AUTOTUNE=model, else the static defaults.  Tiles change
+    #     DMA granularity, never results:
+    from repro.roofline import autotune
+    table = autotune.AutotuneTable()
+    table.fill_model("cpu", {"range_gather": 64, "suffix_lcp": 256},
+                     bits=alphabet.dense_bits, n=len(s))
+    autotune.set_active_table(table)      # or table.save(path) + env
+    dev_tuned = EraIndexer(alphabet, cfg).build_device(s)
+    autotune.set_active_table(None)
+    for a, b in zip(dev_tuned.find_batch(batch), dev.find_batch(batch)):
+        assert np.array_equal(a, b)
+    print(f"autotuned tiles agree ✓ ({len(table.entries)} table entries, "
+          f"e.g. range_gather -> "
+          f"{table.get('cpu', 'range_gather', alphabet.dense_bits, len(s))})")
+
 
 def ref_positions(idx, pattern):
     return idx.find(np.asarray(pattern)).tolist()

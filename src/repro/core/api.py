@@ -74,6 +74,19 @@ class EraConfig:
     #                                        4-bit protein classes), else bytes
     #                                dense — force Alphabet.dense_bits packing
     #                                bytes — one byte per symbol (reference)
+    sort_fuse: bool | None = None  # fused single-lane sort keys in the elastic
+    #                                step; None = promoted default (on) unless
+    #                                REPRO_SORT=lexsort pins the oracle
+    compaction: bool | None = None  # tail compaction (sort only still-active
+    #                                rows); None = promoted default (on) unless
+    #                                REPRO_COMPACT=off pins the oracle
+    node_lcp: str = "state"        # node-build divergence source:
+    #                                state — stored b_off from the prepare
+    #                                        state (free, the default)
+    #                                words — recomputed from the text via the
+    #                                        word-compare LCP (bit-identical;
+    #                                        decouples the Cartesian-tree pass
+    #                                        from the construction state)
 
     @property
     def mts_bytes(self) -> int:
@@ -235,6 +248,10 @@ class EraIndexer:
             raise ValueError(
                 f"unknown build_impl {config.build_impl!r}; "
                 f"choose one of {sorted((*_BUILDERS, 'none'))}")
+        if config.node_lcp not in ("state", "words"):
+            raise ValueError(
+                f"unknown node_lcp {config.node_lcp!r}; "
+                "choose 'state' or 'words'")
 
     def partition(self, s: np.ndarray, report: BuildReport | None = None):
         """Vertical partitioning + grouping (the master-node phase)."""
@@ -295,7 +312,9 @@ class EraIndexer:
         shared batched (G, F) engine — one elastic loop for the whole set.
         Returns one ``list[SubTree]`` per input group."""
         states = subtree_prepare_batch(s_padded, groups, capacity,
-                                       self.config.elastic_config(), pstats)
+                                       self.config.elastic_config(), pstats,
+                                       sort_fuse=self.config.sort_fuse,
+                                       compact=self.config.compaction)
         host = _HostState(states)
         return [self._slice_subtrees(host.group(g_i), g)
                 for g_i, g in enumerate(groups)]
@@ -356,24 +375,29 @@ class EraIndexer:
     def _prepare_batched(self, s: np.ndarray, report: BuildReport):
         """partition → padded (G, F) batched prepare, timing into ``report``.
 
-        Returns (groups, states); states is None when the string produced
-        no groups (cannot happen for a non-empty terminated string).
+        Returns (groups, states, s_padded); states is None when the string
+        produced no groups (cannot happen for a non-empty terminated
+        string).  ``s_padded`` is the device text the prepare ran on, so
+        downstream stages (the word-key node build) reuse it instead of
+        re-packing.
         """
         groups = self.partition(s, report)
         if not groups:
-            return groups, None
+            return groups, None, None
         capacity = self._capacity(groups)
         s_padded = self._device_text(s)
         t0 = time.perf_counter()
         states = subtree_prepare_batch(s_padded, groups, capacity,
                                        self.config.elastic_config(),
-                                       report.prepare)
+                                       report.prepare,
+                                       sort_fuse=self.config.sort_fuse,
+                                       compact=self.config.compaction)
         report.t_prepare = time.perf_counter() - t0
-        return groups, states
+        return groups, states, s_padded
 
     def _build_batched(self, s: np.ndarray, report: BuildReport) -> SuffixTreeIndex:
         cfg = self.config
-        groups, states = self._prepare_batched(s, report)
+        groups, states, s_padded = self._prepare_batched(s, report)
         subtrees: dict[tuple, SubTree] = {}
         if states is not None:
             t0 = time.perf_counter()
@@ -386,14 +410,16 @@ class EraIndexer:
             t0 = time.perf_counter()
             if cfg.build_impl != "none":
                 with obs.tracer().span("build/nodes",
-                                       subtrees=len(subtrees)):
+                                       subtrees=len(subtrees),
+                                       node_lcp=cfg.node_lcp):
                     self._attach_nodes_batched(states, groups, subtrees,
-                                               len(s))
+                                               len(s), s_text=s_padded)
             report.t_build = time.perf_counter() - t0
 
         return SuffixTreeIndex(s=np.asarray(s), alphabet=self.alphabet, subtrees=subtrees)
 
-    def _attach_nodes_batched(self, states, groups, subtrees, n_total: int) -> None:
+    def _attach_nodes_batched(self, states, groups, subtrees, n_total: int,
+                              s_text=None) -> None:
         """All sub-trees' node sets via size-bucketed vmapped builds.
 
         Per-prefix (ell, b_off) segments are gathered on device into padded
@@ -406,7 +432,14 @@ class EraIndexer:
         row to the global max freq — on skewed prefix mixes the narrow
         buckets hold most rows at a fraction of the padded work, with
         bit-identical node sets per row either way.
+
+        With ``EraConfig.node_lcp="words"`` (and a device text) the
+        divergence rows come from the word-compare LCP on the text
+        (:func:`repro.core.build.boff_rows_from_text`) instead of the
+        stored ``b_off`` — bit-identical node sets, no dependence on the
+        construction state's B entries.
         """
+        use_words = self.config.node_lcp == "words" and s_text is not None
         entries = _sorted_segments(groups)
         f_cap = states.L.shape[1]
         flat_L = states.L.reshape(-1)
@@ -434,7 +467,11 @@ class EraIndexer:
                 idx = jnp.asarray(idx, jnp.int32)
                 mask = jnp.asarray(mask)
                 ell_rows = jnp.where(mask, jnp.take(flat_L, idx), n_total)
-                boff_rows = jnp.where(mask, jnp.take(flat_b, idx), 0)
+                if use_words:
+                    boff_rows = build_mod.boff_rows_from_text(
+                        s_text, ell_rows, n_total)
+                else:
+                    boff_rows = jnp.where(mask, jnp.take(flat_b, idx), 0)
                 nodes = build_mod.build_parallel_batch(ell_rows, boff_rows,
                                                        n_total)
                 parent = np.asarray(nodes.parent)
@@ -465,7 +502,7 @@ class EraIndexer:
 
         from repro.core.query import DeviceIndex  # local: avoid import cycle
 
-        groups, states = self._prepare_batched(s, report)
+        groups, states, _ = self._prepare_batched(s, report)
         if states is None:
             raise ValueError("cannot flatten an empty index")
         prefixes, freqs, ell = _flatten_state(groups, states)
@@ -509,7 +546,9 @@ class EraIndexer:
         states, srep = subtree_prepare_stream(
             s_padded, groups, capacity, self.config.elastic_config(),
             device_budget=device_budget, overlap=overlap,
-            stats=report.prepare, report=stream_report)
+            stats=report.prepare, report=stream_report,
+            sort_fuse=self.config.sort_fuse,
+            compact=self.config.compaction)
         report.t_prepare = time.perf_counter() - t0
         prefixes, freqs, ell = _flatten_state(groups, states)
         dev = DeviceIndex.from_prepare(
@@ -758,7 +797,9 @@ class EraIndexer:
                                    subtrees=len(affected)):
                 states = subtree_prepare_batch(
                     s_padded, re_groups, capacity,
-                    self.config.elastic_config())
+                    self.config.elastic_config(),
+                    sort_fuse=self.config.sort_fuse,
+                    compact=self.config.compaction)
             L_host = np.asarray(states.L)
             for g_i, g in enumerate(re_groups):
                 for (off, freq), p in zip(segments_of(g), g.prefixes):
@@ -883,7 +924,8 @@ class EraIndexer:
 
     def build_sharded(self, s: np.ndarray, n_shards: int | None = None,
                       report: BuildReport | None = None, *,
-                      mesh=None, sort_fuse: bool = True, **device_kwargs):
+                      mesh=None, sort_fuse: bool | None = None,
+                      **device_kwargs):
         """String → :class:`repro.core.fabric.ShardedIndex`: SPMD
         construction over the device mesh, then the flattened leaf
         arrays sharded by top-trie route key.
@@ -911,7 +953,9 @@ class EraIndexer:
         t0 = time.perf_counter()
         states = fabric.sharded_prepare(
             s_padded, groups, capacity, self.config.elastic_config(),
-            mesh=mesh, stats=report.prepare, sort_fuse=sort_fuse)
+            mesh=mesh, stats=report.prepare,
+            sort_fuse=(sort_fuse if sort_fuse is not None
+                       else self.config.sort_fuse))
         report.t_prepare = time.perf_counter() - t0
         prefixes, freqs, ell = _flatten_state(groups, states)
         return fabric.ShardedIndex.from_flat(

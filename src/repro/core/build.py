@@ -392,6 +392,92 @@ def build_parallel_batch(ell_rows: jax.Array, boff_rows: jax.Array,
         ell_rows, boff_rows)
 
 
+# ---------------------------------------------------------------------------
+# Word-key node build: divergence depths recomputed from the TEXT
+# ---------------------------------------------------------------------------
+# The stored ``b_off`` rows are free, but they pin the node build to the
+# construction state layout.  For adjacent leaves of one sub-tree the
+# divergence depth IS the pairwise suffix LCP (areas only ever split in
+# place, so the boundary B entry records exactly where the neighboring
+# suffixes diverge) — which the word-compare currency recomputes straight
+# from the dense text: gathered uint32 word rows + the
+# ``lcp_adjacent_words`` XOR/clz/terminal-limit rules, no byte repack.
+# ``REPRO_WORD_COMPARE=byte`` (or a byte string) pins the byte-key oracle
+# through the same dispatch; results are bit-identical either way.
+
+
+def lcp_from_text(s_text, pos_a, pos_b, *, w0: int = 64, w_cap: int = 256,
+                  max_rounds: int = 10_000) -> np.ndarray:
+    """Pairwise suffix LCP (in symbols) recomputed from the text.
+
+    ``pos_a``/``pos_b``: int position arrays of DISTINCT suffixes (a pair
+    of equal positions never terminates — the caller masks those out).
+    Probes :func:`repro.kernels.ops.suffix_lcp_pairs` windows and doubles
+    the window up to ``w_cap`` while pairs saturate; still-saturated
+    pairs advance by the window and re-probe, so total work per pair is
+    O(lcp).  Pending pairs are padded to a power of two so the jitted
+    probe compiles ~log2 shapes, not one per round.
+    """
+    pos_a = np.asarray(pos_a, np.int64)
+    pos_b = np.asarray(pos_b, np.int64)
+    acc = np.zeros(pos_a.size, np.int64)
+    pending = np.arange(pos_a.size)
+    w = max(4, (w0 + 3) // 4 * 4)
+    rounds = 0
+    while pending.size:
+        if rounds >= max_rounds:
+            raise RuntimeError(
+                f"lcp_from_text failed to resolve {pending.size} pairs "
+                f"after {rounds} rounds (equal positions in the input?)")
+        size = 1 << max(int(pending.size) - 1, 0).bit_length()
+        sel = np.zeros(size, np.int64)  # pad rows probe pair (0, 0)
+        sel[: pending.size] = pending
+        a = jnp.asarray(pos_a[sel] + acc[sel], jnp.int32)
+        b = jnp.asarray(pos_b[sel] + acc[sel], jnp.int32)
+        a = jnp.where(jnp.arange(size) < pending.size, a, 0)
+        b = jnp.where(jnp.arange(size) < pending.size, b, 0)
+        from repro.kernels import ops as kops  # local: keep build importable
+        lcp = np.asarray(kops.suffix_lcp_pairs(s_text, a, b,
+                                               w))[: pending.size]
+        acc[pending] += lcp
+        pending = pending[lcp == w]  # saturated windows continue deeper
+        w = min(w * 2, max(4, (w_cap + 3) // 4 * 4))
+        rounds += 1
+    return acc
+
+
+def boff_rows_from_text(s_text, ell_rows, n_total: int) -> jax.Array:
+    """(P, F_pad) divergence rows for :func:`build_parallel_batch`,
+    recomputed from the text instead of gathered from stored ``b_off``.
+
+    Padded cells carry ``ell = n_total`` (the depth-0 padding
+    convention); any pair touching one keeps ``b_off = 0``, and column 0
+    is the builder's sentinel slot either way.  Bit-identical node sets
+    to the state-backed rows (pinned by tests/test_batched_build.py).
+    """
+    e = np.asarray(ell_rows, np.int64)
+    p, f_pad = e.shape
+    boff = np.zeros((p, f_pad), np.int32)
+    if f_pad >= 2:
+        a = e[:, :-1].reshape(-1)
+        b = e[:, 1:].reshape(-1)
+        real = (a < n_total) & (b < n_total)
+        idx = np.nonzero(real)[0]
+        lcp = np.zeros(a.size, np.int64)
+        if idx.size:
+            lcp[idx] = lcp_from_text(s_text, a[idx], b[idx])
+        boff[:, 1:] = lcp.reshape(p, f_pad - 1).astype(np.int32)
+    return jnp.asarray(boff)
+
+
+def build_parallel_batch_from_text(s_text, ell_rows, n_total: int
+                                   ) -> SubTreeNodes:
+    """The word-key bucketed builder: vmapped Cartesian-tree build whose
+    divergence depths come straight from the text (word currency)."""
+    boff_rows = boff_rows_from_text(s_text, ell_rows, n_total)
+    return build_parallel_batch(jnp.asarray(ell_rows), boff_rows, n_total)
+
+
 def unpad_nodes_row(parent_row: np.ndarray, depth_row: np.ndarray,
                     witness_row: np.ndarray, f: int) -> SubTreeNodes:
     """Extract the compact 2f-slot node set of one sub-tree from a padded

@@ -58,13 +58,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import obs
 from repro.core.prepare import (
-    DONE,
     ElasticConfig,
     PrepareState,
     PrepareStats,
+    compact_step_batch,
+    compaction_width,
     elastic_range,
     init_batch,
-    prepare_step,
     prepare_step_batch,
 )
 from repro.core import packing as packing_mod
@@ -90,61 +90,6 @@ def fabric_mesh(n_shards: int | None = None) -> jax.sharding.Mesh:
 _STEP_CACHE: dict = {}
 
 
-def _compact_step_batch(s_padded, states: PrepareState, *, f_prime: int,
-                        w: int, use_pallas: bool, word_keys: bool,
-                        sort_fuse: bool):
-    """One elastic iteration on only the ACTIVE rows of each group.
-
-    Tail iterations sort a (G, F) state in which most rows are long done;
-    the sort is the whole step cost, so the fabric gathers each group's
-    active rows (ascending, so contiguous area blocks stay contiguous and
-    in order) into a (G, f_prime) buffer, runs the UNMODIFIED
-    :func:`prepare_step` there, and scatters the results back.  Exactness:
-    the step's only position-dependent quantity is ``area`` (the run-start
-    position), which translates through the gather index map both ways;
-    ``b_off`` is a string offset, not a position; and every
-    adjacency-based rule (``same_area``/``run_start``/``right_bound``)
-    sees the same neighbor pairs because done rows only ever SEPARATE
-    blocks, never join them.  ``f_prime`` must be >= every group's active
-    count (the host buckets the global max to a power of two).
-    """
-    f = states.area.shape[1]
-
-    def one_group(st):
-        active = st.area >= 0
-        idx = jnp.nonzero(active, size=f_prime, fill_value=f)[0]
-        valid = idx < f
-        safe = jnp.minimum(idx, f - 1).astype(jnp.int32)
-        take = lambda x, fill: jnp.where(valid, x[safe], fill)
-        # run-start positions -> compacted positions (run starts are
-        # themselves active rows, so searchsorted finds them exactly)
-        carea = jnp.where(
-            valid,
-            jnp.searchsorted(idx, take(st.area, 0).clip(0)).astype(
-                st.area.dtype),
-            DONE)
-        cst = PrepareState(L=take(st.L, -1), start=take(st.start, 0),
-                           area=carea, b_off=take(st.b_off, -1),
-                           b_c1=take(st.b_c1, 0), b_c2=take(st.b_c2, 0))
-        new, _ = prepare_step(s_padded, cst, w=w, use_pallas=use_pallas,
-                              word_keys=word_keys, sort_fuse=sort_fuse)
-        # compacted run starts -> full-layout positions
-        narea = jnp.where(
-            new.area >= 0,
-            idx[jnp.maximum(new.area, 0)].astype(new.area.dtype), DONE)
-        scat = jnp.where(valid, idx, f)  # out-of-bounds pads drop
-        put = lambda full, vals: full.at[scat].set(vals, mode="drop")
-        return PrepareState(L=put(st.L, new.L),
-                            start=put(st.start, new.start),
-                            area=put(st.area, narea),
-                            b_off=put(st.b_off, new.b_off),
-                            b_c1=put(st.b_c1, new.b_c1),
-                            b_c2=put(st.b_c2, new.b_c2))
-
-    new_states = jax.vmap(one_group)(states)
-    return new_states, jnp.sum(new_states.area >= 0, axis=1)
-
-
 def _shard_step(mesh, w: int, use_pallas: bool, word_keys: bool,
                 sort_fuse: bool, use_cond: bool, f_prime: int | None):
     """The jitted SPMD elastic step for one ``(w, f_prime)`` bucket.
@@ -156,7 +101,9 @@ def _shard_step(mesh, w: int, use_pallas: bool, word_keys: bool,
     buffer copies, so the host only requests it once some shard has
     actually converged; while every shard is live the cond would take
     the same branch everywhere and the plain step is identical.  With
-    ``f_prime``, the step runs compacted (:func:`_compact_step_batch`).
+    ``f_prime``, the step runs compacted — the shared
+    :func:`repro.core.prepare.compact_step_batch`, the same path the
+    batched/streaming/append drivers now default through.
     State buffers are donated; the string is replicated.
     """
     key = (mesh, w, use_pallas, word_keys, sort_fuse, use_cond, f_prime)
@@ -167,7 +114,7 @@ def _shard_step(mesh, w: int, use_pallas: bool, word_keys: bool,
     def one_shard(s_padded, states):
         def live(sts):
             if f_prime is not None:
-                new, _ = _compact_step_batch(
+                new, _ = compact_step_batch(
                     s_padded, sts, f_prime=f_prime, w=w,
                     use_pallas=use_pallas, word_keys=word_keys,
                     sort_fuse=sort_fuse)
@@ -217,7 +164,7 @@ def sharded_prepare(
     mesh: jax.sharding.Mesh | None = None,
     stats: PrepareStats | None = None,
     max_iters: int = 10_000,
-    sort_fuse: bool = True,
+    sort_fuse: bool | None = None,
 ) -> PrepareState:
     """:func:`repro.core.prepare.subtree_prepare_batch` over a device
     mesh: groups split into contiguous per-shard blocks, one SPMD step
@@ -233,6 +180,8 @@ def sharded_prepare(
     g_pad = -(-g // n_shards) * n_shards
     use_pallas = kops._use_pallas()
     word_keys = kops._use_word_compare()
+    if sort_fuse is None:
+        sort_fuse = kops._use_sort_fuse()
 
     states = _pad_group_axis(init_batch(groups, capacity), g_pad)
     states = jax.device_put(
@@ -257,10 +206,7 @@ def sharded_prepare(
             # tail compaction: once every group's active count fits in
             # half the state width, sort only the active rows (the
             # pow2 bucket keeps program variants to ~log2(F) per w)
-            maxact = int(n_active.max())
-            f_prime = max(32, 1 << (maxact - 1).bit_length())
-            if f_prime * 2 > capacity:
-                f_prime = None
+            f_prime = compaction_width(int(n_active.max()), capacity)
             with obs.tracer().span("fabric/step", w=w,
                                    n_active=int(n_active.sum()),
                                    shards_active=int(shards_active.sum()),

@@ -416,6 +416,84 @@ def _jit_step_batch(s_padded, states, w, use_pallas=False, word_keys=None,
                               word_keys=word_keys, sort_fuse=sort_fuse)
 
 
+def compact_step_batch(s_padded, states: PrepareState, *, f_prime: int,
+                       w: int, use_pallas: bool, word_keys: bool,
+                       sort_fuse: bool):
+    """One elastic iteration on only the ACTIVE rows of each group.
+
+    Tail iterations sort a (G, F) state in which most rows are long done;
+    the sort is the whole step cost, so the engine gathers each group's
+    active rows (ascending, so contiguous area blocks stay contiguous and
+    in order) into a (G, f_prime) buffer, runs the UNMODIFIED
+    :func:`prepare_step` there, and scatters the results back.  Exactness:
+    the step's only position-dependent quantity is ``area`` (the run-start
+    position), which translates through the gather index map both ways;
+    ``b_off`` is a string offset, not a position; and every
+    adjacency-based rule (``same_area``/``run_start``/``right_bound``)
+    sees the same neighbor pairs because done rows only ever SEPARATE
+    blocks, never join them.  ``f_prime`` must be >= every group's active
+    count (:func:`compaction_width` buckets the global max to a power of
+    two).  Proven in the sharded fabric (PR 8); now the shared batched
+    step every driver — batched, streaming, append, fabric — compacts
+    through.
+    """
+    f = states.area.shape[1]
+
+    def one_group(st):
+        active = st.area >= 0
+        idx = jnp.nonzero(active, size=f_prime, fill_value=f)[0]
+        valid = idx < f
+        safe = jnp.minimum(idx, f - 1).astype(jnp.int32)
+        take = lambda x, fill: jnp.where(valid, x[safe], fill)
+        # run-start positions -> compacted positions (run starts are
+        # themselves active rows, so searchsorted finds them exactly)
+        carea = jnp.where(
+            valid,
+            jnp.searchsorted(idx, take(st.area, 0).clip(0)).astype(
+                st.area.dtype),
+            DONE)
+        cst = PrepareState(L=take(st.L, -1), start=take(st.start, 0),
+                           area=carea, b_off=take(st.b_off, -1),
+                           b_c1=take(st.b_c1, 0), b_c2=take(st.b_c2, 0))
+        new, _ = prepare_step(s_padded, cst, w=w, use_pallas=use_pallas,
+                              word_keys=word_keys, sort_fuse=sort_fuse)
+        # compacted run starts -> full-layout positions
+        narea = jnp.where(
+            new.area >= 0,
+            idx[jnp.maximum(new.area, 0)].astype(new.area.dtype), DONE)
+        scat = jnp.where(valid, idx, f)  # out-of-bounds pads drop
+        put = lambda full, vals: full.at[scat].set(vals, mode="drop")
+        return PrepareState(L=put(st.L, new.L),
+                            start=put(st.start, new.start),
+                            area=put(st.area, narea),
+                            b_off=put(st.b_off, new.b_off),
+                            b_c1=put(st.b_c1, new.b_c1),
+                            b_c2=put(st.b_c2, new.b_c2))
+
+    new_states = jax.vmap(one_group)(states)
+    return new_states, jnp.sum(new_states.area >= 0, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w", "use_pallas", "word_keys",
+                                    "sort_fuse", "f_prime"),
+                   donate_argnums=(1,))
+def _jit_compact_step_batch(s_padded, states, w, use_pallas=False,
+                            word_keys=None, sort_fuse=False, f_prime=32):
+    return compact_step_batch(s_padded, states, f_prime=f_prime, w=w,
+                              use_pallas=use_pallas, word_keys=word_keys,
+                              sort_fuse=sort_fuse)
+
+
+def compaction_width(maxact: int, capacity: int) -> int | None:
+    """The compacted row width for a global max active count — the pow2
+    bucket keeps jit program variants to ~log2(F) per w — or None while
+    compaction cannot beat the full-width step (active rows still fill
+    more than half the state)."""
+    f_prime = max(32, 1 << max(maxact - 1, 0).bit_length())
+    return None if f_prime * 2 > capacity else f_prime
+
+
 def elastic_range(cfg: ElasticConfig, n_active: int) -> int:
     """range = |R| / |L'| (paper §4.4), bucketed to a power of two."""
     if not cfg.elastic:
@@ -510,7 +588,8 @@ def subtree_prepare_batch(
     cfg: ElasticConfig = ElasticConfig(),
     stats: PrepareStats | None = None,
     max_iters: int = 10_000,
-    sort_fuse: bool = False,
+    sort_fuse: bool | None = None,
+    compact: bool | None = None,
 ) -> PrepareState:
     """Run SubTreePrepare to completion for ALL virtual trees at once.
 
@@ -522,12 +601,21 @@ def subtree_prepare_batch(
     shared across the batch, keyed to the busiest group — range choice
     never changes results (Fig. 9b invariant), only I/O.
 
+    ``sort_fuse``/``compact`` default to the promoted engine (fused
+    single-lane sort keys + tail compaction, both proven bit-identical in
+    the fabric); ``REPRO_SORT=lexsort`` / ``REPRO_COMPACT=off`` — or the
+    explicit arguments — pin the oracle paths.
+
     Returns the final (G, F) state; slice per group/prefix with
     :func:`segments_of`.
     """
     states = init_batch(groups, capacity)
     use_pallas = kops._use_pallas()
     word_keys = kops._use_word_compare()
+    if sort_fuse is None:
+        sort_fuse = kops._use_sort_fuse()
+    if compact is None:
+        compact = kops._use_compaction()
     n_active = np.asarray(jnp.sum(states.area >= 0, axis=1))
     group_iters = np.zeros(len(groups), np.int64)
     it = 0
@@ -550,12 +638,20 @@ def subtree_prepare_batch(
                 offs = (np.asarray(states.L) + np.asarray(states.start))[act]
                 stats.offsets_history.append(offs.astype(np.int64))
             group_iters += n_active > 0
+            f_prime = (compaction_width(int(n_active.max()), capacity)
+                       if compact else None)
             with obs.tracer().span("prepare/step", w=w,
                                    n_active=int(n_active.sum()),
-                                   groups_active=int((n_active > 0).sum())):
-                states, n_active_dev = _jit_step_batch(s_padded, states, w,
-                                                       use_pallas, word_keys,
-                                                       sort_fuse)
+                                   groups_active=int((n_active > 0).sum()),
+                                   f_prime=f_prime or capacity):
+                if f_prime is not None:
+                    states, n_active_dev = _jit_compact_step_batch(
+                        s_padded, states, w, use_pallas, word_keys,
+                        sort_fuse, f_prime)
+                else:
+                    states, n_active_dev = _jit_step_batch(
+                        s_padded, states, w, use_pallas, word_keys,
+                        sort_fuse)
             if stats is not None:
                 total_active = int(n_active.sum())
                 stats.iterations += 1
@@ -609,7 +705,8 @@ def subtree_prepare_stream(
     stats: PrepareStats | None = None,
     report: StreamReport | None = None,
     max_iters: int = 10_000,
-    sort_fuse: bool = False,
+    sort_fuse: bool | None = None,
+    compact: bool | None = None,
 ) -> tuple[PrepareState, StreamReport]:
     """Out-of-core SubTreePrepare: pipeline group chunks through a device
     memory budget with double-buffered host→device copies.
@@ -650,6 +747,10 @@ def subtree_prepare_stream(
 
     use_pallas = kops._use_pallas()
     word_keys = kops._use_word_compare()
+    if sort_fuse is None:
+        sort_fuse = kops._use_sort_fuse()
+    if compact is None:
+        compact = kops._use_compaction()
     g_total = len(groups)
     out = PrepareState(*(np.empty((g_total, capacity), np.int32)
                          for _ in range(6)))
@@ -697,13 +798,22 @@ def subtree_prepare_stream(
                             f"[{lo}, {hi})) failed to converge after {it} "
                             f"iterations (w={w})")
                     group_iters[lo:hi] += n_active > 0
+                    f_prime = (compaction_width(int(n_active.max()),
+                                                capacity)
+                               if compact else None)
                     with obs.tracer().span(
                             "prepare/step", w=w,
                             n_active=int(n_active.sum()),
-                            groups_active=int((n_active > 0).sum())):
-                        states, n_active_dev = _jit_step_batch(
-                            s_padded, states, w, use_pallas, word_keys,
-                            sort_fuse)
+                            groups_active=int((n_active > 0).sum()),
+                            f_prime=f_prime or capacity):
+                        if f_prime is not None:
+                            states, n_active_dev = _jit_compact_step_batch(
+                                s_padded, states, w, use_pallas, word_keys,
+                                sort_fuse, f_prime)
+                        else:
+                            states, n_active_dev = _jit_step_batch(
+                                s_padded, states, w, use_pallas, word_keys,
+                                sort_fuse)
                     if overlap and standby is None and host_next is not None:
                         # the step above is dispatched asynchronously —
                         # issue the standby copy now so it transfers

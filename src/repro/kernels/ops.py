@@ -49,6 +49,8 @@ from repro.kernels.probe_gather import (
 )
 from repro.kernels.range_gather import range_gather_pack as _gather_pallas
 from repro.kernels.suffix_lcp import suffix_lcp_pairs as _suffix_lcp_pallas
+from repro.kernels.tiles import pick_tile as _pick_tile
+from repro.roofline.analysis import HBM_BW as _HBM_BW
 
 
 # ---------------------------------------------------------------------------
@@ -64,11 +66,26 @@ _SHAPES_SEEN: set[tuple] = set()
 _SHAPES_LOCK = threading.Lock()
 
 
-def _record(kernel: str, use_pallas: bool, currency: str, *arrays) -> None:
+def _record(kernel: str, use_pallas: bool, currency: str, *arrays,
+            tile: int = 0, w: int = 0) -> None:
+    impl = "pallas" if use_pallas else "ref"
+    if obs.trace_enabled():
+        # Roofline prediction on the dispatch marker: every row DMAs a
+        # two-tile halo window, and the compare work is ~w symbol lanes
+        # per row.  Perfetto viewers divide the enclosing span's wall
+        # time by these to read achieved-vs-predicted throughput.
+        rows = int(arrays[0].shape[0]) if arrays else 0
+        eff_tile = tile or 2048
+        pred_bytes = rows * 2 * eff_tile * 4
+        obs.tracer().instant(
+            f"kernel/{kernel}/dispatch", kernel=kernel, impl=impl,
+            currency=currency, rows=rows, tile=eff_tile,
+            roofline_pred_bytes=pred_bytes,
+            roofline_pred_flops=rows * max(w, 1),
+            roofline_hbm_us=pred_bytes / _HBM_BW * 1e6)
     if not obs.metrics_enabled():
         return
     m = obs.metrics()
-    impl = "pallas" if use_pallas else "ref"
     m.counter("kernel_dispatch_total",
               "kernel impl dispatches (trace-time under jit: counts "
               "compilations per padded shape)",
@@ -112,20 +129,63 @@ def _use_word_compare() -> bool:
         f"unknown REPRO_WORD_COMPARE={env!r}; choose 'word' or 'byte'")
 
 
+def _use_sort_fuse() -> bool:
+    """Fused single-lane sort keys are the default construction currency
+    (PR-8 promoted engine); ``REPRO_SORT=lexsort`` pins the three-lane
+    lexsort oracle path.  Resolved OUTSIDE jitted traces (a static arg),
+    like ``_use_pallas``/``_use_word_compare``."""
+    env = os.environ.get("REPRO_SORT", "")
+    if env == "lexsort":
+        return False
+    if env in ("", "fused"):
+        return True
+    raise ValueError(
+        f"unknown REPRO_SORT={env!r}; choose 'fused' or 'lexsort'")
+
+
+def _use_compaction() -> bool:
+    """Tail compaction (sort only still-active rows) is the default for
+    the batched/streaming/append host loops; ``REPRO_COMPACT=off`` pins
+    the full-width oracle path.  Resolved OUTSIDE jitted traces."""
+    env = os.environ.get("REPRO_COMPACT", "")
+    if env == "off":
+        return False
+    if env in ("", "tail"):
+        return True
+    raise ValueError(
+        f"unknown REPRO_COMPACT={env!r}; choose 'tail' or 'off'")
+
+
+def _tile(kernel: str, s_text, w: int = 0) -> int:
+    """Autotuned tile for one dispatch — resolved at trace time from
+    STATIC shapes only (``PackedText.words``/byte-array length), so the
+    choice is a jit-cache key, never a traced value."""
+    if isinstance(s_text, PackedText):
+        n = s_text.words.shape[0] * (32 // s_text.bits)
+        bits = s_text.bits
+    else:
+        n = int(s_text.shape[0])
+        bits = 32
+    return _pick_tile(kernel, n=n, dtype_bits=bits, w_cap=w)
+
+
 def range_gather_impl(use_pallas: bool):
     """Gather-and-pack implementation for a STATIC ``use_pallas`` —
     returns ``fn(s_text, offs, w) -> (F, w//4) int32`` byte sort keys,
     dispatching on the string representation inside the trace."""
     def fn(s_text, offs, w: int):
+        tile = _tile("range_gather", s_text, w)
         if isinstance(s_text, PackedText):
-            _record("range_gather", use_pallas, "packed", offs)
+            _record("range_gather", use_pallas, "packed", offs,
+                    tile=tile, w=w)
             if use_pallas:
-                return _packed_gather_pallas(s_text, offs, w,
+                return _packed_gather_pallas(s_text, offs, w, tile=tile,
                                              interpret=not _on_tpu())
             return _ref.range_gather_packed_ref(s_text, offs, w)
-        _record("range_gather", use_pallas, "byte", offs)
+        _record("range_gather", use_pallas, "byte", offs, tile=tile, w=w)
         if use_pallas:
-            return _gather_pallas(s_text, offs, w, interpret=not _on_tpu())
+            return _gather_pallas(s_text, offs, w, tile=tile,
+                                  interpret=not _on_tpu())
         return _ref.range_gather_pack_ref(s_text, offs, w)
     return fn
 
@@ -136,7 +196,9 @@ def range_gather_pack(s_text, offs, w: int):
 
 def kmer_histogram(s_padded, n: int, k: int, base: int):
     if _use_pallas():
-        return _kmer_pallas(s_padded, n, k, base, interpret=not _on_tpu())
+        tile = _tile("kmer_histogram", s_padded, k)
+        return _kmer_pallas(s_padded, n, k, base, tile=tile,
+                            interpret=not _on_tpu())
     return _ref.kmer_histogram_ref(s_padded, n, k, base)
 
 
@@ -145,9 +207,11 @@ def range_gather_words_impl(use_pallas: bool):
     (F, ceil(w/spw)) uint32`` substituted dense word rows (PackedText
     only — the word currency has no byte-string form)."""
     def fn(pt: PackedText, offs, w: int):
-        _record("range_gather", use_pallas, "word", offs)
+        tile = _tile("range_gather_words", pt, w)
+        _record("range_gather", use_pallas, "word", offs, tile=tile, w=w)
         if use_pallas:
-            return _words_gather_pallas(pt, offs, w, interpret=not _on_tpu())
+            return _words_gather_pallas(pt, offs, w, tile=tile,
+                                        interpret=not _on_tpu())
         return _ref.range_gather_words_ref(pt, offs, w)
     return fn
 
@@ -157,12 +221,14 @@ def range_gather_words(pt: PackedText, offs, w: int):
 
 
 def suffix_lcp_pairs(s_text, pos_a, pos_b, w: int):
+    tile = _tile("suffix_lcp", s_text, w)
     if isinstance(s_text, PackedText):
         if _use_word_compare():
             # word path: first differing dense word + clz, no byte repack
-            _record("suffix_lcp", _use_pallas(), "word", pos_a)
+            _record("suffix_lcp", _use_pallas(), "word", pos_a,
+                    tile=tile, w=w)
             if _use_pallas():
-                return _words_lcp_pallas(s_text, pos_a, pos_b, w,
+                return _words_lcp_pallas(s_text, pos_a, pos_b, w, tile=tile,
                                          interpret=not _on_tpu())
             return _ref.suffix_lcp_words_ref(s_text, pos_a, pos_b, w)
         # byte-key oracle path: two byte-key gathers feed the shared
@@ -171,9 +237,9 @@ def suffix_lcp_pairs(s_text, pos_a, pos_b, w: int):
         a = gather(s_text, pos_a, w)
         b = gather(s_text, pos_b, w)
         return lcp_pairs(a, b, w)[0]
-    _record("suffix_lcp", _use_pallas(), "byte", pos_a)
+    _record("suffix_lcp", _use_pallas(), "byte", pos_a, tile=tile, w=w)
     if _use_pallas():
-        return _suffix_lcp_pallas(s_text, pos_a, pos_b, w,
+        return _suffix_lcp_pallas(s_text, pos_a, pos_b, w, tile=tile,
                                   interpret=not _on_tpu())
     return _ref.suffix_lcp_pairs_ref(s_text, pos_a, pos_b, w)
 
@@ -190,18 +256,22 @@ def pattern_probe_impl(use_pallas: bool):
     trace so flipping REPRO_KERNELS between calls cannot hit a stale
     trace; the byte-vs-packed branch dispatches on the s_text type."""
     def fn(s_text, pos, pat_words, mask_words):
+        w = pat_words.shape[1] * 4
+        tile = _tile("pattern_probe", s_text, w)
         if isinstance(s_text, PackedText):
-            _record("pattern_probe", use_pallas, "packed", pos, pat_words)
+            _record("pattern_probe", use_pallas, "packed", pos, pat_words,
+                    tile=tile, w=w)
             if use_pallas:
                 return _packed_probe_pallas(s_text, pos, pat_words,
-                                            mask_words,
+                                            mask_words, tile=tile,
                                             interpret=not _on_tpu())
             return _ref.pattern_probe_packed_ref(s_text, pos, pat_words,
                                                  mask_words)
-        _record("pattern_probe", use_pallas, "byte", pos, pat_words)
+        _record("pattern_probe", use_pallas, "byte", pos, pat_words,
+                tile=tile, w=w)
         if use_pallas:
             return _probe_pallas(s_text, pos, pat_words, mask_words,
-                                 interpret=not _on_tpu())
+                                 tile=tile, interpret=not _on_tpu())
         return _ref.pattern_probe_ref(s_text, pos, pat_words, mask_words)
     return fn
 
@@ -217,10 +287,13 @@ def pattern_probe_words_impl(use_pallas: bool):
     terminal-padded tail described by ``lim_p`` — callers fall back to
     :func:`pattern_probe_impl` for other terminal-bearing batches)."""
     def fn(pt: PackedText, pos, pat_dense, mask_dense, lengths, lim_p=None):
-        _record("pattern_probe", use_pallas, "word", pos, pat_dense)
+        w = pat_dense.shape[1] * (32 // pt.bits)
+        tile = _tile("pattern_probe_words", pt, w)
+        _record("pattern_probe", use_pallas, "word", pos, pat_dense,
+                tile=tile, w=w)
         if use_pallas:
             return _words_probe_pallas(pt, pos, pat_dense, mask_dense,
-                                       lengths, lim_p,
+                                       lengths, lim_p, tile=tile,
                                        interpret=not _on_tpu())
         return _ref.pattern_probe_words_ref(pt, pos, pat_dense, mask_dense,
                                             lengths, lim_p)
@@ -240,11 +313,14 @@ def probe_gather_words_impl(use_pallas: bool):
     probe verdict AND the gathered dense word window (PackedText only)."""
     def fn(pt: PackedText, pos, pat_dense, mask_dense, lengths, fetch: int,
            lim_p=None):
-        _record("probe_gather", use_pallas, "word", pos, pat_dense)
+        w = max(pat_dense.shape[1] * (32 // pt.bits), fetch)
+        tile = _tile("probe_gather_words", pt, w)
+        _record("probe_gather", use_pallas, "word", pos, pat_dense,
+                tile=tile, w=w)
         if use_pallas:
             return _fused_words_pallas(pt, pos, pat_dense, mask_dense,
                                        lengths, lim_p, fetch=fetch,
-                                       interpret=not _on_tpu())
+                                       tile=tile, interpret=not _on_tpu())
         return _ref.probe_gather_words_ref(pt, pos, pat_dense, mask_dense,
                                            lengths, lim_p, fetch=fetch)
     return fn
@@ -268,10 +344,14 @@ def probe_gather_impl(use_pallas: bool):
     results are interchangeable across representations)."""
     def fn(s_text, pos, pat_words, mask_words, fetch: int):
         if isinstance(s_text, PackedText):
-            _record("probe_gather", use_pallas, "packed", pos, pat_words)
+            w = max(pat_words.shape[1] * 4, fetch)
+            tile = _tile("probe_gather", s_text, w)
+            _record("probe_gather", use_pallas, "packed", pos, pat_words,
+                    tile=tile, w=w)
             if use_pallas:
                 return _fused_packed_pallas(s_text, pos, pat_words,
                                             mask_words, fetch=fetch,
+                                            tile=tile,
                                             interpret=not _on_tpu())
             return _ref.probe_gather_packed_ref(s_text, pos, pat_words,
                                                 mask_words, fetch=fetch)

@@ -22,6 +22,19 @@ def default_interpret(interpret: bool | None) -> bool:
     return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
+def pick_tile(kernel: str, *, n: int, dtype_bits: int = 32,
+              w_cap: int = 0) -> int:
+    """The tile shape for one kernel dispatch, resolved through the
+    roofline autotuner (on-disk table entry → VMEM/HBM model pick →
+    the kernel's static default).  Always ≥ ``w_cap`` so the kernels'
+    ``w <= tile`` assertion holds; rounding ``n`` into pow2 buckets
+    happens inside the table so jit program counts stay bounded."""
+    from repro.roofline import autotune
+
+    return autotune.tile_for(kernel, backend=jax.default_backend(),
+                             bits=dtype_bits, n=n, w_cap=w_cap)
+
+
 def stage_tiles(s_padded: jax.Array, tile: int) -> tuple[jax.Array, int]:
     """Reshape S into ``(n_tiles, tile)`` int32 rows with one halo row.
 

@@ -179,10 +179,34 @@ def main():
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the standby-buffer copy/compute overlap "
                          "(with --stream; the synchronous baseline)")
+    ap.add_argument("--sort", default=None, choices=["fused", "lexsort"],
+                    help="elastic-step sort engine: fused single-lane keys "
+                         "(default) or the three-lane lexsort oracle")
+    ap.add_argument("--no-compact", action="store_true",
+                    help="disable tail compaction (sort every row even "
+                         "after its group has converged)")
+    ap.add_argument("--autotune", default=None,
+                    choices=["off", "table", "model"],
+                    help="kernel tile selection: off = static defaults, "
+                         "table = on-disk autotune table (fall back to the "
+                         "roofline model), model = roofline model only")
+    ap.add_argument("--autotune-table", default=None,
+                    help="autotune table path (REPRO_AUTOTUNE_TABLE; "
+                         "default .repro_autotune.json)")
     args = ap.parse_args()
 
+    import os
+    if args.autotune is not None:
+        os.environ["REPRO_AUTOTUNE"] = args.autotune
+    if args.autotune_table is not None:
+        os.environ["REPRO_AUTOTUNE_TABLE"] = args.autotune_table
+
     s, alpha = dataset(args.dataset, args.n)
-    cfg = EraConfig(memory_bytes=int(args.memory_mb * (1 << 20)), build_impl="none")
+    cfg = EraConfig(memory_bytes=int(args.memory_mb * (1 << 20)),
+                    build_impl="none",
+                    sort_fuse=(None if args.sort is None
+                               else args.sort == "fused"),
+                    compaction=False if args.no_compact else None)
     if args.stream:
         budget = (None if args.device_budget_mb is None
                   else int(args.device_budget_mb * (1 << 20)))

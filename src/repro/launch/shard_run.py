@@ -30,6 +30,16 @@ def _parse_args(argv=None):
                     help="archive base path for --mode save "
                          "(writes {path}_shard{k}.npz)")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--sort", default=None, choices=["fused", "lexsort"],
+                    help="elastic-step sort engine (REPRO_SORT): fused "
+                         "single-lane keys (default) or the lexsort oracle")
+    ap.add_argument("--no-compact", action="store_true",
+                    help="disable tail compaction (REPRO_COMPACT=off)")
+    ap.add_argument("--autotune", default=None,
+                    choices=["off", "table", "model"],
+                    help="kernel tile selection mode (REPRO_AUTOTUNE)")
+    ap.add_argument("--autotune-table", default=None,
+                    help="autotune table path (REPRO_AUTOTUNE_TABLE)")
     ap.add_argument("--json", action="store_true",
                     help="emit one machine-readable JSON object on stdout "
                          "(benchmarks/bench_fabric.py subprocess mode)")
@@ -105,6 +115,16 @@ def run(args) -> dict:
 
 def main(argv=None):
     args = _parse_args(argv)
+    # engine knobs travel via the env-dispatch idiom so every layer
+    # (batched step, fabric shard step, kernel tile pick) sees them
+    if args.sort is not None:
+        os.environ["REPRO_SORT"] = args.sort
+    if args.no_compact:
+        os.environ["REPRO_COMPACT"] = "off"
+    if args.autotune is not None:
+        os.environ["REPRO_AUTOTUNE"] = args.autotune
+    if args.autotune_table is not None:
+        os.environ["REPRO_AUTOTUNE_TABLE"] = args.autotune_table
     # the whole point of this driver: the simulated device count must be
     # in the environment BEFORE the first jax import (same idiom as
     # launch/dryrun.py) — so argparse runs first and jax imports inside

@@ -1,0 +1,301 @@
+"""Promoted construction engine: the PR-8 fabric optimizations (fused
+single-lane sort keys, tail compaction) as the DEFAULT batched currency,
+the word-key node build, and roofline tile autotuning.
+
+All of it must be a pure performance transform: the fused+compacted
+batched/streaming/append paths stay bit-identical to the three-lane
+lexsort oracle (``REPRO_SORT=lexsort`` / ``REPRO_COMPACT=off``) across
+alphabets, the text-derived node divergence rows reproduce the stored
+``b_off`` node sets exactly, and an autotuned tile never changes any
+result — only the per-grid-step DMA shape.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.api import EraConfig, EraIndexer
+from repro.core.build import nodes_to_host
+from repro.core.prepare import (compaction_width, subtree_prepare,
+                                subtree_prepare_batch,
+                                subtree_prepare_stream)
+from repro.data.strings import dataset
+from repro.kernels import ops as kops
+from repro.roofline import autotune
+
+ALL_FIELDS = ("L", "start", "area", "b_off", "b_c1", "b_c2")
+INDEX_FIELDS = ("ell", "sub_off", "sub_freq", "sub_prefix", "sub_plen",
+                "win_lo", "win_hi")
+
+
+def _workload(name, n, mem, **cfg_kw):
+    s, alpha = dataset(name, n, seed=0)
+    cfg = EraConfig(memory_bytes=mem, build_impl="none", **cfg_kw)
+    ix = EraIndexer(alpha, cfg)
+    groups = ix.partition(s)
+    return s, alpha, ix, groups, ix._capacity(groups), ix._device_text(s)
+
+
+def _assert_fields(ref, got, fields=ALL_FIELDS):
+    for field in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, field)), np.asarray(getattr(got, field)),
+            err_msg=field)
+
+
+class TestPromotedDefaults:
+    def test_fused_and_compaction_default_on(self, monkeypatch):
+        monkeypatch.delenv("REPRO_SORT", raising=False)
+        monkeypatch.delenv("REPRO_COMPACT", raising=False)
+        assert kops._use_sort_fuse() is True
+        assert kops._use_compaction() is True
+
+    def test_escape_hatches(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SORT", "lexsort")
+        monkeypatch.setenv("REPRO_COMPACT", "off")
+        assert kops._use_sort_fuse() is False
+        assert kops._use_compaction() is False
+
+    def test_unknown_values_raise(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SORT", "bogus")
+        with pytest.raises(ValueError, match="REPRO_SORT"):
+            kops._use_sort_fuse()
+        monkeypatch.setenv("REPRO_COMPACT", "bogus")
+        with pytest.raises(ValueError, match="REPRO_COMPACT"):
+            kops._use_compaction()
+
+
+class TestCompactionWidth:
+    def test_pow2_bucket_with_floor(self):
+        assert compaction_width(1, 1024) == 32
+        assert compaction_width(33, 1024) == 64
+        assert compaction_width(64, 1024) == 64
+        assert compaction_width(65, 1024) == 128
+
+    def test_none_until_it_pays(self):
+        # active rows still fill more than half the state: full-width step
+        assert compaction_width(600, 1024) is None
+        assert compaction_width(512, 1024) == 512
+        # degenerate capacity below the 32-row floor: never compacts
+        assert compaction_width(1, 16) is None
+
+
+class TestBitIdentity:
+    """Fused sort keys + tail compaction vs the lexsort full-width oracle
+    — every PrepareState field, not just the index-visible ones: the
+    engines run the identical schedule, so even ``start`` must agree."""
+
+    @pytest.mark.parametrize("name,n,mem", [
+        ("dna", 6_000, 1 << 12),
+        ("protein", 4_000, 1 << 13),
+        ("byte", 3_000, 1 << 13),   # codes >= 128: unsigned word order
+    ])
+    def test_batch_matches_oracle(self, name, n, mem):
+        s, alpha, ix, groups, cap, s_padded = _workload(name, n, mem)
+        ecfg = ix.config.elastic_config()
+        fused = subtree_prepare_batch(s_padded, groups, cap, ecfg,
+                                      sort_fuse=True, compact=True)
+        oracle = subtree_prepare_batch(s_padded, groups, cap, ecfg,
+                                       sort_fuse=False, compact=False)
+        _assert_fields(oracle, fused)
+
+    def test_batch_matches_serial_per_group(self):
+        s, alpha, ix, groups, cap, s_padded = _workload("dna", 5_000, 1 << 12)
+        ecfg = ix.config.elastic_config()
+        batched = subtree_prepare_batch(s_padded, groups, cap, ecfg,
+                                        sort_fuse=True, compact=True)
+        for g_i, g in enumerate(groups):
+            serial = subtree_prepare(s_padded, g, cap, ecfg)
+            f = g.total_freq
+            for field in ALL_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(batched, field))[g_i, :f],
+                    np.asarray(getattr(serial, field))[:f],
+                    err_msg=f"group {g_i} field {field}")
+
+    def test_stream_matches_oracle(self):
+        s, alpha, ix, groups, cap, s_padded = _workload("dna", 8_000, 1 << 12)
+        ecfg = ix.config.elastic_config()
+        oracle = subtree_prepare_batch(s_padded, groups, cap, ecfg,
+                                       sort_fuse=False, compact=False)
+        streamed, srep = subtree_prepare_stream(
+            s_padded, groups, cap, ecfg, device_budget=1 << 16,
+            sort_fuse=True, compact=True)
+        assert srep.n_chunks > 1
+        _assert_fields(oracle, streamed)
+
+    def test_degenerate_one_group_budget(self):
+        """A memory budget so generous the partition yields one virtual
+        tree: G == 1, so compaction only engages on the convergence tail
+        (and not at all while active rows fill over half the state)."""
+        s, alpha, ix, groups, cap, s_padded = _workload(
+            "dna", 4_000, 1 << 22)
+        assert len(groups) == 1
+        ecfg = ix.config.elastic_config()
+        fused = subtree_prepare_batch(s_padded, groups, cap, ecfg,
+                                      sort_fuse=True, compact=True)
+        oracle = subtree_prepare_batch(s_padded, groups, cap, ecfg,
+                                       sort_fuse=False, compact=False)
+        _assert_fields(oracle, fused)
+
+
+class TestAppendPath:
+    def test_append_matches_rebuild_and_bumps_epoch(self, monkeypatch):
+        s, alpha = dataset("dna", 5_000, seed=0)
+        cfg = EraConfig(memory_bytes=1 << 12, build_impl="none")
+        ix = EraIndexer(alpha, cfg)
+        dev = ix.build_device(s)
+
+        rng = np.random.default_rng(3)
+        extra = rng.integers(0, alpha.base - 1, size=800, dtype=np.uint8)
+        s_new = np.concatenate([s[:-1], extra,
+                                np.asarray([s[-1]], s.dtype)])
+
+        dev2, _ = ix.append_device(dev, s_new)
+        assert dev2.epoch == dev.epoch + 1
+
+        # mid-append epoch bump: a second append keeps counting
+        extra2 = rng.integers(0, alpha.base - 1, size=400, dtype=np.uint8)
+        s_new2 = np.concatenate([s_new[:-1], extra2,
+                                 np.asarray([s_new[-1]], s_new.dtype)])
+        dev3, _ = ix.append_device(dev2, s_new2)
+        assert dev3.epoch == dev.epoch + 2
+
+        # the appended index (fused+compacted re-run path) must be
+        # bit-identical to a from-scratch rebuild under the lexsort oracle
+        monkeypatch.setenv("REPRO_SORT", "lexsort")
+        monkeypatch.setenv("REPRO_COMPACT", "off")
+        rebuilt = EraIndexer(alpha, cfg).build_device(s_new2)
+        for field in INDEX_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(dev3, field)),
+                np.asarray(getattr(rebuilt, field)), err_msg=field)
+
+
+class TestWordNodeBuild:
+    @pytest.mark.parametrize("name,n,mem", [
+        ("dna", 2_500, 1 << 11),
+        ("byte", 1_500, 1 << 12),
+    ])
+    def test_words_matches_state_nodes(self, name, n, mem):
+        s, alpha = dataset(name, n, seed=0)
+        kw = dict(memory_bytes=mem, r_bytes=128, build_impl="parallel",
+                  construction="batched")
+        ref = EraIndexer(alpha, EraConfig(node_lcp="state", **kw)).build(s)
+        got = EraIndexer(alpha, EraConfig(node_lcp="words", **kw)).build(s)
+        assert set(ref.subtrees) == set(got.subtrees)
+        checked = 0
+        for p in ref.subtrees:
+            a, b = ref.subtrees[p].nodes, got.subtrees[p].nodes
+            if a is None:
+                assert b is None
+                continue
+            a, b = nodes_to_host(a), nodes_to_host(b)
+            np.testing.assert_array_equal(a.parent, b.parent, err_msg=str(p))
+            np.testing.assert_array_equal(a.depth, b.depth, err_msg=str(p))
+            np.testing.assert_array_equal(a.witness, b.witness,
+                                          err_msg=str(p))
+            checked += 1
+        assert checked > 0
+
+    def test_rejects_unknown_node_lcp(self):
+        with pytest.raises(ValueError, match="node_lcp"):
+            EraIndexer(dataset("dna", 100)[1],
+                       EraConfig(node_lcp="bogus"))
+
+
+class TestAutotune:
+    @pytest.fixture(autouse=True)
+    def _clean_table(self, monkeypatch):
+        monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+        monkeypatch.delenv("REPRO_AUTOTUNE_TABLE", raising=False)
+        autotune.set_active_table(None)
+        yield
+        autotune.set_active_table(None)
+
+    def test_model_pick_constraints(self):
+        # smallest candidate passing the DMA floor wins (all candidates
+        # tie at the dispatch-overhead plateau of the time model)
+        assert autotune.model_pick("range_gather") == 512
+        # the w <= tile kernel contract caps from below
+        assert autotune.model_pick("range_gather", w_cap=4096) == 4096
+        # nothing feasible: fall back to static default, still >= w_cap
+        huge = autotune.model_pick("range_gather", w_cap=100_000)
+        assert huge >= 100_000
+
+    def test_n_bucket_pow2(self):
+        assert autotune.n_bucket(1) == 2
+        assert autotune.n_bucket(60_000) == 1 << 16
+        assert autotune.n_bucket(1 << 16) == 1 << 16
+
+    def test_table_roundtrip(self, tmp_path):
+        t = autotune.AutotuneTable()
+        t.put("cpu", "range_gather", 2, 60_000, 1024, source="measured")
+        path = t.save(str(tmp_path / "tbl.json"))
+        loaded = autotune.AutotuneTable.load(path)
+        # any n in the same pow2 bucket resolves to the entry
+        assert loaded.get("cpu", "range_gather", 2, 40_000) == 1024
+        assert loaded.get("cpu", "range_gather", 2, 70_000) is None
+        assert loaded.get("cpu", "suffix_lcp", 2, 60_000) is None
+
+    def test_tile_for_resolution_order(self, monkeypatch):
+        # no table, no env: the pre-autotune static defaults, exactly
+        assert autotune.tile_for("range_gather", backend="cpu", bits=32,
+                                 n=10_000) == autotune.DEFAULT_TILE
+        assert autotune.tile_for("kmer_histogram", backend="cpu", bits=32,
+                                 n=10_000) == 512
+        # w_cap floor applies even on the default path
+        assert autotune.tile_for("range_gather", backend="cpu", bits=32,
+                                 n=10_000, w_cap=3000) == 3000
+        # model mode: the roofline pick
+        monkeypatch.setenv("REPRO_AUTOTUNE", "model")
+        assert autotune.tile_for("range_gather", backend="cpu", bits=32,
+                                 n=10_000) == autotune.model_pick(
+                                     "range_gather")
+        # an installed table entry wins over the model
+        t = autotune.AutotuneTable()
+        t.put("cpu", "range_gather", 32, 10_000, 4096)
+        autotune.set_active_table(t)
+        assert autotune.tile_for("range_gather", backend="cpu", bits=32,
+                                 n=10_000) == 4096
+        # table active but key missing: model pick, not static default
+        assert autotune.tile_for("suffix_lcp", backend="cpu", bits=32,
+                                 n=10_000) == autotune.model_pick(
+                                     "suffix_lcp")
+
+    def test_tile_for_unknown_mode_raises(self, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE", "bogus")
+        with pytest.raises(ValueError, match="REPRO_AUTOTUNE"):
+            autotune.tile_for("range_gather", backend="cpu", bits=32, n=100)
+
+    def test_fill_model_covers_kernels(self):
+        t = autotune.AutotuneTable()
+        t.fill_model("cpu", {"range_gather": 64, "suffix_lcp": 256},
+                     bits=2, n=60_000)
+        assert t.get("cpu", "range_gather", 2, 60_000) == 512
+        assert t.get("cpu", "suffix_lcp", 2, 60_000) == 512
+
+    def test_measured_sweep_returns_feasible_argmin(self):
+        calls = []
+        best, timings = autotune.measured_sweep(
+            lambda tile: calls.append(tile), candidates=(512, 1024),
+            repeats=1)
+        assert best in (512, 1024)
+        assert set(timings) == {512, 1024}
+
+    def test_autotuned_build_bit_identical(self):
+        """End to end: an installed model-filled table changes only the
+        kernel grid shapes — the flattened index is bit-identical."""
+        s, alpha = dataset("dna", 4_000, seed=0)
+        cfg = EraConfig(memory_bytes=1 << 12, build_impl="none")
+        base = EraIndexer(alpha, cfg).build_device(s)
+        t = autotune.AutotuneTable()
+        t.fill_model("cpu", {"range_gather": 64, "range_gather_words": 64,
+                             "suffix_lcp": 256}, bits=2, n=len(s))
+        autotune.set_active_table(t)
+        tuned = EraIndexer(alpha, cfg).build_device(s)
+        for field in INDEX_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(base, field)),
+                np.asarray(getattr(tuned, field)), err_msg=field)
